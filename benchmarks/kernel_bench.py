@@ -1,0 +1,81 @@
+"""Kernel microbenchmarks: wall time of the XLA reference paths on CPU
+(the Pallas kernels are TPU-target and validated in interpret mode — CPU
+interpret timings are not meaningful) + derived figures (bytes, flops,
+arithmetic intensity) used in the roofline discussion.
+
+Prints ``name,us_per_call,derived`` CSV as required.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pagerank_system, power_law_graph
+from repro.kernels.attention import attention_ref
+from repro.kernels.diffusion import bsr_spmm, prepare_bsr
+from repro.kernels.fm import fm_interaction_ref
+from repro.kernels.segment import segment_sum_ref
+
+
+def timeit(fn, *args, iters=20):
+    fn(*args).block_until_ready()  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def main():
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # diffusion: frontier push on a 20k-node power-law graph
+    g = power_law_graph(20000, seed=1)
+    p, b = pagerank_system(g)
+    m = prepare_bsr(p.indptr, p.indices, p.weights, p.n, bs=128)
+    x = jnp.asarray(rng.standard_normal(m.n_row_blocks * 128)
+                    .astype(np.float32))
+    us = timeit(lambda x: bsr_spmm(m, x, use_pallas=False), x)
+    ai = 2 * g.n_edges / (m.n_blocks * 128 * 128 * 4)
+    rows.append(("diffusion_bsr_ref_N20k", us,
+                 f"edges={g.n_edges};blocks={m.n_blocks};ai={ai:.3f}"))
+
+    # segment-sum: 1M edges x 64 feat
+    e, d, s = 1_000_000, 64, 100_000
+    seg = jnp.asarray(np.sort(rng.integers(0, s, e)).astype(np.int32))
+    data = jnp.asarray(rng.standard_normal((e, d)).astype(np.float32))
+    us = timeit(lambda a, b: segment_sum_ref(a, b, s), data, seg)
+    rows.append(("segment_sum_ref_1Mx64", us,
+                 f"bytes={e*d*4*2};gbps={e*d*4*2/us/1e3:.2f}"))
+
+    # fm: criteo-shaped batch
+    v = jnp.asarray(rng.standard_normal((65536, 39, 10)).astype(np.float32))
+    us = timeit(fm_interaction_ref, v)
+    rows.append(("fm_interaction_ref_B65536", us,
+                 f"bytes={v.size*4};gbps={v.size*4/us/1e3:.2f}"))
+
+    # attention: 1 head-group block
+    q = jnp.asarray(rng.standard_normal((1, 8, 1024, 128))
+                    .astype(np.float32) * 0.1)
+    k = jnp.asarray(rng.standard_normal((1, 2, 1024, 128))
+                    .astype(np.float32) * 0.1)
+    vv = jnp.asarray(rng.standard_normal((1, 2, 1024, 128))
+                     .astype(np.float32))
+    us = timeit(lambda q, k, v: attention_ref(q, k, v, causal=True),
+                q, k, vv)
+    fl = 4 * 8 * 1024 * 1024 * 128
+    rows.append(("attention_ref_1x8x1024x128", us,
+                 f"flops={fl};gflops={fl/us/1e3:.1f}"))
+
+    print("name,us_per_call,derived")
+    for n, us, d in rows:
+        print(f"{n},{us:.1f},{d}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""Benchmark suite entry: ``python -m benchmarks.run [--quick|--full]``.
+
+One section per paper table/figure + kernel microbench + roofline summary.
+Asserts the paper's qualitative claims (C1–C4, DESIGN.md §1) on the
+regenerated data and prints CSV-ish lines throughout.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+
+def main():
+    quick = "--quick" in sys.argv
+    full = "--full" in sys.argv
+    t0 = time.time()
+    print("=" * 70)
+    print("D-iteration dynamic-partition benchmark suite")
+    print("=" * 70)
+
+    # ---------------- Tables 1–3 ----------------
+    from benchmarks import paper_tables
+
+    tables = paper_tables.main(quick=quick)
+    t1, t2, t3 = tables["table1"], tables["table2"], tables["table3"]
+
+    def chk(name, cond, detail=""):
+        print(f"  CLAIM {name}: {'PASS' if cond else 'FAIL'} {detail}")
+        return cond
+
+    print("\n[claims vs paper]")
+    ok = True
+    # C4: K=1 cost is a few normalized iterations at target 1/N
+    ok &= chk("C4 K=1 cost O(1) matvecs", t1[(1, 'uniform', False)] < 15,
+              f"cost={t1[(1, 'uniform', False)]:.2f}")
+    if not quick:
+        # C2: dynamic rescues skewed orderings at K=16 (Tables 2/3 pattern)
+        ok &= chk(
+            "C2 dynamic beats static on out-degree order (K=16, unif)",
+            t2[(16, 'uniform', True)] < t2[(16, 'uniform', False)],
+            f"{t2[(16, 'uniform', True)]:.2f} < "
+            f"{t2[(16, 'uniform', False)]:.2f}")
+        ok &= chk(
+            "C2 dynamic beats static on in-degree order (K=16, cb)",
+            t3[(16, 'cb', True)] < t3[(16, 'cb', False)],
+            f"{t3[(16, 'cb', True)]:.2f} < {t3[(16, 'cb', False)]:.2f}")
+        # parallel speedup exists (C3 direction)
+        ok &= chk("C3 K=16 cheaper than K=1 (random order)",
+                  t1[(16, 'uniform', False)] < t1[(1, 'uniform', False)],
+                  f"{t1[(16, 'uniform', False)]:.2f} < "
+                  f"{t1[(1, 'uniform', False)]:.2f}")
+
+    # ---------------- Figures 1–4, 15–18 ----------------
+    from benchmarks import fig_convergence
+
+    fig_convergence.main(quick=quick)
+
+    # ---------------- Figures 5/6 ----------------
+    from benchmarks import webgraph_speedup
+
+    rows = webgraph_speedup.run(
+        ns=(1000,) if quick else ((1000, 10000, 100000) if full
+                                  else (1000, 10000)),
+        ks=(1, 2, 4) if quick else (1, 2, 4, 8, 16, 32, 64),
+    )
+    if not quick:
+        # C1: with exchange cost charged, parallel EFFICIENCY collapses for
+        # large K at small N ("the gain is limited ... when N/K becomes too
+        # small"): static-uniform efficiency at K=max is under half of the
+        # K=4 efficiency (the curve is also non-monotone, see fig5_6.csv).
+        n1 = [r for r in rows if r[0] == 1000 and r[2] == "uniform"
+              and r[3] == 0]
+        speeds = {r[1]: float(r[5]) for r in n1}
+        best = max(speeds.values())
+        k_max = max(speeds)
+        eff_max = speeds[k_max] / k_max
+        eff_4 = speeds.get(4, speeds[min(speeds)]) / 4
+        ok &= chk("C1 efficiency collapses at small N/K (static)",
+                  eff_max < 0.5 * eff_4,
+                  f"eff(K={k_max})={eff_max:.2f} vs eff(K=4)={eff_4:.2f}")
+        # C3: larger N sustains speedup to larger K
+        n2 = [r for r in rows if r[0] == 10000 and r[2] == "uniform"
+              and r[3] == 1]
+        if n2:
+            sp2 = {r[1]: float(r[5]) for r in n2}
+            ok &= chk("C3 larger N, larger useful K (dyn)",
+                      max(sp2.values()) >= best * 0.9,
+                      f"N=10k best={max(sp2.values()):.2f} vs "
+                      f"N=1k best={best:.2f}")
+
+    # ---------------- kernel microbench ----------------
+    print("\n[kernel microbench]")
+    from benchmarks import kernel_bench
+
+    kernel_bench.main()
+
+    # ---------------- roofline summary ----------------
+    print("\n[roofline (from dry-run artifacts, if present)]")
+    from benchmarks import roofline
+
+    try:
+        rows_r = roofline.build_table()
+        if rows_r:
+            doms = {}
+            for r in rows_r:
+                doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+            print(f"  {len(rows_r)} cells analysed; dominant terms: {doms}")
+            worst = sorted(
+                (r for r in rows_r if r["roofline_fraction"] is not None),
+                key=lambda r: r["roofline_fraction"])[:5]
+            for r in worst:
+                print(f"  worst-frac: {r['arch']}×{r['cell']}×{r['mesh']} "
+                      f"frac={r['roofline_fraction']:.3f} "
+                      f"dom={r['dominant']}")
+        else:
+            print("  (no dry-run artifacts found — run "
+                  "python -m repro.launch.dryrun --all first)")
+    except Exception as e:  # pragma: no cover
+        print("  roofline summary unavailable:", e)
+
+    print(f"\nsuite finished in {time.time()-t0:.0f}s; "
+          f"claims {'ALL PASS' if ok else 'SOME FAILED'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,69 @@
+"""Paper Figures 5/6: convergence speed-up factor vs K on the web graph.
+
+uk-2007-05@1000000 is not downloadable offline; the stand-in is
+``webgraph_like`` matched to Table 4 (L/N ≈ 12.9, dangling ≈ 4.1%,
+power-law degrees with host-locality bias) — DESIGN.md §1 records the
+substitution.  N ∈ {1000, 10000[, 100000]}, K ∈ {1..64}, speedup =
+cost(K=1)/cost(K), from Uniform (Fig 5) and CB (Fig 6) starts, each
+static vs dynamic.
+"""
+from __future__ import annotations
+
+import csv
+import os
+import time
+
+from repro.core import (
+    DistributedSimulator,
+    SimulatorConfig,
+    pagerank_system,
+    webgraph_like,
+)
+
+OUT_DIR = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "results", "paper")
+)
+
+
+def run(ns=(1000, 10000), ks=(1, 2, 4, 8, 16, 32, 64), verbose=True):
+    rows = []
+    for n in ns:
+        g = webgraph_like(n, seed=1)
+        p, b = pagerank_system(g)
+        base = None
+        for k in ks:
+            if k > n // 4:
+                continue
+            for part in ("uniform", "cb"):
+                for dyn in (False, True):
+                    cfg = SimulatorConfig(
+                        k=k, target_error=1.0 / n, eps=0.15,
+                        partition=part, dynamic=dyn, mode="batch",
+                        record_every=200, max_steps=500_000,
+                    )
+                    t0 = time.time()
+                    res = DistributedSimulator(p, b, cfg).run()
+                    cost = res.cost_iterations
+                    if k == 1 and part == "uniform" and not dyn:
+                        base = cost
+                    speedup = base / cost if base else 1.0
+                    rows.append([n, k, part, int(dyn), f"{cost:.4f}",
+                                 f"{speedup:.3f}"])
+                    if verbose:
+                        print(f"  N={n} K={k} {part} "
+                              f"{'dyn' if dyn else 'sta'}: cost={cost:.2f} "
+                              f"speedup={speedup:.2f} "
+                              f"({time.time()-t0:.1f}s)")
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, "fig5_6.csv"), "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["N", "K", "partition", "dynamic", "cost", "speedup"])
+        w.writerows(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    full = "--full" in sys.argv
+    run(ns=(1000, 10000, 100000) if full else (1000, 10000))

@@ -1,0 +1,67 @@
+"""The paper's technique applied beyond the solver: the dynamic partition
+controller as a load balancer for skewed GNN edge shards (DESIGN.md §4).
+
+A power-law graph is bucketised into edge shards; shard costs are wildly
+imbalanced (degree skew).  The slope controller — fed only the observed
+per-shard work, exactly as it is fed per-PID residuals in the paper —
+rebalances buckets until the max/mean shard cost ratio collapses.  A GIN
+model then trains a few steps on the graph to show the surrounding pipeline.
+
+Run:  PYTHONPATH=src python examples/gnn_partition.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import power_law_graph
+from repro.core.partition import (
+    DynamicController,
+    DynamicControllerConfig,
+    apply_move,
+    uniform_partition,
+)
+from repro.data import make_gnn_batch
+from repro.models import gnn
+
+K = 8
+g = power_law_graph(4000, seed=3)
+# order nodes by degree -> adversarially skewed uniform partition
+order = np.argsort(-g.out_degree(), kind="stable")
+g = g.reorder(order)
+deg = np.maximum(g.out_degree(), 1)
+
+sets = uniform_partition(g.n, K)
+ctl = DynamicController(
+    DynamicControllerConfig(k=K, target_error=1e-6, z=3))
+
+print("balancing edge shards with the paper's slope controller:")
+for step in range(60):
+    costs = np.array([deg[s].sum() for s in sets], dtype=np.float64)
+    imb = costs.max() / costs.mean()
+    if step % 10 == 0:
+        print(f"  step {step:3d}: shard costs max/mean = {imb:.2f} "
+              f"(sizes {[s.size for s in sets]})")
+    move = ctl.update(costs, np.array([s.size for s in sets]))
+    if move is not None:
+        sets, _ = apply_move(sets, move)
+costs = np.array([deg[s].sum() for s in sets], dtype=np.float64)
+print(f"  final:     shard costs max/mean = "
+      f"{costs.max() / costs.mean():.2f}")
+
+print("\ntraining GIN on the balanced graph:")
+cfg = gnn.GNNConfig(name="demo", arch="gin", n_layers=3, d_hidden=32,
+                    d_feat=16, n_classes=5)
+batch = {k: jnp.asarray(v) for k, v in
+         make_gnn_batch(g, d_feat=16, n_classes=5).items()}
+params = gnn.init_params(cfg, jax.random.PRNGKey(0))
+grad_fn = jax.jit(jax.value_and_grad(
+    lambda p: gnn.loss_fn(p, batch, cfg)))
+from repro.optim import clip_by_global_norm
+
+for i in range(10):
+    loss, grads = grad_fn(params)
+    grads, _ = clip_by_global_norm(grads, 1.0)
+    params = jax.tree.map(lambda p, g_: p - 1e-3 * g_, params, grads)
+    if i % 3 == 0:
+        print(f"  step {i}: loss = {float(loss):.4f}")
+print("done.")

@@ -1,0 +1,61 @@
+"""Quickstart: solve PageRank with the D-iteration, three ways.
+
+1. Reference sequential solver (paper §2.1 pseudo-code).
+2. Faithful K-PID simulator with the dynamic partition (§2.2–2.5).
+3. Production distributed engine (shard_map; uses however many JAX devices
+   exist — 1 on a plain CPU run).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (
+    DistributedSimulator,
+    SimulatorConfig,
+    jacobi_solve,
+    pagerank_system,
+    power_law_graph,
+    solve_sequential,
+)
+from repro.core.distributed import (
+    DistributedEngine,
+    EngineConfig,
+    build_engine_arrays,
+)
+
+N = 2000
+print(f"generating power-law graph (alpha=1.5), N={N} ...")
+g = power_law_graph(N, alpha=1.5, seed=0)
+p, b = pagerank_system(g, damping=0.85)
+print(f"  L = {g.n_edges} links, {int(g.dangling_mask().sum())} dangling")
+
+# --- 1. reference solver ---------------------------------------------------
+res = solve_sequential(p, b, target_error=1.0 / N, eps=0.15)
+print(f"[sequential]  cost = {res.cost_iterations:.2f} matvec-equivalents, "
+      f"|F| = {res.residual:.2e}")
+x_jac, iters = jacobi_solve(p, b, target_error=1.0 / N, eps=0.15)
+print(f"[jacobi]      cost = {iters} matvecs  "
+      f"(D-iteration is {iters / res.cost_iterations:.1f}x cheaper)")
+
+# --- 2. K-PID simulator with dynamic partition ------------------------------
+cfg = SimulatorConfig(k=8, target_error=1.0 / N, eps=0.15,
+                      partition="uniform", dynamic=True, record_every=50)
+sim = DistributedSimulator(p, b, cfg).run()
+err = np.abs(sim.h - res.x).max()
+print(f"[simulator]   K=8 dynamic: cost = {sim.cost_iterations:.2f}, "
+      f"moves = {sim.n_moves}, exchanges = {sim.n_exchanges}, "
+      f"max|Δx| vs sequential = {err:.2e}")
+
+# --- 3. production engine ----------------------------------------------------
+import jax
+
+k = len(jax.devices())
+ecfg = EngineConfig(k=k, target_error=1.0 / N, eps=0.15,
+                    buckets_per_dev=8, headroom=2, dynamic=k > 1)
+eng = DistributedEngine(build_engine_arrays(p, b, ecfg), ecfg)
+x, info = eng.solve()
+print(f"[engine]      K={k} devices: converged={info['converged']} "
+      f"rounds={info['rounds']} max|Δx| = {np.abs(x - res.x).max():.2e}")
+
+top = np.argsort(-res.x)[:5]
+print("top-5 PageRank nodes:", top.tolist())

@@ -1,0 +1,76 @@
+"""Train a transformer LM end-to-end with the full runtime substrate:
+deterministic data pipeline, AdamW with fp32 master weights, atomic async
+checkpoints, auto-resume, straggler monitor.
+
+Default is a ~14M-param model that trains a few hundred steps in minutes on
+this CPU container; ``--width 512 --layers 12`` gives the ~100M-param
+configuration (same code path) for real hardware.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import lm_token_batch
+from repro.models.transformer import TransformerConfig, init_params, train_loss
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.runtime import TrainLoop, TrainLoopConfig
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--width", type=int, default=256)
+ap.add_argument("--layers", type=int, default=4)
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq", type=int, default=128)
+ap.add_argument("--vocab", type=int, default=4096)
+ap.add_argument("--ckpt", default="/tmp/repro_lm_ckpt")
+args = ap.parse_args()
+
+cfg = TransformerConfig(
+    name="example-lm",
+    n_layers=args.layers,
+    d_model=args.width,
+    n_heads=max(2, args.width // 64),
+    n_kv_heads=max(1, args.width // 128),
+    d_ff=args.width * 3,
+    vocab=args.vocab,
+    dtype=jnp.float32,
+    ce_chunk=args.seq,
+)
+ocfg = AdamWConfig(lr=3e-4, warmup_steps=20, total_steps=args.steps)
+
+
+def init_state():
+    p = init_params(cfg, jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree.leaves(p))
+    print(f"model: {n/1e6:.1f}M params")
+    return p, adamw_init(p)
+
+
+@jax.jit
+def step_fn(params, opt_state, batch):
+    loss, grads = jax.value_and_grad(
+        lambda p: train_loss(p, batch, cfg))(params)
+    params, opt_state, m = adamw_update(grads, opt_state, ocfg,
+                                        param_dtype=cfg.dtype)
+    return params, opt_state, {"loss": loss, **m}
+
+
+def make_batch(step):
+    b = lm_token_batch(step, args.batch, args.seq, args.vocab)
+    return {k: jnp.asarray(v) for k, v in b.items()}
+
+
+loop = TrainLoop(
+    step_fn, make_batch, init_state,
+    TrainLoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt,
+                    ckpt_every=50, log_every=10),
+)
+out = loop.run(verbose=True)
+first = out["metrics"][0]["loss"] if out["metrics"] else float("nan")
+last = out["metrics"][-1]["loss"] if out["metrics"] else float("nan")
+print(f"done: loss {first:.3f} -> {last:.3f} "
+      f"({out['mean_step_time']*1e3:.0f} ms/step); "
+      f"checkpoints in {args.ckpt} (re-run resumes automatically)")

@@ -1,0 +1,45 @@
+"""Architecture registry: the 10 assigned (arch × shape) configs
++ the paper's own solver config.
+
+``get_arch(arch_id)`` -> ArchSpec; ``ARCH_IDS`` lists all ids for
+``--arch`` flags in the launchers.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from .common import ArchSpec, ShapeCell  # noqa: F401
+
+_MODULES = {
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "command-r-plus-104b": "command_r_plus_104b",
+    "qwen1.5-0.5b": "qwen1_5_0_5b",
+    "mistral-large-123b": "mistral_large_123b",
+    "meshgraphnet": "meshgraphnet",
+    "egnn": "egnn",
+    "gin-tu": "gin_tu",
+    "dimenet": "dimenet",
+    "fm": "fm",
+}
+
+ARCH_IDS = list(_MODULES)
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    import importlib
+
+    if arch_id not in _MODULES:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; choose from {ARCH_IDS}"
+        )
+    mod = importlib.import_module(f".{_MODULES[arch_id]}", __package__)
+    return mod.spec()
+
+
+def all_cells():
+    """Iterate (arch_id, cell_name) over the 40 assigned cells."""
+    for aid in ARCH_IDS:
+        spec = get_arch(aid)
+        for cname in spec.cells:
+            yield aid, cname

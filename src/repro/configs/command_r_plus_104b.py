@@ -1,0 +1,69 @@
+"""command-r-plus-104b [dense] — 64L d=12288 96H (GQA kv=8) d_ff=33792
+vocab=256000, GQA, no-bias.  [hf:CohereForAI/c4ai-command-r-v01; unverified]
+"""
+import jax.numpy as jnp
+
+from repro.models.transformer import TransformerConfig
+from .common import ArchSpec, ShapeCell, lm_cells, sds
+
+ARCH_ID = "command-r-plus-104b"
+
+
+def model_cfg() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID,
+        n_layers=64,
+        d_model=12288,
+        n_heads=96,
+        n_kv_heads=8,
+        d_head=128,
+        d_ff=33792,
+        vocab=256000,
+        qkv_bias=False,
+        dtype=jnp.bfloat16,
+    )
+
+
+def _int8_decode_cell(cfg) -> ShapeCell:
+    """OPTIMIZED decode variant: int8 KV cache (per-token-head scales,
+    KIVI-style) + TP-only serving weights — the §Perf B2 combination the
+    bf16 cache could not afford memory-wise (13 GiB weights + 4.3 GiB
+    cache > HBM; int8 halves the cache)."""
+    shape = (cfg.n_layers, 128, 32768, cfg.n_kv_heads, cfg.head_dim)
+    sshape = shape[:-1]
+    cache_axes = ("layers", "batch", "kv_seq", None, None)
+    scale_axes = ("layers", "batch", "kv_seq", None)
+    return ShapeCell(
+        name="decode_32k_int8", kind="decode",
+        inputs=lambda: {
+            "tokens": sds((128,), jnp.int32),
+            "cache_k": sds(shape, jnp.int8),
+            "cache_v": sds(shape, jnp.int8),
+            "cache_k_scale": sds(sshape, jnp.float32),
+            "cache_v_scale": sds(sshape, jnp.float32),
+            "pos": sds((), jnp.int32),
+        },
+        input_axes={
+            "tokens": ("batch",), "cache_k": cache_axes,
+            "cache_v": cache_axes, "cache_k_scale": scale_axes,
+            "cache_v_scale": scale_axes, "pos": (),
+        },
+        rules_override={"embed": None},  # TP-only serving weights
+        meta={"tokens": 128, "batch": 128, "seq": 32768, "kv_bytes": 1,
+              "extra": True,
+              "note": "OPTIMIZED: int8 KV + TP-only weights (SPerf B3)"},
+    )
+
+
+def spec() -> ArchSpec:
+    cfg = model_cfg()
+    cells = lm_cells(cfg, train_microbatches=16)
+    cells["decode_32k_int8"] = _int8_decode_cell(cfg)
+    return ArchSpec(
+        arch_id=ARCH_ID,
+        family="lm",
+        model_cfg=cfg,
+        # 104B: per-device microbatch of 1 keeps remat carry ~6 GB
+        cells=cells,
+        source="hf:CohereForAI/c4ai-command-r-v01; unverified",
+    )

@@ -1,0 +1,165 @@
+"""Arch/shape cell machinery shared by all config files.
+
+Every assigned architecture file exposes ``spec() -> ArchSpec``; a cell =
+(arch × input shape) defines exactly what the dry-run lowers:
+
+* ``kind``       — which step function (train / prefill / decode / serve /
+                   retrieval) the cell lowers,
+* ``inputs()``   — ShapeDtypeStruct stand-ins for the step's data inputs,
+* ``input_axes`` — logical sharding axes per input key,
+* ``overrides``  — per-shape model-config knobs (microbatches, attn chunk),
+* ``meta``       — tokens/batch bookkeeping for the roofline's 6ND term.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ShapeCell", "ArchSpec", "sds", "lm_cells"]
+
+
+def sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+@dataclasses.dataclass
+class ShapeCell:
+    name: str
+    kind: str  # train | prefill | decode | serve | retrieval
+    inputs: Callable[[], Dict[str, Any]]
+    input_axes: Dict[str, Tuple[Optional[str], ...]]
+    overrides: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    skip: Optional[str] = None  # reason string if the cell is skipped
+    # per-cell physical rule overrides (merged over the arch-level ones),
+    # e.g. TP-only serving weights for the int8-KV decode variant
+    rules_override: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class ArchSpec:
+    arch_id: str
+    family: str  # lm | gnn | recsys
+    model_cfg: Any
+    cells: Dict[str, ShapeCell]
+    source: str = ""  # provenance tag from the assignment table
+    # per-arch physical rule overrides (e.g. act_seq off for small d_model
+    # where the remat carry fits HBM without sequence-parallel residuals)
+    rules_override: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def cfg_for(self, cell: ShapeCell):
+        if not cell.overrides:
+            return self.model_cfg
+        return dataclasses.replace(self.model_cfg, **cell.overrides)
+
+
+# --------------------------------------------------------------------------- #
+# LM shape set (shared by all five LM archs)
+# --------------------------------------------------------------------------- #
+def lm_cells(
+    cfg,
+    *,
+    train_microbatches: int = 1,
+    prefill_batch_override: Optional[int] = None,
+    sub_quadratic: bool = False,
+) -> Dict[str, ShapeCell]:
+    """train_4k / prefill_32k / decode_32k / long_500k for an LM config.
+
+    ``long_500k`` lowers serve_step (decode with a 512k KV cache) — decode
+    cost is LINEAR in cache length, so the cell runs for every arch; the
+    full-attention *prefill* at 512k would be quadratic and is NOT claimed
+    (DESIGN.md §4 records this reading).
+    """
+    v = cfg.vocab
+    tok = jnp.int32
+
+    def train_inputs():
+        return {
+            "tokens": sds((256, 4096), tok),
+            "labels": sds((256, 4096), tok),
+        }
+
+    def prefill_inputs():
+        b = prefill_batch_override or 32
+        return {"tokens": sds((b, 32768), tok)}
+
+    def decode_inputs():
+        return {
+            "tokens": sds((128,), tok),
+            "cache_k": sds(
+                (cfg.n_layers, 128, 32768, cfg.n_kv_heads, cfg.head_dim),
+                cfg.dtype,
+            ),
+            "cache_v": sds(
+                (cfg.n_layers, 128, 32768, cfg.n_kv_heads, cfg.head_dim),
+                cfg.dtype,
+            ),
+            "pos": sds((), jnp.int32),
+        }
+
+    def long_inputs():
+        return {
+            "tokens": sds((1,), tok),
+            "cache_k": sds(
+                (cfg.n_layers, 1, 524288, cfg.n_kv_heads, cfg.head_dim),
+                cfg.dtype,
+            ),
+            "cache_v": sds(
+                (cfg.n_layers, 1, 524288, cfg.n_kv_heads, cfg.head_dim),
+                cfg.dtype,
+            ),
+            "pos": sds((), jnp.int32),
+        }
+
+    cache_axes_32k = ("layers", "batch", "kv_seq", None, None)
+    cache_axes_500k = ("layers", None, "kv_seq", None, None)
+    return {
+        "train_4k": ShapeCell(
+            name="train_4k",
+            kind="train",
+            inputs=train_inputs,
+            input_axes={"tokens": ("batch", None),
+                        "labels": ("batch", None)},
+            overrides={"n_microbatches": train_microbatches},
+            meta={"tokens": 256 * 4096, "batch": 256, "seq": 4096},
+        ),
+        "prefill_32k": ShapeCell(
+            name="prefill_32k",
+            kind="prefill",
+            inputs=prefill_inputs,
+            input_axes={"tokens": ("batch", None)},
+            overrides={"attn_q_chunk": 2048, "remat": False},
+            meta={"tokens": (prefill_batch_override or 32) * 32768,
+                  "batch": prefill_batch_override or 32, "seq": 32768},
+        ),
+        "decode_32k": ShapeCell(
+            name="decode_32k",
+            kind="decode",
+            inputs=decode_inputs,
+            input_axes={
+                "tokens": ("batch",),
+                "cache_k": cache_axes_32k,
+                "cache_v": cache_axes_32k,
+                "pos": (),
+            },
+            meta={"tokens": 128, "batch": 128, "seq": 32768,
+                  "note": "decode-only, one new token vs 32k cache"},
+        ),
+        "long_500k": ShapeCell(
+            name="long_500k",
+            kind="decode",
+            inputs=long_inputs,
+            input_axes={
+                "tokens": ("batch",),
+                "cache_k": cache_axes_500k,
+                "cache_v": cache_axes_500k,
+                "pos": (),
+            },
+            meta={"tokens": 1, "batch": 1, "seq": 524288,
+                  "note": ("decode-only (linear in seq); 512k prefill not "
+                           "claimed for full-attention archs")},
+        ),
+    }

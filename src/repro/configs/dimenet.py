@@ -1,0 +1,36 @@
+"""dimenet [gnn] — 6 interaction blocks, d_hidden=128, n_bilinear=8,
+n_spherical=7, n_radial=6; directional messages with triplet aggregation.
+Triplets capped at 8 per edge (cutoff neighborhoods, DESIGN.md §4).
+[arXiv:2003.03123; unverified]
+"""
+from repro.models.gnn import GNNConfig
+from .common import ArchSpec
+from .gnn_common import gnn_cells
+
+ARCH_ID = "dimenet"
+
+
+def model_cfg() -> GNNConfig:
+    return GNNConfig(
+        name=ARCH_ID,
+        arch="dimenet",
+        n_layers=6,  # interaction blocks
+        d_hidden=128,
+        d_feat=16,  # per-cell override
+        n_bilinear=8,
+        n_spherical=7,
+        n_radial=6,
+        d_out=1,
+        task="graph",
+    )
+
+
+def spec() -> ArchSpec:
+    cfg = model_cfg()
+    return ArchSpec(
+        arch_id=ARCH_ID,
+        family="gnn",
+        model_cfg=cfg,
+        cells=gnn_cells("dimenet", cfg),
+        source="arXiv:2003.03123; unverified",
+    )

@@ -1,0 +1,30 @@
+"""egnn [gnn] — 4 layers, d_hidden=64, E(n)-equivariant updates.
+[arXiv:2102.09844; paper]
+"""
+from repro.models.gnn import GNNConfig
+from .common import ArchSpec
+from .gnn_common import gnn_cells
+
+ARCH_ID = "egnn"
+
+
+def model_cfg() -> GNNConfig:
+    return GNNConfig(
+        name=ARCH_ID,
+        arch="egnn",
+        n_layers=4,
+        d_hidden=64,
+        d_feat=1433,  # per-cell override
+        d_out=1,
+    )
+
+
+def spec() -> ArchSpec:
+    cfg = model_cfg()
+    return ArchSpec(
+        arch_id=ARCH_ID,
+        family="gnn",
+        model_cfg=cfg,
+        cells=gnn_cells("egnn", cfg),
+        source="arXiv:2102.09844; paper",
+    )

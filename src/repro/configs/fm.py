@@ -1,0 +1,69 @@
+"""fm [recsys] — 39 sparse fields, embed_dim=10, 2-way FM interaction via
+the O(nk) sum-square trick; 10^6 rows per field -> 39M-row fused table.
+[ICDM'10 (Rendle); paper]
+"""
+import jax.numpy as jnp
+
+from repro.models.recsys import FMConfig
+from .common import ArchSpec, ShapeCell, sds
+
+ARCH_ID = "fm"
+I32 = jnp.int32
+
+
+def model_cfg() -> FMConfig:
+    return FMConfig(
+        name=ARCH_ID,
+        n_fields=39,
+        vocab_per_field=1_000_000,
+        embed_dim=10,
+    )
+
+
+def spec() -> ArchSpec:
+    cfg = model_cfg()
+    f = cfg.n_fields
+
+    def batch_inputs(b):
+        def inputs():
+            return {"ids": sds((b, f), I32), "labels": sds((b,), I32)}
+        return inputs
+
+    def retrieval_inputs():
+        return {
+            "user_ids": sds((f - 1,), I32),
+            "cand_ids": sds((1_000_000,), I32),
+        }
+
+    axes = {"ids": ("batch", None), "labels": ("batch",)}
+    cells = {
+        "train_batch": ShapeCell(
+            name="train_batch", kind="train",
+            inputs=batch_inputs(65_536), input_axes=axes,
+            meta={"batch": 65_536},
+        ),
+        "serve_p99": ShapeCell(
+            name="serve_p99", kind="serve",
+            inputs=batch_inputs(512), input_axes=axes,
+            meta={"batch": 512, "note": "online-inference latency shape"},
+        ),
+        "serve_bulk": ShapeCell(
+            name="serve_bulk", kind="serve",
+            inputs=batch_inputs(262_144), input_axes=axes,
+            meta={"batch": 262_144, "note": "offline scoring"},
+        ),
+        "retrieval_cand": ShapeCell(
+            name="retrieval_cand", kind="retrieval",
+            inputs=retrieval_inputs,
+            input_axes={"user_ids": (None,), "cand_ids": ("batch",)},
+            meta={"batch": 1, "n_candidates": 1_000_000,
+                  "note": "one query vs 1M candidates, single matvec"},
+        ),
+    }
+    return ArchSpec(
+        arch_id=ARCH_ID,
+        family="recsys",
+        model_cfg=cfg,
+        cells=cells,
+        source="ICDM'10 (Rendle); paper",
+    )

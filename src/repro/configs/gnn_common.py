@@ -1,0 +1,117 @@
+"""Shared GNN shape cells (the 4 assigned shapes × 4 GNN archs).
+
+Shapes (assignment table):
+
+  full_graph_sm   N=2,708  E=10,556  d_feat=1,433   (cora-scale full batch)
+  minibatch_lg    reddit-scale sampled training: the *lowered input* is the
+                  padded fanout-(15,10) subgraph from data.NeighborSampler —
+                  1024 seeds -> 169,984 node / 168,960 edge budget.
+                  The 232,965-node / 114.6M-edge parent graph lives host-side
+                  in the sampler (that IS the system design: sampling is a
+                  host pipeline stage).
+  ogb_products    N=2,449,029  E=61,859,140  d_feat=100 (full-batch-large)
+  molecule        128 graphs x (30 nodes, 64 edges), batched block-diagonal
+
+DimeNet triplets are capped at 8 incoming edges per directed edge
+(cutoff-neighborhood semantics; DESIGN.md §4) -> T = 8·E padded.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+
+from .common import ArchSpec, ShapeCell, sds
+
+F32, I32 = jnp.float32, jnp.int32
+
+# (n_nodes, n_edges, d_feat, n_classes); n/e are PADDED to the mesh
+# (nodes % 32 == 0, edges % 512 == 0 — masks carry validity), the real
+# assignment sizes are kept in n_real/e_real for the records.
+SHAPE_DIMS = {
+    "full_graph_sm": dict(n=2720, e=10752, n_real=2708, e_real=10556,
+                          d_feat=1433, classes=7),
+    "minibatch_lg": dict(n=169_984, e=168_960, n_real=169_984,
+                         e_real=168_960, d_feat=602, classes=41),
+    "ogb_products": dict(n=2_449_056, e=61_859_328, n_real=2_449_029,
+                         e_real=61_859_140, d_feat=100, classes=47),
+    "molecule": dict(n=128 * 30, e=128 * 64, n_real=128 * 30,
+                     e_real=128 * 64, d_feat=16, classes=0, graphs=128),
+}
+
+TRIP_PER_EDGE = 8
+
+
+def gnn_cells(arch: str, base_cfg) -> Dict[str, ShapeCell]:
+    """Build the 4 cells for one GNN arch (configs differ per cell in
+    d_feat / n_classes / task, applied via overrides)."""
+    needs_pos = arch in ("egnn", "dimenet", "meshgraphnet")
+    needs_trip = arch == "dimenet"
+
+    def make_inputs(dims, graphs: Optional[int]):
+        def inputs():
+            n, e, df = dims["n"], dims["e"], dims["d_feat"]
+            d = {
+                "x": sds((n, df), F32),
+                "src": sds((e,), I32),
+                "dst": sds((e,), I32),
+                "node_mask": sds((n,), F32),
+                "edge_mask": sds((e,), F32),
+            }
+            if needs_pos:
+                d["pos"] = sds((n, 3), F32)
+            if needs_trip:
+                t = e * TRIP_PER_EDGE
+                d["z"] = sds((n,), I32)
+                d["trip_e"] = sds((t,), I32)
+                d["trip_f"] = sds((t,), I32)
+                d["trip_mask"] = sds((t,), F32)
+            if graphs:
+                d["graph_ids"] = sds((n,), I32)
+                d["labels"] = sds((graphs,), F32)
+            elif dims["classes"]:
+                d["labels"] = sds((n,), I32)
+            else:
+                d["labels"] = sds((n, base_cfg.d_out), F32)
+            return d
+
+        return inputs
+
+    axes = {
+        "x": ("nodes", None),
+        "pos": ("nodes", None),
+        "z": ("nodes",),
+        "src": ("edges",),
+        "dst": ("edges",),
+        "node_mask": ("nodes",),
+        "edge_mask": ("edges",),
+        "trip_e": ("edges",),
+        "trip_f": ("edges",),
+        "trip_mask": ("edges",),
+        "graph_ids": ("nodes",),
+        "labels": ("nodes",),  # graph labels replicate fine too
+    }
+
+    cells = {}
+    for name, dims in SHAPE_DIMS.items():
+        graphs = dims.get("graphs")
+        overrides = {"d_feat": dims["d_feat"]}
+        if graphs:
+            overrides |= {"n_classes": 0, "task": "graph", "d_out": 1}
+        else:
+            if dims["classes"]:
+                overrides |= {"n_classes": dims["classes"], "task": "node"}
+            else:
+                overrides |= {"n_classes": 0, "task": "node"}
+        cells[name] = ShapeCell(
+            name=name,
+            kind="train",
+            inputs=make_inputs(dims, graphs),
+            input_axes=axes,
+            overrides=overrides,
+            meta={"n_nodes": dims["n"], "n_edges": dims["e"],
+                  "n_real": dims["n_real"], "e_real": dims["e_real"],
+                  **({"n_triplets": dims["e"] * TRIP_PER_EDGE}
+                     if needs_trip else {})},
+        )
+    return cells

@@ -1,0 +1,31 @@
+"""meshgraphnet [gnn] — 15 MP layers, d_hidden=128, sum aggregator,
+2-layer MLPs.  [arXiv:2010.03409; unverified]
+"""
+from repro.models.gnn import GNNConfig
+from .common import ArchSpec
+from .gnn_common import gnn_cells
+
+ARCH_ID = "meshgraphnet"
+
+
+def model_cfg() -> GNNConfig:
+    return GNNConfig(
+        name=ARCH_ID,
+        arch="meshgraphnet",
+        n_layers=15,
+        d_hidden=128,
+        d_feat=1433,  # per-cell override
+        d_edge=4,  # rel-pos + distance
+        d_out=2,
+    )
+
+
+def spec() -> ArchSpec:
+    cfg = model_cfg()
+    return ArchSpec(
+        arch_id=ARCH_ID,
+        family="gnn",
+        model_cfg=cfg,
+        cells=gnn_cells("meshgraphnet", cfg),
+        source="arXiv:2010.03409; unverified",
+    )

@@ -1,0 +1,35 @@
+"""mistral-large-123b [dense] — 88L d=12288 96H (GQA kv=8) d_ff=28672
+vocab=32768.  [hf:mistralai/Mistral-Large-Instruct-2407; unverified]
+"""
+import jax.numpy as jnp
+
+from repro.models.transformer import TransformerConfig
+from .common import ArchSpec, lm_cells
+
+ARCH_ID = "mistral-large-123b"
+
+
+def model_cfg() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID,
+        n_layers=88,
+        d_model=12288,
+        n_heads=96,
+        n_kv_heads=8,
+        d_head=128,
+        d_ff=28672,
+        vocab=32768,
+        qkv_bias=False,
+        dtype=jnp.bfloat16,
+    )
+
+
+def spec() -> ArchSpec:
+    cfg = model_cfg()
+    return ArchSpec(
+        arch_id=ARCH_ID,
+        family="lm",
+        model_cfg=cfg,
+        cells=lm_cells(cfg, train_microbatches=16),
+        source="hf:mistralai/Mistral-Large-Instruct-2407; unverified",
+    )

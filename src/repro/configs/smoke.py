@@ -1,0 +1,95 @@
+"""Reduced same-family configs + tiny batches for per-arch CPU smoke tests.
+
+Each assigned architecture gets a shrunken clone (few layers, narrow dims,
+tiny vocab/tables/graphs) that preserves the family structure — MoE stays
+MoE with shared experts, GQA ratios survive, DimeNet keeps triplets — so one
+forward/train step on CPU exercises the same code paths the full config
+lowers on the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.data import criteo_like_batch, lm_token_batch, molecule_batch
+
+__all__ = ["smoke_setup"]
+
+
+def _lm_shrink(cfg):
+    moe = cfg.moe
+    if moe is not None:
+        moe = dataclasses.replace(
+            moe, n_experts=min(moe.n_experts, 8), top_k=min(moe.top_k, 2),
+            d_ff_expert=16, pad_experts_to=8,
+        )
+    return dataclasses.replace(
+        cfg,
+        n_layers=2,
+        d_model=64,
+        n_heads=max(2, cfg.n_heads // 8),
+        n_kv_heads=max(1, cfg.n_kv_heads // 8),
+        d_head=16,
+        d_ff=96,
+        vocab=128,
+        moe=moe,
+        dtype=jnp.float32,
+        ce_chunk=16,
+        n_microbatches=1,
+    )
+
+
+def smoke_setup(arch_id: str) -> Tuple[Any, Dict[str, Any], str]:
+    """Returns (reduced model cfg, tiny batch dict, family)."""
+    spec = get_arch(arch_id)
+    rng = np.random.default_rng(0)
+    if spec.family == "lm":
+        cfg = _lm_shrink(spec.model_cfg)
+        b = lm_token_batch(0, 2, 32, cfg.vocab)
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        return cfg, batch, "lm"
+    if spec.family == "gnn":
+        cfg = dataclasses.replace(
+            spec.model_cfg,
+            n_layers=min(spec.model_cfg.n_layers, 3),
+            d_hidden=16,
+            d_feat=8,
+            n_bilinear=4,
+            n_spherical=4,
+            n_radial=4,
+        )
+        arch = spec.model_cfg.arch
+        if arch == "dimenet":
+            cfg = dataclasses.replace(cfg, task="graph", n_classes=0)
+            raw = molecule_batch(4, nodes_per_graph=10, edges_per_graph=20,
+                                 d_feat=8, with_triplets=True)
+        elif arch == "egnn":
+            cfg = dataclasses.replace(cfg, task="graph", n_classes=0)
+            raw = molecule_batch(4, nodes_per_graph=10, edges_per_graph=20,
+                                 d_feat=8)
+        elif arch == "gin":
+            cfg = dataclasses.replace(cfg, task="node", n_classes=5,
+                                      d_out=5)
+            raw = molecule_batch(4, nodes_per_graph=10, edges_per_graph=20,
+                                 d_feat=8, graph_labels=False)
+            raw["labels"] = rng.integers(0, 5, raw["x"].shape[0]).astype(
+                np.int32)
+        else:  # meshgraphnet: node regression
+            cfg = dataclasses.replace(cfg, task="node", n_classes=0)
+            raw = molecule_batch(4, nodes_per_graph=10, edges_per_graph=20,
+                                 d_feat=8, graph_labels=False)
+            raw["labels"] = rng.standard_normal(
+                (raw["x"].shape[0], cfg.d_out)).astype(np.float32)
+        batch = {k: jnp.asarray(v) for k, v in raw.items()}
+        return cfg, batch, "gnn"
+    if spec.family == "recsys":
+        cfg = dataclasses.replace(
+            spec.model_cfg, n_fields=6, vocab_per_field=100, embed_dim=8)
+        raw = criteo_like_batch(0, 32, cfg.n_fields, cfg.vocab_per_field)
+        batch = {k: jnp.asarray(v) for k, v in raw.items()}
+        return cfg, batch, "recsys"
+    raise ValueError(spec.family)

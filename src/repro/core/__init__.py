@@ -1,0 +1,41 @@
+"""The paper's contribution: D-iteration + dynamic partition strategy.
+
+Layers:
+  graph        — CSR / bucketed graph containers + generators (paper §3 data)
+  diteration   — reference solvers (sequential paper-exact, frontier jnp)
+  partition    — static Uniform/CB partitions + the dynamic slope controller
+  simulator    — faithful time-stepped K-PID simulation (§2.2–2.5)
+  distributed  — production shard_map engine (TPU-native adaptation)
+"""
+from .graph import (
+    BucketedGraph,
+    CSRGraph,
+    bucketize,
+    pagerank_system,
+    power_law_graph,
+    random_dd_system,
+    webgraph_like,
+)
+from .diteration import (
+    DiterationResult,
+    default_weights,
+    frontier_step,
+    jacobi_solve,
+    residual_l1,
+    solve_frontier_jnp,
+    solve_sequential,
+)
+from .partition import (
+    DynamicController,
+    DynamicControllerConfig,
+    MoveInstruction,
+    apply_move,
+    cb_partition,
+    uniform_partition,
+)
+from .simulator import (
+    DistributedSimulator,
+    SimResult,
+    SimulatorConfig,
+    run_cost_experiment,
+)

@@ -1,0 +1,521 @@
+"""Production distributed D-iteration engine (TPU-native adaptation).
+
+This is the deployable counterpart of :mod:`repro.core.simulator`
+(DESIGN.md §3).  The paper's point-to-point, one-node-at-a-time scheme is
+mapped onto JAX-native constructs:
+
+* **shard_map over a ``pid`` device axis** — each device plays one PID.
+* **Bucket-granular state** — nodes are packed into fixed-size buckets
+  (:func:`repro.core.graph.bucketize`); every device owns a *fixed* number of
+  bucket rows (static shapes), some of which are inert headroom.  The dynamic
+  partition controller moves whole buckets between devices by permuting the
+  bucket-indexed arrays in-graph (``jnp.take`` on the sharded axis lowers to
+  collective-permute / all-gather under SPMD), so load can move without any
+  reshaping — this is also the elastic-scaling path.
+* **Frontier-batched local diffusion** — every local node above the
+  threshold diffuses simultaneously (a valid D-iteration schedule); the push
+  becomes gather → multiply → ``segment_sum``.
+* **reduce-scatter fluid exchange** — remote contributions accumulate in a
+  per-device full-length outbox; one ``psum_scatter`` over the ``pid`` axis
+  delivers every device exactly the fluid destined to its slots.  The paper's
+  ``s_k > r_k/2`` rule decides *when* the exchange happens (evaluated
+  in-graph with any-device-fires semantics, so the collective stays
+  congruent across devices).
+* **Threshold schedule** — per-device T with γ decay and the paper's
+  receive-time re-seed ``T := min(T·(r+recv)/r, recv)``.
+
+The same engine is lowered in the multi-pod dry-run (launch/dryrun.py) as the
+solver "architecture" entry, proving the collective schedule compiles on the
+production meshes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .graph import BucketedGraph, CSRGraph, bucketize
+from .diteration import default_weights
+from .partition import DynamicController, DynamicControllerConfig
+
+__all__ = [
+    "EngineConfig",
+    "EngineArrays",
+    "EngineState",
+    "DistributedEngine",
+    "build_engine_arrays",
+]
+
+GAMMA = 1.2
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    k: int  # devices on the 'pid' axis
+    target_error: float
+    eps: float
+    buckets_per_dev: int = 8  # owned bucket rows per device (incl. headroom)
+    headroom: int = 2  # inert bucket rows per device for load moves
+    max_inner: int = 8  # max local rounds between exchanges
+    gamma: float = GAMMA
+    dynamic: bool = False
+    eta: float = 0.5
+    z: int = 10
+    chunk_rounds: int = 4  # exchange cycles per jitted chunk
+    max_chunks: int = 4096
+    dtype: jnp.dtype = jnp.float32
+
+
+@dataclasses.dataclass
+class EngineArrays:
+    """Static bucket-major tensors fed to the engine (device-shardable).
+
+    R = K * buckets_per_dev rows, S = bucket_size slots per row,
+    E = edge capacity per row.  Row r is owned by device r // buckets_per_dev.
+    ``pos_of_bucket`` maps a *stable bucket id* to its current row; edge
+    destinations are stored as (stable bucket id, in-bucket slot) so bucket
+    moves only update the small replicated position map.
+    """
+
+    f0: np.ndarray  # [R, S] initial fluid
+    w: np.ndarray  # [R, S] selection weights (0 = inert slot)
+    src_slot: np.ndarray  # [R, E] in-bucket source slot of each edge
+    dst_bucket: np.ndarray  # [R, E] destination stable bucket id
+    dst_slot: np.ndarray  # [R, E] destination in-bucket slot
+    wgt: np.ndarray  # [R, E] edge weight (0 = padding edge)
+    pos_of_bucket: np.ndarray  # [R] stable bucket id -> initial row
+    node_of_slot: np.ndarray  # [R, S] global node id or -1 (initial rows)
+    n: int
+    n_edges: int
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.f0.shape[0])
+
+    @property
+    def bucket_size(self) -> int:
+        return int(self.f0.shape[1])
+
+    @property
+    def edge_cap(self) -> int:
+        return int(self.wgt.shape[1])
+
+
+def build_engine_arrays(
+    g: CSRGraph,
+    b: np.ndarray,
+    cfg: EngineConfig,
+    order: Optional[np.ndarray] = None,
+) -> EngineArrays:
+    """Bucketize (P, B) into the engine's fixed-shape layout.
+
+    Real buckets fill ``buckets_per_dev - headroom`` rows per device; the
+    remaining rows are inert landing slots for dynamic bucket moves.
+    """
+    real_per_dev = cfg.buckets_per_dev - cfg.headroom
+    assert real_per_dev >= 1, "headroom must leave >=1 real bucket per device"
+    n_real = cfg.k * real_per_dev
+    bg: BucketedGraph = bucketize(g, n_real, order=order)
+    s = bg.bucket_size
+    e = bg.edge_cap
+    r = cfg.k * cfg.buckets_per_dev
+
+    f0 = np.zeros((r, s), dtype=np.float64)
+    w = np.zeros((r, s), dtype=np.float64)
+    node_of_slot = np.full((r, s), -1, dtype=np.int32)
+    src_slot = np.zeros((r, e), dtype=np.int32)
+    dst_bucket = np.zeros((r, e), dtype=np.int32)
+    dst_slot = np.zeros((r, e), dtype=np.int32)
+    wgt = np.zeros((r, e), dtype=np.float64)
+    pos_of_bucket = np.zeros(r, dtype=np.int32)
+
+    wnode = default_weights(g)
+    for d in range(cfg.k):
+        for j in range(real_per_dev):
+            bid = d * real_per_dev + j  # stable bucket id
+            row = d * cfg.buckets_per_dev + j  # initial row position
+            pos_of_bucket[bid] = row
+            nos = bg.node_of_slot[bid]
+            node_of_slot[row] = nos
+            valid = nos >= 0
+            f0[row, valid] = b[nos[valid]]
+            w[row, valid] = wnode[nos[valid]]
+            src_slot[row] = bg.src_slot[bid]
+            dst_bucket[row] = bg.dst[bid] // s  # stable id (identity layout)
+            dst_slot[row] = bg.dst[bid] % s
+            wgt[row] = bg.wgt[bid]
+    # inert bucket ids n_real..r-1 occupy the headroom rows, in order
+    inert_rows = [
+        d * cfg.buckets_per_dev + j
+        for d in range(cfg.k)
+        for j in range(real_per_dev, cfg.buckets_per_dev)
+    ]
+    for bid, row in zip(range(n_real, r), inert_rows):
+        pos_of_bucket[bid] = row
+    return EngineArrays(
+        f0=f0,
+        w=w,
+        src_slot=src_slot,
+        dst_bucket=dst_bucket,
+        dst_slot=dst_slot,
+        wgt=wgt,
+        pos_of_bucket=pos_of_bucket,
+        node_of_slot=node_of_slot,
+        n=g.n,
+        n_edges=g.n_edges,
+    )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class EngineState:
+    """Sharded solver state.
+
+    ``f``/``h`` are [R, S] sharded on rows; ``outbox`` is [K, R*S] sharded on
+    its first axis (each device holds ITS full-length outbox); ``t``/``ops``
+    are [K] sharded one-per-device; ``pos_of_bucket`` is replicated.
+    """
+
+    f: jax.Array
+    h: jax.Array
+    outbox: jax.Array
+    t: jax.Array
+    pos_of_bucket: jax.Array
+    ops: jax.Array
+    rounds: jax.Array
+
+
+class DistributedEngine:
+    """shard_map production solver for ``X = P X + B``."""
+
+    def __init__(
+        self,
+        arrays: EngineArrays,
+        cfg: EngineConfig,
+        mesh: Optional[Mesh] = None,
+        axis: str = "pid",
+    ):
+        self.a = arrays
+        self.cfg = cfg
+        self.axis = axis
+        if mesh is None:
+            devs = jax.devices()[: cfg.k]
+            assert len(devs) == cfg.k, (
+                f"need {cfg.k} devices for the pid axis, have "
+                f"{len(jax.devices())}"
+            )
+            mesh = Mesh(np.array(devs), (axis,))
+        self.mesh = mesh
+        self.row_sharding = NamedSharding(mesh, P(axis))
+        self.rep_sharding = NamedSharding(mesh, P())
+        self.controller = (
+            DynamicController(
+                DynamicControllerConfig(
+                    k=cfg.k, target_error=cfg.target_error, eta=cfg.eta,
+                    z=cfg.z,
+                )
+            )
+            if cfg.dynamic
+            else None
+        )
+        self._chunk = self._build_chunk()
+        self._repartition = self._build_repartition()
+
+    # ------------------------------------------------------------------ #
+    # state init
+    # ------------------------------------------------------------------ #
+    def init_state(self) -> EngineState:
+        a, cfg = self.a, self.cfg
+        dt = cfg.dtype
+        put_row = lambda x: jax.device_put(x, self.row_sharding)
+        put_rep = lambda x: jax.device_put(x, self.rep_sharding)
+        fw = np.abs(a.f0) * a.w
+        t0 = (fw.reshape(cfg.k, -1).max(axis=1) * 2.0 + 1e-30).astype(dt)
+        self.w = put_row(a.w.astype(dt))
+        self.src_slot = put_row(a.src_slot)
+        self.dst_bucket = put_row(a.dst_bucket)
+        self.dst_slot = put_row(a.dst_slot)
+        self.wgt = put_row(a.wgt.astype(dt))
+        return EngineState(
+            f=put_row(a.f0.astype(dt)),
+            h=put_row(np.zeros(a.f0.shape, dtype=dt)),
+            outbox=put_row(
+                np.zeros((cfg.k, a.n_rows * a.bucket_size), dtype=dt)
+            ),
+            t=put_row(t0),
+            pos_of_bucket=put_rep(a.pos_of_bucket.astype(np.int32)),
+            ops=put_row(np.zeros(cfg.k, dtype=np.int32)),
+            rounds=put_rep(np.zeros((), dtype=np.int32)),
+        )
+
+    # ------------------------------------------------------------------ #
+    # the jitted chunk: cfg.chunk_rounds × (adaptive local rounds + exchange)
+    # ------------------------------------------------------------------ #
+    def _build_chunk(self):
+        cfg, a, axis = self.cfg, self.a, self.axis
+        s = a.bucket_size
+        r_total = a.n_rows
+        b_loc = cfg.buckets_per_dev
+        k = cfg.k
+
+        def local_round(f, h, obox, t_d, ops_d, pos, w, src_slot,
+                        dst_bucket, dst_slot, wgt, my_start):
+            """One frontier round on this device's [B_loc, S] rows.
+
+            ``obox`` is the device's full-length [R*S] outbox.
+            """
+            fw = jnp.abs(f) * w
+            sel = fw > t_d  # [B_loc, S]
+            any_sel = jnp.any(sel)
+            sent = jnp.where(sel, f, jnp.zeros_like(f))
+            h = h + sent
+            f = f - sent
+            row_idx = jnp.arange(f.shape[0])[:, None]
+            msg = sent[row_idx, src_slot] * wgt  # [B_loc, E]
+            flat_dst = pos[dst_bucket] * s + dst_slot  # [B_loc, E]
+            contrib = jax.ops.segment_sum(
+                msg.reshape(-1), flat_dst.reshape(-1),
+                num_segments=r_total * s,
+            )
+            mine = jax.lax.dynamic_slice(
+                contrib, (my_start,), (b_loc * s,)
+            ).reshape(f.shape)
+            f = f + mine
+            contrib = jax.lax.dynamic_update_slice(
+                contrib, jnp.zeros(b_loc * s, contrib.dtype), (my_start,)
+            )
+            obox = obox + contrib
+            t_d = jnp.where(any_sel, t_d, t_d / cfg.gamma)
+            active_edges = sel[row_idx, src_slot] & (wgt != 0)
+            ops_d = ops_d + jnp.sum(active_edges).astype(jnp.int32)
+            return f, h, obox, t_d, ops_d
+
+        def chunk(f, h, outbox, t, pos, ops, rounds, w, src_slot,
+                  dst_bucket, dst_slot, wgt):
+            """shard_map body.  Per-device shards:
+
+            f, h, w, src_slot, ...: [B_loc, S] / [B_loc, E]
+            outbox: [1, R*S]   t, ops: [1]   pos: [R] replicated
+            """
+            idx = jax.lax.axis_index(axis)
+            my_start = idx * b_loc * s
+            obox = outbox[0]
+            t_d = t[0]
+            ops_d = ops[0]
+
+            def body(carry):
+                f, h, obox, t_d, ops_d, i, fire = carry
+                f, h, obox, t_d, ops_d = local_round(
+                    f, h, obox, t_d, ops_d, pos, w, src_slot, dst_bucket,
+                    dst_slot, wgt, my_start)
+                r_k = jnp.sum(jnp.abs(f))
+                s_k = jnp.sum(jnp.abs(obox))
+                fire_local = (s_k > r_k / 2.0).astype(jnp.int32)
+                fire = jax.lax.pmax(fire_local, axis)
+                return f, h, obox, t_d, ops_d, i + 1, fire
+
+            def cond(carry):
+                *_, i, fire = carry
+                return (i < cfg.max_inner) & (fire == 0)
+
+            f, h, obox, t_d, ops_d, i, _fire = jax.lax.while_loop(
+                cond, body,
+                (f, h, obox, t_d, ops_d, jnp.zeros((), jnp.int32),
+                 jnp.zeros((), jnp.int32)),
+            )
+            # ---- fluid exchange: reduce-scatter outbox over devices ----
+            r_before = jnp.sum(jnp.abs(f))
+            delta = jax.lax.psum_scatter(
+                obox.reshape(k, b_loc * s), axis, scatter_dimension=0,
+                tiled=False,
+            ).reshape(f.shape)
+            f = f + delta
+            received = jnp.sum(jnp.abs(delta))
+            t_new = jnp.where(
+                received > 0,
+                jnp.minimum(
+                    jnp.where(
+                        r_before > 0,
+                        t_d * (r_before + received) / r_before,
+                        received,
+                    ),
+                    received,
+                ),
+                t_d,
+            )
+            obox = jnp.zeros_like(obox)
+            return (f, h, obox[None], t_new[None], pos, ops_d[None],
+                    rounds + i)
+
+        pr, pp = P(axis), P()
+        mapped = jax.shard_map(
+            chunk,
+            mesh=self.mesh,
+            in_specs=(pr, pr, pr, pr, pp, pr, pp, pr, pr, pr, pr, pr),
+            out_specs=(pr, pr, pr, pr, pp, pr, pp),
+            check_vma=False,
+        )
+
+        @jax.jit
+        def run_chunk(state: EngineState, w, src_slot, dst_bucket, dst_slot,
+                      wgt):
+            f, h, outbox, t, pos, ops, rounds = (
+                state.f, state.h, state.outbox, state.t,
+                state.pos_of_bucket, state.ops, state.rounds)
+            for _ in range(cfg.chunk_rounds):
+                f, h, outbox, t, pos, ops, rounds = mapped(
+                    f, h, outbox, t, pos, ops, rounds, w, src_slot,
+                    dst_bucket, dst_slot, wgt)
+            new = EngineState(f=f, h=h, outbox=outbox, t=t,
+                              pos_of_bucket=pos, ops=ops, rounds=rounds)
+            stats = {
+                "r": jnp.sum(jnp.abs(f.reshape(cfg.k, -1)), axis=1),
+                "s": jnp.sum(jnp.abs(outbox), axis=1),
+                "residual": jnp.sum(jnp.abs(f)),
+            }
+            return new, stats
+
+        return run_chunk
+
+    # ------------------------------------------------------------------ #
+    # in-graph bucket repartition (dynamic strategy / elastic scaling)
+    # ------------------------------------------------------------------ #
+    def _build_repartition(self):
+        shardings = None
+
+        @jax.jit
+        def repart(state: EngineState, row_perm, new_pos, w, src_slot,
+                   dst_bucket, dst_slot, wgt):
+            take = lambda x: jnp.take(x, row_perm, axis=0)
+            new_state = EngineState(
+                f=take(state.f), h=take(state.h), outbox=state.outbox,
+                t=state.t, pos_of_bucket=new_pos, ops=state.ops,
+                rounds=state.rounds)
+            return (new_state, take(w), take(src_slot), take(dst_bucket),
+                    take(dst_slot), take(wgt))
+
+        def run(state, row_perm, new_pos, w, src_slot, dst_bucket, dst_slot,
+                wgt):
+            out = repart(state, row_perm, new_pos, w, src_slot, dst_bucket,
+                         dst_slot, wgt)
+            # keep row-sharded layout after the gather
+            new_state, *arrs = out
+            arrs = [jax.device_put(x, self.row_sharding) for x in arrs]
+            new_state = EngineState(
+                f=jax.device_put(new_state.f, self.row_sharding),
+                h=jax.device_put(new_state.h, self.row_sharding),
+                outbox=new_state.outbox,
+                t=new_state.t,
+                pos_of_bucket=new_state.pos_of_bucket,
+                ops=new_state.ops,
+                rounds=new_state.rounds,
+            )
+            return (new_state, *arrs)
+
+        return run
+
+    # ------------------------------------------------------------------ #
+    # outer solve loop (host-driven controller, jitted chunks)
+    # ------------------------------------------------------------------ #
+    def solve(self, verbose: bool = False):
+        cfg, a = self.cfg, self.a
+        state = self.init_state()
+        tol = cfg.target_error * cfg.eps
+        row_of_bucket = np.array(a.pos_of_bucket)  # stable id -> current row
+        w, src_slot = self.w, self.src_slot
+        dst_bucket, dst_slot, wgt = self.dst_bucket, self.dst_slot, self.wgt
+        history = []
+        n_moves = 0
+        resid = float("inf")
+        chunk_i = -1
+        for chunk_i in range(cfg.max_chunks):
+            state, stats = self._chunk(state, w, src_slot, dst_bucket,
+                                       dst_slot, wgt)
+            r = np.asarray(stats["r"])
+            s_ = np.asarray(stats["s"])
+            resid = float(np.asarray(stats["residual"])) + float(s_.sum())
+            history.append(
+                (int(np.asarray(state.rounds)), resid, (r + s_).copy())
+            )
+            if verbose:
+                print(f"chunk {chunk_i}: residual={resid:.3e} "
+                      f"rounds={int(np.asarray(state.rounds))}")
+            if resid <= tol:
+                break
+            if self.controller is not None:
+                n_real = cfg.k * (cfg.buckets_per_dev - cfg.headroom)
+                dev_of_bucket = row_of_bucket // cfg.buckets_per_dev
+                sizes = np.bincount(
+                    dev_of_bucket[:n_real], minlength=cfg.k
+                )
+                move = self.controller.update(r + s_, sizes)
+                if move is not None:
+                    perm, new_map, moved = self._plan_move(
+                        row_of_bucket, move.src, move.dst, move.n_move)
+                    if moved:
+                        n_moves += 1
+                        row_of_bucket = new_map
+                        (state, w, src_slot, dst_bucket, dst_slot,
+                         wgt) = self._repartition(
+                            state,
+                            jax.device_put(perm, self.rep_sharding),
+                            jax.device_put(
+                                self._bucket_pos_map(row_of_bucket),
+                                self.rep_sharding,
+                            ),
+                            w, src_slot, dst_bucket, dst_slot, wgt)
+        # ---- gather solution: bucket id's H now lives at its current row --
+        h = np.asarray(state.h).reshape(a.n_rows, a.bucket_size)
+        x = np.zeros(a.n, dtype=np.float64)
+        for bid in range(a.n_rows):
+            row0 = int(a.pos_of_bucket[bid])  # initial row (node map)
+            row1 = int(row_of_bucket[bid])  # current row (data)
+            nodes = a.node_of_slot[row0]
+            valid = nodes >= 0
+            if valid.any():
+                x[nodes[valid]] = h[row1, valid]
+        return x, {
+            "residual": resid,
+            "chunks": chunk_i + 1,
+            "rounds": int(np.asarray(state.rounds)),
+            "moves": n_moves,
+            "history": history,
+            "converged": resid <= tol,
+            "ops": np.asarray(state.ops).copy(),
+        }
+
+    @staticmethod
+    def _bucket_pos_map(row_of_bucket: np.ndarray) -> np.ndarray:
+        return row_of_bucket.astype(np.int32)
+
+    def _plan_move(self, row_of_bucket: np.ndarray, src_dev: int,
+                   dst_dev: int, n_move: int
+                   ) -> Tuple[Optional[np.ndarray], np.ndarray, int]:
+        """Plan a row permutation moving up to ``n_move`` real buckets from
+        ``src_dev`` to free (inert) rows on ``dst_dev``.
+
+        Returns ``(perm, new_row_of_bucket, moved)`` with
+        ``perm[i] = old row whose contents land in new row i``
+        (``jnp.take`` semantics).
+        """
+        cfg = self.cfg
+        b_loc = cfg.buckets_per_dev
+        n_real = cfg.k * (b_loc - cfg.headroom)
+        dev_of_bucket = row_of_bucket // b_loc
+        src_real = np.nonzero(dev_of_bucket[:n_real] == src_dev)[0]
+        inert_ids = np.arange(n_real, row_of_bucket.shape[0])
+        dst_free = inert_ids[dev_of_bucket[inert_ids] == dst_dev]
+        moved = int(min(n_move, max(src_real.size - 1, 0), dst_free.size))
+        if moved == 0:
+            return None, row_of_bucket, 0
+        new_map = row_of_bucket.copy()
+        perm = np.arange(row_of_bucket.shape[0], dtype=np.int32)
+        for bid, q in zip(src_real[-moved:], dst_free[:moved]):
+            p_row, q_row = int(new_map[bid]), int(new_map[q])
+            perm[q_row], perm[p_row] = p_row, q_row
+            new_map[bid], new_map[q] = q_row, p_row
+        return perm, new_map, moved

@@ -1,0 +1,238 @@
+"""Reference D-iteration solvers (single process).
+
+Three tiers, all solving ``X = P X + B`` with spectral radius(P) < 1:
+
+* :func:`solve_sequential` — numpy, paper-exact greedy/threshold schedule,
+  one node per elementary step.  Ground truth for schedule semantics.
+* :func:`solve_frontier_jnp` — the TPU-native *frontier-batched* schedule in
+  pure jnp under ``lax.while_loop``: every node above the threshold diffuses
+  simultaneously (gather -> multiply -> segment-sum), threshold decays by
+  gamma when the frontier empties.  This is the computational pattern the
+  Pallas kernel and the distributed engine implement (DESIGN.md §3).
+* :func:`jacobi_solve` / :func:`power_iteration_cost` — classical baselines
+  the paper normalizes against (one unit = one matrix-vector product).
+
+Convergence/stopping: ``|F|_1 / eps <= target_error`` where
+``eps = 1 - damping`` for PageRank systems and ``eps = 1 - rho`` in general —
+the residual-to-error bound used throughout the paper (§2.2, §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import CSRGraph
+
+__all__ = [
+    "DiterationResult",
+    "solve_sequential",
+    "solve_frontier_jnp",
+    "frontier_step",
+    "jacobi_solve",
+    "residual_l1",
+    "default_weights",
+    "GAMMA",
+]
+
+GAMMA = 1.2  # paper default threshold decay
+
+
+@dataclasses.dataclass
+class DiterationResult:
+    x: np.ndarray  # the solution estimate H
+    residual: float  # |F|_1 at exit
+    n_ops: int  # elementary edge-push operations (paper cost unit)
+    n_diffusions: int  # node diffusions
+    n_sweeps: int  # threshold sweeps / frontier rounds
+    cost_iterations: float  # n_ops / L (paper's normalized iteration count)
+
+
+def default_weights(g: CSRGraph, mode: str = "inv_out") -> np.ndarray:
+    """Node selection weights w_i (paper §2.2.1).
+
+    greedy: w=1; inv_out: 1/#out (paper default); inv_out_in: 1/(#out*#in).
+    """
+    out = np.maximum(g.out_degree(), 1).astype(np.float64)
+    if mode == "greedy":
+        return np.ones(g.n)
+    if mode == "inv_out":
+        return 1.0 / out
+    if mode == "inv_out_in":
+        inn = np.maximum(g.in_degree(), 1).astype(np.float64)
+        return 1.0 / (out * inn)
+    raise ValueError(f"unknown weight mode {mode!r}")
+
+
+def residual_l1(f: np.ndarray) -> float:
+    return float(np.abs(f).sum())
+
+
+# ------------------------------------------------------------------------------
+# Paper-exact sequential schedule (numpy)
+# ------------------------------------------------------------------------------
+def solve_sequential(
+    g: CSRGraph,
+    b: np.ndarray,
+    target_error: float,
+    eps: float,
+    weights: Optional[np.ndarray] = None,
+    gamma: float = GAMMA,
+    max_ops: int = 10**9,
+) -> DiterationResult:
+    """Single-PID D-iteration with the paper's cyclic threshold sweep.
+
+    Elementary op = one edge push (cost model §2.3); dangling diffusions are
+    charged one op.  Stops when |F|_1 <= target_error * eps.
+    """
+    if weights is None:
+        weights = default_weights(g)
+    f = np.array(b, dtype=np.float64)
+    h = np.zeros(g.n, dtype=np.float64)
+    tol = target_error * eps
+    t_k = float(np.abs(f * weights).max()) * 2.0 + 1e-300
+    n_ops = 0
+    n_diff = 0
+    n_sweeps = 0
+    indptr, indices, wgts = g.indptr, g.indices, g.weights
+    while residual_l1(f) > tol and n_ops < max_ops:
+        # one cyclic sweep at the current threshold
+        eligible = np.nonzero(np.abs(f) * weights > t_k)[0]
+        n_sweeps += 1
+        if eligible.size == 0:
+            t_k /= gamma
+            continue
+        for i in eligible:
+            sent = f[i]
+            if abs(sent) * weights[i] <= t_k:
+                continue  # consumed by an earlier diffusion this sweep
+            h[i] += sent
+            f[i] = 0.0
+            lo, hi = indptr[i], indptr[i + 1]
+            if hi > lo:
+                np.add.at(f, indices[lo:hi], sent * wgts[lo:hi])
+                n_ops += hi - lo
+            else:
+                n_ops += 1  # dangling: absorb, charge one op
+            n_diff += 1
+    return DiterationResult(
+        x=h,
+        residual=residual_l1(f),
+        n_ops=n_ops,
+        n_diffusions=n_diff,
+        n_sweeps=n_sweeps,
+        cost_iterations=n_ops / max(g.n_edges, 1),
+    )
+
+
+# ------------------------------------------------------------------------------
+# Frontier-batched schedule (jnp) — the TPU-native formulation
+# ------------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("n",))
+def frontier_step(
+    f: jnp.ndarray,
+    h: jnp.ndarray,
+    t_k: jnp.ndarray,
+    src: jnp.ndarray,
+    dst: jnp.ndarray,
+    wgt: jnp.ndarray,
+    weights: jnp.ndarray,
+    n: int,
+    gamma: float = GAMMA,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One frontier round: diffuse every node with |F_i| w_i > T simultaneously.
+
+    Returns (f, h, t, ops) — ``ops`` counts edge pushes this round (0 edge
+    pushes -> threshold decays by gamma, matching the sweep semantics).
+    All shapes static: (src, dst, wgt) is the fixed edge list.
+    """
+    sel = (jnp.abs(f) * weights) > t_k  # [N] frontier mask
+    sent = jnp.where(sel, f, 0.0)
+    h = h + sent
+    f = f - sent
+    msg = sent[src] * wgt  # [L]
+    delta = jax.ops.segment_sum(msg, dst, num_segments=n)
+    f = f + delta
+    edge_active = sel[src]
+    ops = jnp.sum(edge_active.astype(jnp.int32))
+    any_sel = jnp.any(sel)
+    t_new = jnp.where(any_sel, t_k, t_k / gamma)
+    ops = ops + jnp.where(any_sel, jnp.sum(sel) - jnp.sum(edge_active), 0)
+    return f, h, t_new, ops
+
+
+def solve_frontier_jnp(
+    g: CSRGraph,
+    b: np.ndarray,
+    target_error: float,
+    eps: float,
+    weights: Optional[np.ndarray] = None,
+    gamma: float = GAMMA,
+    max_rounds: int = 1_000_000,
+) -> DiterationResult:
+    """Frontier-batched D-iteration under ``lax.while_loop`` (f64 on CPU)."""
+    if weights is None:
+        weights = default_weights(g)
+    src, dst, wgt = g.edge_list()
+    src = jnp.asarray(src, dtype=jnp.int32)
+    dst = jnp.asarray(dst, dtype=jnp.int32)
+    wgt = jnp.asarray(wgt)
+    wts = jnp.asarray(weights)
+    f0 = jnp.asarray(b)
+    h0 = jnp.zeros_like(f0)
+    tol = target_error * eps
+    t0 = jnp.abs(f0 * wts).max() * 2.0
+    n = g.n
+
+    def cond(state):
+        f, h, t, ops, rounds = state
+        return (jnp.abs(f).sum() > tol) & (rounds < max_rounds)
+
+    def body(state):
+        f, h, t, ops, rounds = state
+        f, h, t, dops = frontier_step(f, h, t, src, dst, wgt, wts, n, gamma)
+        return f, h, t, ops + dops, rounds + 1
+
+    f, h, t, ops, rounds = jax.lax.while_loop(
+        cond, body, (f0, h0, t0, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+    )
+    return DiterationResult(
+        x=np.asarray(h),
+        residual=float(jnp.abs(f).sum()),
+        n_ops=int(ops),
+        n_diffusions=-1,
+        n_sweeps=int(rounds),
+        cost_iterations=float(ops) / max(g.n_edges, 1),
+    )
+
+
+# ------------------------------------------------------------------------------
+# Classical baselines (the paper's comparison unit)
+# ------------------------------------------------------------------------------
+def jacobi_solve(
+    g: CSRGraph,
+    b: np.ndarray,
+    target_error: float,
+    eps: float,
+    max_iters: int = 100_000,
+) -> Tuple[np.ndarray, int]:
+    """Jacobi / power iteration X <- P X + B; returns (x, n_matvecs).
+
+    One matvec costs L edge ops — the unit the paper's ``cost_iterations``
+    is normalized to, so D-iteration cost tables are directly comparable.
+    """
+    src, dst, w = g.edge_list()
+    x = np.zeros(g.n, dtype=np.float64)
+    tol = target_error * eps
+    for it in range(1, max_iters + 1):
+        px = np.zeros(g.n, dtype=np.float64)
+        np.add.at(px, dst, x[src] * w)
+        x_new = px + b
+        if np.abs(x_new - x).sum() <= tol:
+            return x_new, it
+        x = x_new
+    return x, max_iters

@@ -1,0 +1,472 @@
+"""Faithful time-stepped K-PID simulator of the distributed D-iteration.
+
+Implements the paper's §2.2–§2.5 exactly:
+
+* K virtual machines (PIDs); PID_k owns the node set Ω_k and the column block
+  C_k(P).  Per time step each PID executes ``PID_Speed = N/K`` elementary
+  operations (§2.3).
+* Local diffusion (*) pushes fluid only to children INSIDE Ω_k; fluid destined
+  to other PIDs accumulates implicitly in ``C_k(P)([H]_k − [H_old]_k)`` and is
+  delivered at fluid-exchange time (§2.2.1–2.2.2).
+* Threshold schedule: diffuse node i when ``|F_i|·w_i > T_k`` (cyclic sweep);
+  if a full sweep finds nothing, ``T_k := T_k/γ`` (γ = 1.2).  Default weight
+  ``w_i = 1/#out_i``.
+* Exchange trigger ``s_k > r_k/2`` (eq. 1); receivers re-seed
+  ``T_k' := min(T_k'·(r_k'+received)/r_k', received)``.
+* Idle rule ``r_k < max(s_k/10, target_error·ε/K/10)``; unused budget goes to
+  ``count_idle`` (§2.2.1, §2.3).
+* Cost accounting (§2.4): one op per local edge push (min 1 per diffusion);
+  at exchange the sender is charged one op per nonzero entry of
+  ``C_k(P)·ΔH`` computed (once per (dirty node × remote edge)), the receiver
+  one op per node update received; partition reassignment charges the number
+  of moved nodes to both PIDs.  Costs can exceed the per-step budget — the
+  PID is then "frozen" (debt carried into following steps), reproducing the
+  freeze artifact the paper notes under Figures 15–18.
+* Dynamic partition (§2.5.2): the slope-EMA controller from
+  :mod:`repro.core.partition` runs every time step and moves boundary nodes
+  from the slowest PID to the fastest one (cooldown Z).
+
+Two schedule modes:
+
+* ``mode="sequential"`` — paper-exact: nodes within a sweep diffuse one at a
+  time, later diffusions see earlier pushes (Gauss-Seidel flavour).
+* ``mode="batch"`` — all eligible nodes of a sweep diffuse against the
+  start-of-sweep fluid (Jacobi-within-sweep).  Any schedule is a valid
+  D-iteration (the diffusion order is free); this is the vectorized variant
+  the TPU engine uses, kept here so large-N figures are tractable in the
+  simulator too.  Cost accounting is identical per edge.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .graph import CSRGraph
+from .diteration import default_weights, residual_l1
+from .partition import (
+    DynamicController,
+    DynamicControllerConfig,
+    apply_move,
+    cb_partition,
+    uniform_partition,
+)
+
+__all__ = [
+    "SimulatorConfig",
+    "SimResult",
+    "DistributedSimulator",
+    "run_cost_experiment",
+]
+
+GAMMA = 1.2
+
+
+@dataclasses.dataclass
+class SimulatorConfig:
+    k: int
+    target_error: float
+    eps: float  # ε: 1 - damping for PageRank systems (§2.2.1)
+    partition: str = "uniform"  # uniform | cb
+    dynamic: bool = False  # enable §2.5.2 controller
+    mode: str = "sequential"  # sequential | batch
+    weight_mode: str = "inv_out"  # w_i choice (§2.2.1)
+    gamma: float = GAMMA
+    eta: float = 0.5  # slope EMA factor
+    z: int = 10  # reassignment cooldown
+    pid_speed: Optional[int] = None  # default N/K
+    max_steps: int = 2_000_000
+    record_every: int = 1  # metric recording stride (time steps)
+    charge_exchange: bool = True  # False reproduces the *neglected-cost* mode
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class SimResult:
+    h: np.ndarray  # solution estimate
+    converged: bool
+    n_steps: int  # wall time steps
+    cost_iterations: float  # n_steps * PID_Speed / L   (paper's table metric)
+    count_active: np.ndarray  # [K]
+    count_idle: np.ndarray  # [K]
+    n_exchanges: int
+    n_moves: int  # dynamic reassignment events
+    residual: float  # |F|_1 + in-flight at exit
+    # histories, sampled every record_every steps:
+    hist_steps: np.ndarray  # [T] wall step index
+    hist_rs: np.ndarray  # [T, K]  r_k + s_k
+    hist_sizes: np.ndarray  # [T, K] |Ω_k|
+    hist_residual: np.ndarray  # [T] global residual upper bound
+
+    @property
+    def cost_per_pid(self) -> np.ndarray:
+        return (self.count_active + self.count_idle) / max(
+            1, self.count_active.shape[0]
+        )
+
+
+def _edge_ranges(indptr: np.ndarray, nodes: np.ndarray) -> np.ndarray:
+    """Concatenated edge-buffer indices for ``nodes`` (vectorized ranges)."""
+    lens = (indptr[nodes + 1] - indptr[nodes]).astype(np.int64)
+    total = int(lens.sum())
+    if total == 0:
+        return np.empty(0, dtype=np.int64)
+    starts = indptr[nodes].astype(np.int64)
+    offs = np.concatenate([[0], np.cumsum(lens)[:-1]])
+    return np.repeat(starts - offs, lens) + np.arange(total, dtype=np.int64)
+
+
+class DistributedSimulator:
+    """Time-stepped simulation of K PIDs running the D-iteration on (P, B)."""
+
+    def __init__(self, g: CSRGraph, b: np.ndarray, cfg: SimulatorConfig):
+        self.g = g
+        self.cfg = cfg
+        n, k = g.n, cfg.k
+        self.n, self.k = n, k
+        self.speed = cfg.pid_speed or max(1, n // k)
+        self.weights = default_weights(g, cfg.weight_mode)
+
+        # --- partition state -------------------------------------------------
+        if cfg.partition == "uniform":
+            self.sets: List[np.ndarray] = uniform_partition(n, k)
+        elif cfg.partition == "cb":
+            self.sets = cb_partition(g.out_degree(), k)
+        else:
+            raise ValueError(f"unknown partition {cfg.partition!r}")
+        self.owner = np.empty(n, dtype=np.int32)
+        for i, s in enumerate(self.sets):
+            self.owner[s] = i
+
+        # --- fluid state ------------------------------------------------------
+        self.f = np.array(b, dtype=np.float64)
+        self.h = np.zeros(n, dtype=np.float64)
+        # per-PID outbox: pending remote fluid C_k(P)·ΔH, maintained incrementally
+        self.outbox = [np.zeros(n, dtype=np.float64) for _ in range(k)]
+        self.touched: List[List[np.ndarray]] = [[] for _ in range(k)]
+        self.s_abs = np.zeros(k, dtype=np.float64)  # |outbox_k|_1 (≥, exact for P≥0)
+        self.dirty = np.zeros(n, dtype=bool)  # node diffused since last exchange
+        self.pending_send_cost = np.zeros(k, dtype=np.int64)
+
+        # --- scheduling state -------------------------------------------------
+        t0 = np.abs(self.f) * self.weights
+        self.t_k = np.array(
+            [
+                (t0[s].max() * 2.0 if s.size else 1.0) + 1e-300
+                for s in self.sets
+            ]
+        )
+        self.debt = np.zeros(k, dtype=np.float64)  # frozen-PID carryover
+
+        # --- counters ---------------------------------------------------------
+        self.count_active = np.zeros(k, dtype=np.int64)
+        self.count_idle = np.zeros(k, dtype=np.int64)
+        self.n_exchanges = 0
+        self.n_moves = 0
+
+        # --- dynamic controller ----------------------------------------------
+        self.controller = (
+            DynamicController(
+                DynamicControllerConfig(
+                    k=k, target_error=cfg.target_error, eta=cfg.eta, z=cfg.z
+                )
+            )
+            if cfg.dynamic
+            else None
+        )
+
+        self.tol = cfg.target_error * cfg.eps
+
+    # --------------------------------------------------------------------- #
+    # local quantities
+    # --------------------------------------------------------------------- #
+    def r_of(self, k: int) -> float:
+        s = self.sets[k]
+        return float(np.abs(self.f[s]).sum()) if s.size else 0.0
+
+    def global_residual(self) -> float:
+        return residual_l1(self.f) + float(self.s_abs.sum())
+
+    def _idle(self, k: int, r_k: float) -> bool:
+        thr = max(
+            self.s_abs[k] / 10.0,
+            self.cfg.target_error * self.cfg.eps / self.k / 10.0,
+        )
+        return r_k < thr
+
+    # --------------------------------------------------------------------- #
+    # local diffusion (one PID, one time step)
+    # --------------------------------------------------------------------- #
+    def _diffuse_node(self, k: int, i: int) -> int:
+        """Paper-exact single-node diffusion; returns ops charged now."""
+        g, f, owner = self.g, self.f, self.owner
+        sent = f[i]
+        self.h[i] += sent
+        f[i] = 0.0
+        lo, hi = g.indptr[i], g.indptr[i + 1]
+        ops = 0
+        if hi > lo:
+            dst = g.indices[lo:hi]
+            wgt = g.weights[lo:hi]
+            local = owner[dst] == k
+            n_local = int(local.sum())
+            if n_local:
+                np.add.at(f, dst[local], sent * wgt[local])
+                ops += n_local
+            n_remote = (hi - lo) - n_local
+            if n_remote:
+                rdst = dst[~local]
+                np.add.at(self.outbox[k], rdst, sent * wgt[~local])
+                self.s_abs[k] += np.abs(sent * wgt[~local]).sum()
+                self.touched[k].append(rdst.astype(np.int64))
+                if not self.dirty[i]:
+                    self.pending_send_cost[k] += n_remote
+        if ops == 0:
+            ops = 1  # dangling / all-remote: charge the diffusion itself
+        self.dirty[i] = True
+        return ops
+
+    def _diffuse_batch(self, k: int, sel: np.ndarray) -> int:
+        """Jacobi-within-sweep diffusion of all ``sel`` nodes at once."""
+        g, f, owner = self.g, self.f, self.owner
+        sent = f[sel].copy()
+        self.h[sel] += sent
+        f[sel] = 0.0
+        eidx = _edge_ranges(g.indptr, sel)
+        ops = 0
+        if eidx.size:
+            dst = g.indices[eidx]
+            lens = (g.indptr[sel + 1] - g.indptr[sel]).astype(np.int64)
+            sent_per_edge = np.repeat(sent, lens)
+            msg = sent_per_edge * g.weights[eidx]
+            local = owner[dst] == k
+            if local.any():
+                np.add.at(f, dst[local], msg[local])
+                ops += int(local.sum())
+            remote = ~local
+            if remote.any():
+                rdst = dst[remote]
+                np.add.at(self.outbox[k], rdst, msg[remote])
+                self.s_abs[k] += np.abs(msg[remote]).sum()
+                self.touched[k].append(rdst.astype(np.int64))
+                # exchange cost: one per remote edge of newly-dirty nodes
+                newly = ~self.dirty[sel]
+                if newly.any():
+                    node_of_edge = np.repeat(
+                        np.arange(sel.size, dtype=np.int64), lens
+                    )
+                    rem_per_node = np.bincount(
+                        node_of_edge[remote], minlength=sel.size
+                    )
+                    self.pending_send_cost[k] += int(rem_per_node[newly].sum())
+        # nodes with zero local pushes still cost ≥1 each
+        lens_all = (g.indptr[sel + 1] - g.indptr[sel]).astype(np.int64)
+        dangling_like = int((lens_all == 0).sum())
+        ops += dangling_like
+        self.dirty[sel] = True
+        return max(ops, sel.size)  # each diffusion costs at least one op
+
+    def _local_step(self, k: int) -> None:
+        """One time step of PID k: sweeps under the threshold schedule."""
+        budget = self.speed + self.debt[k]
+        self.debt[k] = 0.0
+        cfg = self.cfg
+        omega = self.sets[k]
+        if omega.size == 0:
+            self.count_idle[k] += int(max(budget, 0))
+            return
+        guard = 0
+        while budget > 0:
+            guard += 1
+            r_k = self.r_of(k)
+            if self._idle(k, r_k) or guard > 10_000:
+                self.count_idle[k] += int(budget)
+                return
+            fw = np.abs(self.f[omega]) * self.weights[omega]
+            elig = omega[fw > self.t_k[k]]
+            if elig.size == 0:
+                self.t_k[k] /= cfg.gamma
+                continue
+            if cfg.mode == "batch":
+                # budget-limit by cumulative per-node cost (≥ 1 each)
+                lens = np.maximum(
+                    (self.g.indptr[elig + 1] - self.g.indptr[elig]), 1
+                ).astype(np.int64)
+                take = int(np.searchsorted(np.cumsum(lens), budget) + 1)
+                sel = elig[:take]
+                ops = self._diffuse_batch(k, sel)
+                self.count_active[k] += ops
+                budget -= ops
+            else:
+                for i in elig:
+                    if abs(self.f[i]) * self.weights[i] <= self.t_k[k]:
+                        continue  # consumed earlier this sweep
+                    ops = self._diffuse_node(k, int(i))
+                    self.count_active[k] += ops
+                    budget -= ops
+                    if budget <= 0:
+                        break
+        self.debt[k] = min(budget, 0.0)  # freeze: negative budget carries over
+
+    # --------------------------------------------------------------------- #
+    # fluid exchange (§2.2.2)
+    # --------------------------------------------------------------------- #
+    def _exchange(self, k: int) -> None:
+        if not self.touched[k]:
+            self.s_abs[k] = 0.0
+            return
+        idx = np.unique(np.concatenate(self.touched[k]))
+        vals = self.outbox[k][idx]
+        nz = vals != 0.0
+        idx, vals = idx[nz], vals[nz]
+        self.outbox[k][:] = 0.0  # cheap O(N) but only at exchange
+        self.touched[k] = []
+        self.s_abs[k] = 0.0
+        # release dirty flags of MY nodes (ΔH baseline resets: H_old := H)
+        mine = self.owner == k
+        self.dirty &= ~mine
+        if self.cfg.charge_exchange:
+            self.count_active[k] += int(self.pending_send_cost[k])
+            self.debt[k] -= float(self.pending_send_cost[k])
+        self.pending_send_cost[k] = 0
+        if idx.size == 0:
+            return
+        self.n_exchanges += 1
+        # deliver to receivers
+        recv_owner = self.owner[idx]
+        self.f[idx] += vals
+        for kp in np.unique(recv_owner):
+            if kp == k:
+                # node moved to us since the push was queued: now local fluid
+                continue
+            m = recv_owner == kp
+            received = float(np.abs(vals[m]).sum())
+            n_updates = int(m.sum())
+            if self.cfg.charge_exchange:
+                self.count_active[kp] += n_updates
+                self.debt[kp] -= float(n_updates)
+            r_kp = self.r_of(int(kp))
+            if received > 0.0:
+                if r_kp > 0.0:
+                    self.t_k[kp] = min(
+                        self.t_k[kp] * (r_kp + received) / r_kp, received
+                    )
+                else:
+                    self.t_k[kp] = received
+
+    # --------------------------------------------------------------------- #
+    # dynamic partition (§2.5.2)
+    # --------------------------------------------------------------------- #
+    def _repartition(self) -> None:
+        rs = np.array(
+            [self.r_of(i) + self.s_abs[i] for i in range(self.k)]
+        )
+        sizes = np.array([s.size for s in self.sets], dtype=np.int64)
+        move = self.controller.update(rs, sizes)
+        if move is None:
+            return
+        self.sets, moved = apply_move(self.sets, move)
+        if moved == 0:
+            return
+        self.n_moves += 1
+        self.owner[self.sets[move.dst]] = move.dst
+        # §2.4: charge the number of re-affected nodes to both PIDs
+        self.count_active[move.src] += moved
+        self.count_active[move.dst] += moved
+        self.debt[move.src] -= moved
+        self.debt[move.dst] -= moved
+        # thresholds: receiving PID may now hold hotter fluid than its T
+        s_dst = self.sets[move.dst]
+        if s_dst.size:
+            mx = float((np.abs(self.f[s_dst]) * self.weights[s_dst]).max())
+            if mx > 0:
+                self.t_k[move.dst] = min(self.t_k[move.dst], mx * 1.0001)
+
+    # --------------------------------------------------------------------- #
+    # main loop
+    # --------------------------------------------------------------------- #
+    def run(self) -> SimResult:
+        cfg = self.cfg
+        hist_steps: List[int] = []
+        hist_rs: List[np.ndarray] = []
+        hist_sizes: List[np.ndarray] = []
+        hist_res: List[float] = []
+        step = 0
+        converged = False
+        while step < cfg.max_steps:
+            step += 1
+            for k in range(self.k):
+                self._local_step(k)
+            # exchange check (eq. 1): s_k > r_k / 2
+            for k in range(self.k):
+                if self.s_abs[k] > 0 and self.s_abs[k] > self.r_of(k) / 2.0:
+                    self._exchange(k)
+            if self.controller is not None:
+                self._repartition()
+            if step % cfg.record_every == 0:
+                hist_steps.append(step)
+                hist_rs.append(
+                    np.array(
+                        [self.r_of(i) + self.s_abs[i] for i in range(self.k)]
+                    )
+                )
+                hist_sizes.append(
+                    np.array([s.size for s in self.sets], dtype=np.int64)
+                )
+                hist_res.append(self.global_residual())
+            if self.global_residual() <= self.tol:
+                converged = True
+                break
+        return SimResult(
+            h=self.h.copy(),
+            converged=converged,
+            n_steps=step,
+            cost_iterations=step * self.speed / max(1, self.g.n_edges),
+            count_active=self.count_active.copy(),
+            count_idle=self.count_idle.copy(),
+            n_exchanges=self.n_exchanges,
+            n_moves=self.n_moves,
+            residual=self.global_residual(),
+            hist_steps=np.array(hist_steps, dtype=np.int64),
+            hist_rs=np.array(hist_rs) if hist_rs else np.zeros((0, self.k)),
+            hist_sizes=(
+                np.array(hist_sizes) if hist_sizes else np.zeros((0, self.k))
+            ),
+            hist_residual=np.array(hist_res, dtype=np.float64),
+        )
+
+
+def run_cost_experiment(
+    g: CSRGraph,
+    b: np.ndarray,
+    eps: float,
+    ks: Tuple[int, ...] = (1, 2, 4, 8, 16),
+    partitions: Tuple[str, ...] = ("uniform", "cb"),
+    dynamics: Tuple[bool, ...] = (False, True),
+    target_error: Optional[float] = None,
+    mode: str = "sequential",
+    max_steps: int = 2_000_000,
+) -> Dict[Tuple[int, str, bool], float]:
+    """Paper Tables 1–3 protocol: normalized cost for each (K, partition, dyn).
+
+    ``target_error`` defaults to 1/N as in §3.1.
+    """
+    te = target_error if target_error is not None else 1.0 / g.n
+    out: Dict[Tuple[int, str, bool], float] = {}
+    for k in ks:
+        for part in partitions:
+            for dyn in dynamics:
+                cfg = SimulatorConfig(
+                    k=k,
+                    target_error=te,
+                    eps=eps,
+                    partition=part,
+                    dynamic=dyn,
+                    mode=mode,
+                    max_steps=max_steps,
+                    record_every=50,
+                )
+                res = DistributedSimulator(g, b, cfg).run()
+                out[(k, part, dyn)] = res.cost_iterations
+    return out

@@ -1,0 +1,9 @@
+from .pipeline import (  # noqa: F401
+    build_halo_batch,
+    criteo_like_batch,
+    lm_token_batch,
+    make_gnn_batch,
+    molecule_batch,
+    build_triplets,
+    NeighborSampler,
+)

@@ -1,0 +1,338 @@
+"""Deterministic synthetic data pipelines for every model family.
+
+Everything is seeded-by-step so a restarted job regenerates the exact batch
+stream (checkpoint/restart reproducibility without storing data offsets).
+
+* LM: zipf-distributed token streams (power-law unigram like web text).
+* GNN: padded static-shape graph batches from repro.core.graph generators,
+  a real fanout neighbor sampler for the minibatch_lg shape, and the
+  DimeNet triplet builder (capped triplets per edge).
+* RecSys: criteo-like power-law categorical ids + click labels.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.graph import CSRGraph
+
+__all__ = [
+    "lm_token_batch",
+    "make_gnn_batch",
+    "molecule_batch",
+    "build_triplets",
+    "criteo_like_batch",
+    "NeighborSampler",
+]
+
+
+# --------------------------------------------------------------------------- #
+# LM
+# --------------------------------------------------------------------------- #
+def lm_token_batch(step: int, batch: int, seq: int, vocab: int,
+                   seed: int = 0) -> Dict[str, np.ndarray]:
+    """Zipf tokens; labels = next token (teacher forcing)."""
+    rng = np.random.default_rng(seed * 1_000_003 + step)
+    toks = rng.zipf(1.3, size=(batch, seq + 1)) % vocab
+    toks = toks.astype(np.int32)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+# --------------------------------------------------------------------------- #
+# GNN
+# --------------------------------------------------------------------------- #
+def build_triplets(src: np.ndarray, dst: np.ndarray, n_nodes: int,
+                   max_per_edge: int = 8, seed: int = 0
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """DimeNet triplets: for edge e=(j->i), incoming edges f=(k->j), k != i.
+
+    Capped at ``max_per_edge`` incoming edges per target edge (cutoff
+    neighborhoods; DESIGN.md §4 records the cap).  Returns (trip_e, trip_f).
+    """
+    rng = np.random.default_rng(seed)
+    e_count = src.shape[0]
+    # incoming edge ids per node (f = (k -> j) indexed by dst == j)
+    order = np.argsort(dst, kind="stable")
+    sorted_dst = dst[order]
+    starts = np.searchsorted(sorted_dst, np.arange(n_nodes))
+    ends = np.searchsorted(sorted_dst, np.arange(n_nodes) + 1)
+    trip_e, trip_f = [], []
+    for e in range(e_count):
+        j = src[e]
+        lo, hi = starts[j], ends[j]
+        if hi <= lo:
+            continue
+        incoming = order[lo:hi]
+        incoming = incoming[src[incoming] != dst[e]]  # k != i
+        if incoming.size > max_per_edge:
+            incoming = rng.choice(incoming, max_per_edge, replace=False)
+        trip_e.extend([e] * incoming.size)
+        trip_f.extend(incoming.tolist())
+    if not trip_e:
+        trip_e, trip_f = [0], [0]
+    return (np.asarray(trip_e, np.int32), np.asarray(trip_f, np.int32))
+
+
+def make_gnn_batch(
+    g: CSRGraph,
+    d_feat: int,
+    n_classes: int = 0,
+    with_pos: bool = False,
+    with_triplets: bool = False,
+    max_trip_per_edge: int = 8,
+    d_out: int = 1,
+    seed: int = 0,
+) -> Dict[str, np.ndarray]:
+    """Full-graph batch with features/labels (static shapes, no padding
+    needed — the graph itself is the batch)."""
+    rng = np.random.default_rng(seed)
+    src, dst, _ = g.edge_list()
+    batch = {
+        "x": rng.standard_normal((g.n, d_feat)).astype(np.float32),
+        "src": src.astype(np.int32),
+        "dst": dst.astype(np.int32),
+        "node_mask": np.ones(g.n, np.float32),
+        "edge_mask": np.ones(src.shape[0], np.float32),
+    }
+    if n_classes:
+        batch["labels"] = rng.integers(0, n_classes, g.n).astype(np.int32)
+    else:
+        batch["labels"] = rng.standard_normal((g.n, d_out)).astype(np.float32)
+    if with_pos:
+        batch["pos"] = rng.standard_normal((g.n, 3)).astype(np.float32)
+        batch["z"] = rng.integers(0, 10, g.n).astype(np.int32)
+    if with_triplets:
+        te, tf = build_triplets(src, dst, g.n, max_trip_per_edge, seed)
+        batch["trip_e"], batch["trip_f"] = te, tf
+        batch["trip_mask"] = np.ones(te.shape[0], np.float32)
+    return batch
+
+
+def molecule_batch(
+    n_graphs: int,
+    nodes_per_graph: int = 30,
+    edges_per_graph: int = 64,
+    d_feat: int = 16,
+    with_triplets: bool = False,
+    graph_labels: bool = True,
+    seed: int = 0,
+) -> Dict[str, np.ndarray]:
+    """Batched small graphs (molecule shape): block-diagonal edge list."""
+    rng = np.random.default_rng(seed)
+    n = n_graphs * nodes_per_graph
+    e = n_graphs * edges_per_graph
+    src = np.concatenate([
+        rng.integers(0, nodes_per_graph, edges_per_graph) + i * nodes_per_graph
+        for i in range(n_graphs)
+    ]).astype(np.int32)
+    dst = np.concatenate([
+        rng.integers(0, nodes_per_graph, edges_per_graph) + i * nodes_per_graph
+        for i in range(n_graphs)
+    ]).astype(np.int32)
+    batch = {
+        "x": rng.standard_normal((n, d_feat)).astype(np.float32),
+        "pos": (rng.standard_normal((n, 3)) * 2.0).astype(np.float32),
+        "z": rng.integers(0, 10, n).astype(np.int32),
+        "src": src,
+        "dst": dst,
+        "node_mask": np.ones(n, np.float32),
+        "edge_mask": np.ones(e, np.float32),
+        "graph_ids": np.repeat(np.arange(n_graphs, dtype=np.int32),
+                               nodes_per_graph),
+        "labels": rng.standard_normal(n_graphs).astype(np.float32)
+        if graph_labels else rng.standard_normal((n, 1)).astype(np.float32),
+    }
+    if with_triplets:
+        te, tf = build_triplets(src, dst, n, 8, seed)
+        batch["trip_e"], batch["trip_f"] = te, tf
+        batch["trip_mask"] = np.ones(te.shape[0], np.float32)
+    return batch
+
+
+@dataclasses.dataclass
+class NeighborSampler:
+    """GraphSAGE-style fanout sampler over a CSR graph (minibatch_lg shape).
+
+    Produces padded, static-shape subgraph batches: seed nodes + per-hop
+    sampled neighbors, with a relabelled edge list (messages flow sampled
+    neighbor -> target).  Real systems sample on host CPU exactly like this.
+    """
+
+    g: CSRGraph
+    fanouts: Tuple[int, ...] = (15, 10)
+    seed: int = 0
+
+    def sample(self, batch_nodes: int, step: int, d_feat: int,
+               n_classes: int = 0) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng(self.seed * 99991 + step)
+        seeds = rng.integers(0, self.g.n, batch_nodes).astype(np.int64)
+        layers = [seeds]
+        edges_src, edges_dst = [], []
+        frontier = seeds
+        for fanout in self.fanouts:
+            # sample `fanout` out-neighbors of each frontier node
+            deg = (self.g.indptr[frontier + 1]
+                   - self.g.indptr[frontier]).astype(np.int64)
+            picks = rng.integers(0, np.maximum(deg, 1),
+                                 (fanout, frontier.shape[0]))
+            nbr = self.g.indices[
+                np.minimum(self.g.indptr[frontier] + picks,
+                           np.maximum(self.g.indptr[frontier + 1] - 1, 0))
+            ].astype(np.int64)
+            valid = (deg > 0)[None, :].repeat(fanout, 0)
+            # edges: neighbor -> frontier node (messages toward seeds)
+            edges_src.append(nbr.T.reshape(-1))
+            edges_dst.append(np.repeat(frontier, fanout))
+            mask = valid.T.reshape(-1)
+            edges_src[-1] = edges_src[-1][mask]
+            edges_dst[-1] = edges_dst[-1][mask]
+            frontier = np.unique(nbr[valid.T.T].reshape(-1)) \
+                if valid.any() else frontier
+            layers.append(frontier)
+        all_src = np.concatenate(edges_src)
+        all_dst = np.concatenate(edges_dst)
+        nodes = np.unique(np.concatenate([all_src, all_dst, seeds]))
+        relabel = {int(v): i for i, v in enumerate(nodes)}
+        src_l = np.array([relabel[int(v)] for v in all_src], np.int32)
+        dst_l = np.array([relabel[int(v)] for v in all_dst], np.int32)
+        # pad to static shapes
+        n_pad = self._node_budget(batch_nodes)
+        e_pad = self._edge_budget(batch_nodes)
+        n_real, e_real = nodes.shape[0], src_l.shape[0]
+        n_keep = min(n_real, n_pad)
+        e_keep_mask = (src_l < n_keep) & (dst_l < n_keep)
+        src_l, dst_l = src_l[e_keep_mask], dst_l[e_keep_mask]
+        e_keep = min(src_l.shape[0], e_pad)
+        rng2 = np.random.default_rng(step)
+        x = rng2.standard_normal((n_pad, d_feat)).astype(np.float32)
+        batch = {
+            "x": x,
+            "src": np.zeros(e_pad, np.int32),
+            "dst": np.zeros(e_pad, np.int32),
+            "node_mask": np.zeros(n_pad, np.float32),
+            "edge_mask": np.zeros(e_pad, np.float32),
+        }
+        batch["src"][:e_keep] = src_l[:e_keep]
+        batch["dst"][:e_keep] = dst_l[:e_keep]
+        batch["node_mask"][:n_keep] = 1.0
+        batch["edge_mask"][:e_keep] = 1.0
+        if n_classes:
+            batch["labels"] = rng2.integers(
+                0, n_classes, n_pad).astype(np.int32)
+        else:
+            batch["labels"] = rng2.standard_normal((n_pad, 1)).astype(
+                np.float32)
+        return batch
+
+    def _node_budget(self, batch_nodes: int) -> int:
+        tot = batch_nodes
+        f = batch_nodes
+        for fanout in self.fanouts:
+            f = f * fanout
+            tot += f
+        return tot
+
+    def _edge_budget(self, batch_nodes: int) -> int:
+        tot = 0
+        f = batch_nodes
+        for fanout in self.fanouts:
+            tot += f * fanout
+            f = f * fanout
+        return tot
+
+
+def build_halo_batch(
+    g: CSRGraph,
+    n_shards: int,
+    d_feat: int,
+    n_classes: int = 0,
+    seed: int = 0,
+    b_max: Optional[int] = None,
+    e_cap: Optional[int] = None,
+) -> Dict[str, np.ndarray]:
+    """Locality-partitioned GNN batch (models/gnn._forward_gin_halo).
+
+    Nodes are contiguously sharded (the paper's uniform Ω_k); each edge is
+    assigned to its destination's shard; per shard, the non-local source
+    nodes become *halo* slots addressed as
+    ``N_loc + owner(src)·B_max + publish_pos(src)``.
+    """
+    rng = np.random.default_rng(seed)
+    src, dst, _ = g.edge_list()
+    n_pad = -(-g.n // n_shards) * n_shards
+    n_loc = n_pad // n_shards
+    own_src = src // n_loc
+    own_dst = dst // n_loc
+
+    # publish lists: for each shard, the local nodes remote shards reference
+    remote = own_src != own_dst
+    pub_nodes = np.unique(src[remote])  # global ids, sorted
+    pub_owner = pub_nodes // n_loc
+    # position of each published node within its owner's publish list
+    pub_pos = np.zeros(pub_nodes.shape[0], dtype=np.int64)
+    counts = np.bincount(pub_owner, minlength=n_shards)
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    pub_pos = np.arange(pub_nodes.shape[0]) - starts[pub_owner]
+    bmax = int(counts.max()) if b_max is None else b_max
+    assert counts.max() <= bmax, (counts.max(), bmax)
+    boundary = np.zeros((n_shards, bmax), dtype=np.int32)
+    for s in range(n_shards):
+        ids = pub_nodes[pub_owner == s] % n_loc
+        boundary[s, : ids.shape[0]] = ids
+    # halo slot of a published global node id
+    halo_slot = {int(v): int(n_loc + o * bmax + p)
+                 for v, o, p in zip(pub_nodes, pub_owner, pub_pos)}
+
+    # per-shard edge buffers (edges live with their destination's shard)
+    order = np.argsort(own_dst, kind="stable")
+    src_o, dst_o = src[order], dst[order]
+    own_o = own_dst[order]
+    per_shard = np.bincount(own_o, minlength=n_shards)
+    ecap = int(per_shard.max()) if e_cap is None else e_cap
+    assert per_shard.max() <= ecap, (per_shard.max(), ecap)
+    src_slot = np.zeros((n_shards, ecap), dtype=np.int32)
+    dst_local = np.zeros((n_shards, ecap), dtype=np.int32)
+    edge_mask = np.zeros((n_shards, ecap), dtype=np.float32)
+    estarts = np.concatenate([[0], np.cumsum(per_shard)[:-1]])
+    for s in range(n_shards):
+        lo, hi = estarts[s], estarts[s] + per_shard[s]
+        es, ed = src_o[lo:hi], dst_o[lo:hi]
+        local = (es // n_loc) == s
+        slots = np.where(
+            local, es % n_loc,
+            np.array([halo_slot.get(int(v), n_loc) for v in es]),
+        )
+        src_slot[s, : hi - lo] = slots
+        dst_local[s, : hi - lo] = ed % n_loc
+        edge_mask[s, : hi - lo] = 1.0
+    batch = {
+        "x": rng.standard_normal((n_pad, d_feat)).astype(np.float32),
+        "src_slot": src_slot.reshape(-1),
+        "dst_local": dst_local.reshape(-1),
+        "edge_mask": edge_mask.reshape(-1),
+        "boundary": boundary,
+        "node_mask": (np.arange(n_pad) < g.n).astype(np.float32),
+    }
+    if n_classes:
+        batch["labels"] = rng.integers(0, n_classes, n_pad).astype(np.int32)
+    else:
+        batch["labels"] = rng.standard_normal((n_pad, 1)).astype(np.float32)
+    return batch
+
+
+# --------------------------------------------------------------------------- #
+# RecSys
+# --------------------------------------------------------------------------- #
+def criteo_like_batch(step: int, batch: int, n_fields: int,
+                      vocab_per_field: int, seed: int = 0
+                      ) -> Dict[str, np.ndarray]:
+    """Power-law categorical ids (hot head, long tail) + click labels."""
+    rng = np.random.default_rng(seed * 7_777_777 + step)
+    ids = (rng.zipf(1.2, size=(batch, n_fields)) - 1) % vocab_per_field
+    ctr_logit = (ids[:, 0] % 17 - 8) / 4.0
+    labels = (rng.random(batch) < 1 / (1 + np.exp(-ctr_logit))).astype(
+        np.int32
+    )
+    return {"ids": ids.astype(np.int32), "labels": labels}

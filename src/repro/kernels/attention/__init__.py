@@ -1,0 +1,3 @@
+from .ops import flash_attention  # noqa: F401
+from .ref import attention_ref  # noqa: F401
+from .kernel import flash_attention_pallas  # noqa: F401

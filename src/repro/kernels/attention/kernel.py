@@ -1,0 +1,118 @@
+"""Blockwise causal flash attention with GQA (Pallas TPU).
+
+Online-softmax attention (FlashAttention-style, adapted to the TPU memory
+hierarchy): the [Sq, Sk] score matrix is never materialised in HBM; per
+(batch, q-head, q-block) the kernel streams k/v blocks through VMEM keeping
+running max ``m``, normalizer ``l`` and the [bq, dh] accumulator in VMEM
+scratch across the innermost kv grid dimension.  GQA is expressed purely in
+the k/v BlockSpec index maps (q head h reads kv head ``h // group``), so no
+KV replication ever hits HBM.
+
+Grid: (batch, q_heads, n_q_blocks, n_kv_blocks), kv innermost (sequential on
+TPU, which is what lets scratch carry state between kv steps).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+NEG_INF = -1.0e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, bq: int, bk: int, n_kv: int):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]  # [bq, dh]
+    k = k_ref[0, 0]  # [bk, dh]
+    v = v_ref[0, 0]  # [bk, dh]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [bq, bk]
+
+    if causal:
+        iq = pl.program_id(2)
+        q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = q_pos >= k_pos
+        s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]  # [bq, 1]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    if causal:
+        p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)  # [bq, 1]
+    l_ref[...] = alpha * l_ref[...] + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ik == n_kv - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "bq", "bk", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,  # [B, Hq, Sq, Dh]
+    k: jax.Array,  # [B, Hkv, Sk, Dh]
+    v: jax.Array,  # [B, Hkv, Sk, Dh]
+    *,
+    causal: bool = True,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, sq, dh = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    nq, nk = sq // bq, sk // bk
+    scale = 1.0 / (dh**0.5)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, bq=bq, bk=bk, n_kv=nk
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dh), lambda b_, h, iq, ik: (b_, h, iq, 0)),
+            pl.BlockSpec(
+                (1, 1, bk, dh), lambda b_, h, iq, ik: (b_, h // group, ik, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, bk, dh), lambda b_, h, iq, ik: (b_, h // group, ik, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, bq, dh), lambda b_, h, iq, ik: (b_, h, iq, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,56 @@
+"""Public attention wrapper: pads sequence, picks kernel vs oracle."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+from .ref import attention_ref
+
+__all__ = ["flash_attention"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "bq", "bk", "use_pallas", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # [B, Hq, Sq, Dh]
+    k: jax.Array,  # [B, Hkv, Sk, Dh]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    bq: int = 128,
+    bk: int = 128,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if not use_pallas:
+        return attention_ref(q, k, v, causal=causal)
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, hq, sq, dh = q.shape
+    sk = k.shape[2]
+    bq_ = min(bq, sq) if sq % bq else bq
+    bk_ = min(bk, sk) if sk % bk else bk
+    sq_pad = -(-sq // bq_) * bq_
+    sk_pad = -(-sk // bk_) * bk_
+    if sq_pad != sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, sq_pad - sq), (0, 0)))
+    if sk_pad != sk:
+        # pad keys AFTER the real ones; causal mask with q_pos>=k_pos keeps
+        # padded keys unattended for real queries only when sq==sk; for
+        # safety we park padded keys at +inf distance via masking in-kernel
+        # (causal) or slice below (bidirectional exactness requires no pad).
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, sk_pad - sk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, sk_pad - sk), (0, 0)))
+    out = flash_attention_pallas(
+        q, k, v, causal=causal, bq=bq_, bk=bk_, interpret=interpret
+    )
+    return out[:, :, :sq]

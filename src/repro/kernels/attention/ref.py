@@ -1,0 +1,25 @@
+"""Pure-jnp oracle: exact softmax attention with GQA + causal mask."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def attention_ref(q, k, v, causal: bool = True):
+    b, hq, sq, dh = q.shape
+    _, hkv, sk, _ = k.shape
+    group = hq // hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32)
+    s = s / (dh**0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)

@@ -1,0 +1,3 @@
+from .ops import BsrMatrix, bsr_spmm, prepare_bsr  # noqa: F401
+from .ref import bsr_spmm_ref, csr_to_bsr, dense_to_bsr  # noqa: F401
+from .kernel import bsr_spmm_pallas  # noqa: F401

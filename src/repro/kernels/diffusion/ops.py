@@ -1,0 +1,83 @@
+"""Public jit'd wrapper for the BSR diffusion push.
+
+Chooses the Pallas kernel on TPU and interpret-mode / jnp oracle elsewhere,
+and masks never-visited output row blocks (the kernel leaves them
+uninitialised by design — revisiting-output accumulation only touches rows
+that own at least one block).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import bsr_spmm_pallas
+from .ref import bsr_spmm_ref, csr_to_bsr
+
+__all__ = ["bsr_spmm", "prepare_bsr", "BsrMatrix"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+class BsrMatrix:
+    """Host-prepared BSR operand: static structure + device arrays."""
+
+    def __init__(self, blocks, block_row, block_col, n_row_blocks, bs):
+        self.blocks = jnp.asarray(blocks)
+        self.block_row = jnp.asarray(block_row, dtype=jnp.int32)
+        self.block_col = jnp.asarray(block_col, dtype=jnp.int32)
+        self.n_row_blocks = int(n_row_blocks)
+        self.bs = int(bs)
+        occ = np.zeros(n_row_blocks, dtype=bool)
+        occ[np.asarray(block_row)] = True
+        self.row_occupied = jnp.asarray(occ)
+
+    @property
+    def n_blocks(self) -> int:
+        return int(self.blocks.shape[0])
+
+    @property
+    def density(self) -> float:
+        return self.n_blocks / max(self.n_row_blocks**2, 1)
+
+
+def prepare_bsr(indptr, indices, weights, n, bs=128) -> BsrMatrix:
+    blocks, br, bc, nrb = csr_to_bsr(
+        np.asarray(indptr), np.asarray(indices), np.asarray(weights), n, bs
+    )
+    return BsrMatrix(blocks, br, bc, nrb, bs)
+
+
+def bsr_spmm(
+    m: BsrMatrix,
+    x: jax.Array,  # [n_col_blocks*bs] or [n_col_blocks*bs, C]
+    *,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """delta = P @ x with P in BSR form.  Returns same leading shape as x."""
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[:, None]
+    c = x.shape[1]
+    xt = x.reshape(-1, m.bs, c)
+    if use_pallas is None:
+        use_pallas = True
+    if interpret is None:
+        interpret = not _on_tpu()
+    if use_pallas:
+        out = bsr_spmm_pallas(
+            m.blocks, m.block_row, m.block_col, xt, m.n_row_blocks,
+            bs=m.bs, interpret=interpret,
+        )
+        out = jnp.where(m.row_occupied[:, None, None], out, 0.0)
+    else:
+        out = bsr_spmm_ref(
+            m.blocks, m.block_row, m.block_col, xt, m.n_row_blocks
+        )
+    out = out.reshape(-1, c)
+    return out[:, 0] if squeeze else out

@@ -1,0 +1,78 @@
+"""Pure-jnp oracle for the BSR fluid-push kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["bsr_spmm_ref", "csr_to_bsr", "dense_to_bsr"]
+
+
+@functools.partial(jax.jit, static_argnames=("n_row_blocks",))
+def bsr_spmm_ref(
+    blocks: jax.Array,  # [n_blocks, bs, bs]
+    block_row: jax.Array,  # [n_blocks]
+    block_col: jax.Array,  # [n_blocks]
+    x: jax.Array,  # [n_col_blocks, bs, C]
+    n_row_blocks: int,
+) -> jax.Array:
+    """delta[r] = sum_{i: block_row[i]==r} blocks[i] @ x[block_col[i]]."""
+    partial = jnp.einsum(
+        "bij,bjc->bic", blocks, x[block_col]
+    )  # [n_blocks, bs, C]
+    return jax.ops.segment_sum(partial, block_row, num_segments=n_row_blocks)
+
+
+def dense_to_bsr(p: np.ndarray, bs: int):
+    """Dense [N, M] -> (blocks, block_row, block_col) keeping nonzero tiles.
+
+    Rows/cols are zero-padded to multiples of ``bs``; block_row is sorted.
+    """
+    n, m = p.shape
+    nr = -(-n // bs)
+    nc = -(-m // bs)
+    pad = np.zeros((nr * bs, nc * bs), dtype=p.dtype)
+    pad[:n, :m] = p
+    tiles = pad.reshape(nr, bs, nc, bs).transpose(0, 2, 1, 3)
+    occ = np.abs(tiles).sum(axis=(2, 3)) > 0
+    rows, cols = np.nonzero(occ)  # row-major order => sorted by row
+    blocks = tiles[rows, cols]
+    if blocks.shape[0] == 0:  # degenerate all-zero matrix
+        blocks = np.zeros((1, bs, bs), dtype=p.dtype)
+        rows = np.zeros(1, dtype=np.int64)
+        cols = np.zeros(1, dtype=np.int64)
+    return (
+        blocks.astype(np.float32),
+        rows.astype(np.int32),
+        cols.astype(np.int32),
+    )
+
+
+def csr_to_bsr(indptr: np.ndarray, indices: np.ndarray, weights: np.ndarray,
+               n: int, bs: int):
+    """Out-adjacency CSR of P (edges i->j, weight P[j,i]) -> BSR of P.
+
+    P[j, i] lives in block (j // bs, i // bs).  Returns
+    (blocks [n_blocks, bs, bs], block_row, block_col, n_row_blocks).
+    """
+    nb = -(-n // bs)
+    src = np.repeat(np.arange(n, dtype=np.int64), np.diff(indptr))
+    dst = indices.astype(np.int64)
+    br = dst // bs
+    bc = src // bs
+    key = br * nb + bc
+    order = np.argsort(key, kind="stable")
+    src, dst, w, key = src[order], dst[order], weights[order], key[order]
+    uniq, first = np.unique(key, return_index=True)
+    n_blocks = uniq.shape[0] if uniq.shape[0] else 1
+    blocks = np.zeros((n_blocks, bs, bs), dtype=np.float32)
+    block_of_edge = np.searchsorted(uniq, key)
+    blocks[block_of_edge, dst % bs, src % bs] += w
+    block_row = (uniq // nb).astype(np.int32)
+    block_col = (uniq % nb).astype(np.int32)
+    if uniq.shape[0] == 0:
+        block_row = np.zeros(1, dtype=np.int32)
+        block_col = np.zeros(1, dtype=np.int32)
+    return blocks, block_row, block_col, nb

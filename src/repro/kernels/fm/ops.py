@@ -1,0 +1,40 @@
+"""Public wrapper for the FM interaction kernel (pads batch to tile)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import fm_interaction_pallas
+from .ref import fm_interaction_ref
+
+__all__ = ["fm_interaction"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile", "use_pallas", "interpret")
+)
+def fm_interaction(
+    v: jax.Array,  # [B, F, D]
+    *,
+    tile: int = 256,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if not use_pallas:
+        return fm_interaction_ref(v)
+    if interpret is None:
+        interpret = not _on_tpu()
+    b = v.shape[0]
+    b_pad = -(-b // tile) * tile
+    if b_pad != b:
+        v = jnp.concatenate(
+            [v, jnp.zeros((b_pad - b,) + v.shape[1:], v.dtype)]
+        )
+    out = fm_interaction_pallas(v, tile=tile, interpret=interpret)
+    return out[:b]

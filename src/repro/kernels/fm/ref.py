@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the FM pairwise interaction."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["fm_interaction_ref", "fm_interaction_naive"]
+
+
+@jax.jit
+def fm_interaction_ref(v: jax.Array) -> jax.Array:
+    """Sum-square trick, [B, F, D] -> [B]."""
+    s1 = v.sum(axis=1)
+    s2 = (v * v).sum(axis=1)
+    return 0.5 * (s1 * s1 - s2).sum(axis=-1)
+
+
+@jax.jit
+def fm_interaction_naive(v: jax.Array) -> jax.Array:
+    """O(F^2) literal pairwise sum — the definition, for tiny tests."""
+    inter = jnp.einsum("bfd,bgd->bfg", v, v)
+    f = v.shape[1]
+    mask = jnp.triu(jnp.ones((f, f), bool), k=1)
+    return (inter * mask[None]).sum(axis=(1, 2))

@@ -1,0 +1,93 @@
+"""Public wrappers: sorted segment-sum and embedding-bag on the TPU kernel.
+
+``segment_sum_sorted`` = Pallas stage-1 partials + vectorized block-add
+epilogue.  ``embedding_bag`` = XLA row gather + the same reduction kernel
+(the gather is memory-bound and already optimal in XLA; the reduction is
+the scatter-shaped part the kernel replaces — see kernel.py docstring).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import segment_sum_tiles
+from .ref import embedding_bag_ref, segment_sum_ref
+
+__all__ = ["segment_sum_sorted", "embedding_bag", "pad_sorted_edges"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pad_sorted_edges(data, seg_ids, tile: int):
+    """Pad E to a multiple of ``tile``; pad ids get an out-of-window sentinel."""
+    e = data.shape[0]
+    e_pad = -(-e // tile) * tile
+    if e_pad != e:
+        data = jnp.concatenate(
+            [data, jnp.zeros((e_pad - e,) + data.shape[1:], data.dtype)]
+        )
+        seg_ids = jnp.concatenate(
+            [seg_ids, jnp.full((e_pad - e,), jnp.int32(2**30), jnp.int32)]
+        )
+    return data, seg_ids
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_segments", "tile", "bs_out", "use_pallas",
+                     "interpret"),
+)
+def segment_sum_sorted(
+    data: jax.Array,  # [E, D]
+    seg_ids: jax.Array,  # [E] int32 sorted ascending
+    n_segments: int,
+    *,
+    tile: int = 512,
+    bs_out: int = 128,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if not use_pallas:
+        return segment_sum_ref(data, seg_ids, n_segments)
+    if interpret is None:
+        interpret = not _on_tpu()
+    data_p, seg_p = pad_sorted_edges(data, seg_ids, tile)
+    partials = segment_sum_tiles(
+        data_p, seg_p, tile=tile, bs_out=bs_out, interpret=interpret
+    )  # [n_tiles, W, D]
+    n_tiles, window, d = partials.shape
+    # stage 2: add each window at its base offset
+    bases = (seg_p.reshape(n_tiles, tile)[:, 0] // bs_out) * bs_out
+    n_out_pad = -(-n_segments // bs_out) * bs_out + window
+    rows = bases[:, None] + jnp.arange(window, dtype=jnp.int32)[None, :]
+    rows = jnp.minimum(rows, n_out_pad - 1)  # sentinel tiles park at the end
+    out = jnp.zeros((n_out_pad, d), partials.dtype)
+    out = out.at[rows.reshape(-1)].add(partials.reshape(-1, d))
+    return out[:n_segments]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mode", "use_pallas", "interpret")
+)
+def embedding_bag(
+    table: jax.Array,  # [V, D]
+    ids: jax.Array,  # [B, L] int32
+    weights: jax.Array | None = None,  # [B, L]
+    mode: str = "sum",
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if mode != "sum" or not use_pallas:
+        return embedding_bag_ref(table, ids, weights, mode)
+    b, l = ids.shape
+    emb = table[ids.reshape(-1)]  # [B*L, D] XLA gather
+    if weights is not None:
+        emb = emb * weights.reshape(-1)[:, None]
+    seg = jnp.repeat(jnp.arange(b, dtype=jnp.int32), l)
+    return segment_sum_sorted(
+        emb, seg, b, use_pallas=True, interpret=interpret
+    )

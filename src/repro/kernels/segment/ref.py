@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for segment ops and embedding-bag."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["segment_sum_ref", "embedding_bag_ref"]
+
+
+@functools.partial(jax.jit, static_argnames=("n_segments",))
+def segment_sum_ref(data, seg_ids, n_segments: int):
+    return jax.ops.segment_sum(data, seg_ids, num_segments=n_segments)
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def embedding_bag_ref(table, ids, weights=None, mode: str = "sum"):
+    """out[b] = reduce_l table[ids[b, l]] (* weights[b, l]).
+
+    ids: [B, L] int32 (pad with any valid row + weight 0).
+    """
+    emb = table[ids]  # [B, L, D]
+    if weights is not None:
+        emb = emb * weights[..., None]
+    if mode == "sum":
+        return emb.sum(axis=1)
+    if mode == "mean":
+        denom = (
+            weights.sum(axis=1, keepdims=True)
+            if weights is not None
+            else jnp.full((ids.shape[0], 1), ids.shape[1], emb.dtype)
+        )
+        return emb.sum(axis=1) / jnp.maximum(denom, 1e-9)
+    if mode == "max":
+        return emb.max(axis=1)
+    raise ValueError(mode)

@@ -1,0 +1,215 @@
+"""Step-function builders per (family × cell kind).
+
+Each builder returns ``(step_fn, abstract_args, in_specs, out_specs)`` ready
+for ``jax.jit(step_fn, in_shardings=...).lower(*abstract_args)`` — used both
+by the dry-run (ShapeDtypeStructs, production mesh) and by the real drivers
+(concrete arrays, any mesh or none).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.common import ArchSpec, ShapeCell
+from repro.models import gnn as gnn_model
+from repro.models import recsys as fm_model
+from repro.models import transformer as lm
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.parallel.axes import logical_to_spec
+from repro.parallel.sharding import input_sharding_specs, param_sharding_specs
+
+__all__ = ["build_cell_step", "effective_overrides"]
+
+
+def effective_overrides(spec: ArchSpec, cell: ShapeCell,
+                        dp_shards: int) -> Dict[str, Any]:
+    """Per-mesh adjustment: keep per-device microbatch >= 1 and divisible."""
+    ov = dict(cell.overrides)
+    if spec.family == "lm" and cell.kind == "train":
+        nm = ov.get("n_microbatches", 1)
+        if nm > 1:
+            batch = cell.meta["batch"]
+            nm = min(nm, max(1, batch // dp_shards))
+            while batch % nm or (batch // nm) % dp_shards:
+                nm -= 1
+                if nm <= 1:
+                    nm = 1
+                    break
+            ov["n_microbatches"] = nm
+    return ov
+
+
+def _opt_specs(pspecs):
+    return {
+        "master": pspecs,
+        "m": jax.tree.map(lambda s: s, pspecs),
+        "v": jax.tree.map(lambda s: s, pspecs),
+        "step": P(),
+    }
+
+
+def build_cell_step(
+    spec: ArchSpec,
+    cell: ShapeCell,
+    rules: Dict[str, Any],
+    ocfg: Optional[AdamWConfig] = None,
+    dp_shards: int = 1,
+    axis_sizes: Optional[Dict[str, int]] = None,
+):
+    """Returns (step_fn, abstract_args tuple, in_specs tuple)."""
+    import dataclasses
+
+    ov = effective_overrides(spec, cell, dp_shards)
+    cfg = (dataclasses.replace(spec.model_cfg, **ov) if ov
+           else spec.model_cfg)
+    ocfg = ocfg or AdamWConfig()
+    inputs = cell.inputs()
+    in_axes = cell.input_axes
+    batch_specs = input_sharding_specs(inputs, in_axes, rules,
+                                   axis_sizes=axis_sizes)
+
+    if spec.family == "lm":
+        params_abs = jax.eval_shape(
+            lambda k: lm.init_params(cfg, k), jax.random.PRNGKey(0)
+        )
+        pspecs = param_sharding_specs(params_abs, "lm", rules,
+                              axis_sizes=axis_sizes)
+        if cell.kind == "train":
+            opt_abs = jax.eval_shape(adamw_init, params_abs)
+            ospecs = _opt_specs(pspecs)
+            nm = cfg.n_microbatches
+            # microbatching happens HERE via per-microbatch value_and_grad
+            # accumulated in a scan carry (fp32), NOT inside the loss —
+            # backprop through a scan-of-forwards would store every
+            # microbatch's residuals and erase the memory win.
+            import dataclasses as _dc
+
+            cfg_mb = _dc.replace(cfg, n_microbatches=1)
+
+            def step(params, opt_state, batch):
+                if nm <= 1:
+                    loss, grads = jax.value_and_grad(
+                        lambda p: lm.train_loss(p, batch, cfg_mb)
+                    )(params)
+                else:
+                    b = batch["tokens"].shape[0]
+                    from repro.parallel.axes import hint as _hint
+
+                    tok = batch["tokens"].reshape(nm, b // nm, -1)
+                    lab = batch["labels"].reshape(nm, b // nm, -1)
+                    tok = _hint(tok, None, "batch", None)
+                    lab = _hint(lab, None, "batch", None)
+
+                    def mb_body(carry, tl):
+                        acc_loss, acc_g = carry
+                        t, l_ = tl
+                        loss, g = jax.value_and_grad(
+                            lambda p: lm.train_loss(
+                                p, {"tokens": t, "labels": l_}, cfg_mb)
+                        )(params)
+                        acc_g = jax.tree.map(
+                            lambda a, x: a + x.astype(jnp.float32),
+                            acc_g, g)
+                        return (acc_loss + loss, acc_g), None
+
+                    zero_g = jax.tree.map(
+                        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                    (loss, grads), _ = jax.lax.scan(
+                        mb_body, (jnp.zeros((), jnp.float32), zero_g),
+                        (tok, lab))
+                    loss = loss / nm
+                    grads = jax.tree.map(lambda g: g / nm, grads)
+                params, opt_state, m = adamw_update(
+                    grads, opt_state, ocfg, param_dtype=cfg.dtype
+                )
+                return params, opt_state, {"loss": loss, **m}
+
+            return (step, (params_abs, opt_abs, inputs),
+                    (pspecs, ospecs, batch_specs))
+
+        if cell.kind == "prefill":
+
+            def step(params, batch):
+                cache, logits = lm.prefill_step(params, batch["tokens"], cfg)
+                return cache["k"], cache["v"], logits
+
+            return step, (params_abs, inputs), (pspecs, batch_specs)
+
+        if cell.kind == "decode":
+
+            def step(params, batch):
+                cache = {"k": batch["cache_k"], "v": batch["cache_v"],
+                         "pos": batch["pos"]}
+                if "cache_k_scale" in batch:
+                    cache["k_scale"] = batch["cache_k_scale"]
+                    cache["v_scale"] = batch["cache_v_scale"]
+                logits, new_cache = lm.decode_step(
+                    params, cache, batch["tokens"], cfg
+                )
+                return logits, new_cache["k"], new_cache["v"]
+
+            return step, (params_abs, inputs), (pspecs, batch_specs)
+
+    elif spec.family == "gnn":
+        params_abs = jax.eval_shape(
+            lambda k: gnn_model.init_params(cfg, k), jax.random.PRNGKey(0)
+        )
+        pspecs = param_sharding_specs(params_abs, "gnn", rules,
+                              axis_sizes=axis_sizes)
+        opt_abs = jax.eval_shape(adamw_init, params_abs)
+        ospecs = _opt_specs(pspecs)
+
+        def step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: gnn_model.loss_fn(p, batch, cfg)
+            )(params)
+            params, opt_state, m = adamw_update(
+                grads, opt_state, ocfg, param_dtype=cfg.dtype
+            )
+            return params, opt_state, {"loss": loss, **m}
+
+        return (step, (params_abs, opt_abs, inputs),
+                (pspecs, ospecs, batch_specs))
+
+    elif spec.family == "recsys":
+        params_abs = jax.eval_shape(
+            lambda k: fm_model.init_params(cfg, k), jax.random.PRNGKey(0)
+        )
+        pspecs = param_sharding_specs(params_abs, "recsys", rules,
+                              axis_sizes=axis_sizes)
+        if cell.kind == "train":
+            opt_abs = jax.eval_shape(adamw_init, params_abs)
+            ospecs = _opt_specs(pspecs)
+
+            def step(params, opt_state, batch):
+                loss, grads = jax.value_and_grad(
+                    lambda p: fm_model.loss_fn(p, batch, cfg)
+                )(params)
+                params, opt_state, m = adamw_update(
+                    grads, opt_state, ocfg, param_dtype=cfg.dtype
+                )
+                return params, opt_state, {"loss": loss, **m}
+
+            return (step, (params_abs, opt_abs, inputs),
+                    (pspecs, ospecs, batch_specs))
+
+        if cell.kind == "serve":
+
+            def step(params, batch):
+                return fm_model.forward_logits(params, batch["ids"], cfg)
+
+            return step, (params_abs, inputs), (pspecs, batch_specs)
+
+        if cell.kind == "retrieval":
+
+            def step(params, batch):
+                return fm_model.retrieval_score(
+                    params, batch["user_ids"], batch["cand_ids"], cfg
+                )
+
+            return step, (params_abs, inputs), (pspecs, batch_specs)
+
+    raise ValueError((spec.family, cell.kind))

@@ -1,0 +1,448 @@
+"""GNN architectures: MeshGraphNet, EGNN, GIN, DimeNet (pure JAX).
+
+Message passing is built on the sorted-segment primitive — JAX has no native
+sparse SpMM beyond BCOO, so scatter/gather over an explicit edge list IS the
+system (kernel_taxonomy §GNN).  The XLA path uses ``jax.ops.segment_sum``;
+the Pallas seg-matmul kernel (repro.kernels.segment) is the TPU drop-in for
+the same contract (sorted ids).
+
+Batch convention (static shapes, padded):
+
+    batch = {
+      "x":        [N, F]   node features,
+      "pos":      [N, 3]   coordinates (EGNN / DimeNet),
+      "z":        [N]      atom types (DimeNet),
+      "src","dst":[E]      directed edges (messages flow src -> dst),
+      "edge_attr":[E, Fe]  edge features (MeshGraphNet),
+      "node_mask":[N]      1.0 = real node,
+      "edge_mask":[E]      1.0 = real edge,
+      "graph_ids":[N]      graph id per node (batched small graphs),
+      "labels":   task-dependent,
+      # DimeNet only:
+      "trip_e":   [T]      target edge id  (message j->i being updated)
+      "trip_f":   [T]      source edge id  (incoming message k->j)
+      "trip_mask":[T]
+    }
+
+Distribution: edges are sharded over the whole mesh ("edges" logical axis),
+node states over ("pod","data") — the aggregation's cross-shard scatter-add
+is the same collective pattern as the solver's fluid exchange (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.axes import hint
+
+__all__ = [
+    "GNNConfig",
+    "init_params",
+    "loss_fn",
+    "forward",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    arch: str  # meshgraphnet | egnn | gin | dimenet
+    n_layers: int
+    d_hidden: int
+    d_feat: int  # input node feature dim
+    d_edge: int = 0  # input edge feature dim (meshgraphnet)
+    d_out: int = 1
+    n_classes: int = 0  # >0 => classification
+    # gin
+    eps_learnable: bool = True
+    # dimenet
+    n_bilinear: int = 8
+    n_spherical: int = 7
+    n_radial: int = 6
+    n_atom_types: int = 16
+    cutoff: float = 5.0
+    dtype: Any = jnp.float32
+    task: str = "node"  # node | graph
+
+
+# --------------------------------------------------------------------------- #
+# shared pieces
+# --------------------------------------------------------------------------- #
+def _mlp_init(key, dims, dt):
+    ws, bs = [], []
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        key, k1 = jax.random.split(key)
+        ws.append((jax.random.normal(k1, (a, b), jnp.float32)
+                   / math.sqrt(a)).astype(dt))
+        bs.append(jnp.zeros((b,), dt))
+    return {"w": ws, "b": bs}
+
+
+def _mlp(p, x, act=jax.nn.silu, final_act=False, norm=False):
+    n = len(p["w"])
+    for i, (w, b) in enumerate(zip(p["w"], p["b"])):
+        x = x @ w + b
+        if i < n - 1 or final_act:
+            x = act(x)
+    if norm:
+        mu = x.mean(-1, keepdims=True)
+        var = x.var(-1, keepdims=True)
+        x = (x - mu) * jax.lax.rsqrt(var + 1e-6)
+    return x
+
+
+def _agg(messages, dst, n_nodes, edge_mask=None):
+    """Masked scatter-add of edge messages onto destination nodes."""
+    if edge_mask is not None:
+        messages = messages * edge_mask[:, None]
+    out = jax.ops.segment_sum(messages, dst, num_segments=n_nodes)
+    return hint(out, "nodes", None)
+
+
+# --------------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------------- #
+def init_params(cfg: GNNConfig, key: jax.Array) -> Dict:
+    dt = cfg.dtype
+    d = cfg.d_hidden
+    keys = iter(jax.random.split(key, 64 + 8 * cfg.n_layers))
+    p: Dict[str, Any] = {}
+    if cfg.arch == "gin":
+        p["embed"] = _mlp_init(next(keys), (cfg.d_feat, d), dt)
+        p["eps"] = jnp.zeros((cfg.n_layers,), dt)
+        p["mlps"] = [
+            _mlp_init(next(keys), (d, d, d), dt) for _ in range(cfg.n_layers)
+        ]
+        p["readout"] = _mlp_init(
+            next(keys), (d, d, cfg.n_classes or cfg.d_out), dt
+        )
+    elif cfg.arch == "meshgraphnet":
+        p["node_enc"] = _mlp_init(next(keys), (cfg.d_feat, d, d), dt)
+        p["edge_enc"] = _mlp_init(next(keys), (cfg.d_edge or 4, d, d), dt)
+        p["edge_mlps"] = [
+            _mlp_init(next(keys), (3 * d, d, d), dt)
+            for _ in range(cfg.n_layers)
+        ]
+        p["node_mlps"] = [
+            _mlp_init(next(keys), (2 * d, d, d), dt)
+            for _ in range(cfg.n_layers)
+        ]
+        p["decoder"] = _mlp_init(next(keys), (d, d, cfg.d_out), dt)
+    elif cfg.arch == "egnn":
+        p["embed"] = _mlp_init(next(keys), (cfg.d_feat, d), dt)
+        p["edge_mlps"] = [
+            _mlp_init(next(keys), (2 * d + 1, d, d), dt)
+            for _ in range(cfg.n_layers)
+        ]
+        p["coord_mlps"] = [
+            _mlp_init(next(keys), (d, d, 1), dt)
+            for _ in range(cfg.n_layers)
+        ]
+        p["node_mlps"] = [
+            _mlp_init(next(keys), (2 * d, d, d), dt)
+            for _ in range(cfg.n_layers)
+        ]
+        p["readout"] = _mlp_init(next(keys), (d, d, cfg.d_out), dt)
+    elif cfg.arch == "dimenet":
+        nb, ns, nr = cfg.n_bilinear, cfg.n_spherical, cfg.n_radial
+        p["atom_embed"] = (
+            jax.random.normal(next(keys), (cfg.n_atom_types, d), jnp.float32)
+            * 0.1
+        ).astype(dt)
+        p["rbf_proj"] = _mlp_init(next(keys), (nr, d), dt)
+        p["edge_embed"] = _mlp_init(next(keys), (3 * d, d), dt)
+        p["blocks"] = []
+        for _ in range(cfg.n_layers):
+            k1, k2, k3, k4 = (next(keys) for _ in range(4))
+            p["blocks"].append(
+                {
+                    "sbf_proj": _mlp_init(k1, (ns * nr, nb), dt),
+                    "w_bil": (
+                        jax.random.normal(k2, (nb, d, d), jnp.float32)
+                        / math.sqrt(nb * d)
+                    ).astype(dt),
+                    "msg_mlp": _mlp_init(k3, (2 * d, d, d), dt),
+                    "out_mlp": _mlp_init(k4, (d, d), dt),
+                }
+            )
+        p["readout"] = _mlp_init(next(keys), (d, d, cfg.d_out), dt)
+    else:
+        raise ValueError(cfg.arch)
+    return p
+
+
+# --------------------------------------------------------------------------- #
+# forward per arch
+# --------------------------------------------------------------------------- #
+def _forward_gin_halo(p, batch, cfg, mesh, rules):
+    """Locality-partitioned GIN aggregation (the paper's §3 insight:
+    "favour partition sets such that there are more links inside Ω_k").
+
+    Nodes are contiguously sharded (= the paper's uniform Ω_k); edges are
+    pre-sorted to their destination's shard; each shard publishes only its
+    *boundary* rows (nodes some other shard references).  Per layer the
+    halo exchange all-gathers [K, B_max, d] instead of all-reducing the
+    full [N, d] aggregate — traffic drops by the boundary fraction (~7×
+    measured on the products-scale graph; EXPERIMENTS.md §Perf C).
+
+    Batch layout (built by data.build_halo_batch):
+      x           [N_pad, F]        node-sharded
+      src_slot    [K·E_cap]         per-edge index into [h_loc ++ halo]
+      dst_local   [K·E_cap]         local dst in [0, N_loc)
+      edge_mask   [K·E_cap]
+      boundary    [K, B_max]        local ids each shard publishes
+      labels      [N_pad]
+    """
+    from jax.sharding import PartitionSpec as P
+
+    node_ax = rules.get("nodes")
+    if mesh is None or node_ax is None:
+        return None
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    k = 1
+    for a in (node_ax if isinstance(node_ax, tuple) else (node_ax,)):
+        k *= sizes.get(a, 1)
+    n_pad = batch["x"].shape[0]
+    if k <= 1 or n_pad % k or batch["src_slot"].shape[0] % k:
+        return None
+    n_loc = n_pad // k
+    b_max = batch["boundary"].shape[1]
+
+    def block(x, src_slot, dst_local, edge_mask, boundary):
+        h = _mlp(p["embed"], x, final_act=True)  # [N_loc, d]
+        for l in range(cfg.n_layers):
+            publish = h[boundary[0]]  # [B_max, d]
+            halo = jax.lax.all_gather(
+                publish, node_ax, axis=0, tiled=True)  # [K*B_max, d]
+            table = jnp.concatenate([h, halo], axis=0)
+            msgs = table[src_slot] * edge_mask[:, None]
+            agg = jax.ops.segment_sum(msgs, dst_local,
+                                      num_segments=n_loc)
+            h = _mlp(p["mlps"][l], (1.0 + p["eps"][l]) * h + agg,
+                     final_act=True)
+        return _mlp(p["readout"], h)
+
+    mapped = jax.shard_map(
+        block,
+        mesh=mesh,
+        in_specs=(P(node_ax, None), P(node_ax), P(node_ax), P(node_ax),
+                  P(node_ax, None)),
+        out_specs=P(node_ax, None),
+        check_vma=False,
+    )
+    return mapped(batch["x"], batch["src_slot"], batch["dst_local"],
+                  batch["edge_mask"], batch["boundary"])
+
+
+def _forward_gin(p, batch, cfg):
+    x = batch["x"]
+    n = x.shape[0]
+    src, dst = batch["src"], batch["dst"]
+    em = batch.get("edge_mask")
+    h = _mlp(p["embed"], x, final_act=True)
+    for l in range(cfg.n_layers):
+        msgs = h[src]
+        msgs = hint(msgs, "edges", None)
+        agg = _agg(msgs, dst, n, em)
+        h = _mlp(p["mlps"][l], (1.0 + p["eps"][l]) * h + agg,
+                 final_act=True)
+        h = hint(h, "nodes", None)
+    return h
+
+
+def _forward_meshgraphnet(p, batch, cfg):
+    x, src, dst = batch["x"], batch["src"], batch["dst"]
+    n = x.shape[0]
+    em = batch.get("edge_mask")
+    e = batch.get("edge_attr")
+    if e is None:
+        pos = batch.get("pos")
+        if pos is not None:
+            rel = pos[src] - pos[dst]
+            dist = jnp.linalg.norm(rel, axis=-1, keepdims=True)
+            e = jnp.concatenate([rel, dist], -1)
+        else:
+            e = jnp.ones((src.shape[0], 4), x.dtype)
+    h = _mlp(p["node_enc"], x, norm=True)
+    he = _mlp(p["edge_enc"], e, norm=True)
+    for l in range(cfg.n_layers):
+        he_in = jnp.concatenate([he, h[src], h[dst]], -1)
+        he_in = hint(he_in, "edges", None)
+        he = he + _mlp(p["edge_mlps"][l], he_in, norm=True)
+        agg = _agg(he, dst, n, em)
+        h = h + _mlp(p["node_mlps"][l],
+                     jnp.concatenate([h, agg], -1), norm=True)
+        h = hint(h, "nodes", None)
+    return _mlp(p["decoder"], h)
+
+
+def _forward_egnn(p, batch, cfg):
+    x, src, dst = batch["x"], batch["src"], batch["dst"]
+    pos = batch["pos"]
+    n = x.shape[0]
+    em = batch.get("edge_mask")
+    h = _mlp(p["embed"], x, final_act=True)
+    for l in range(cfg.n_layers):
+        rel = pos[src] - pos[dst]  # [E, 3]
+        d2 = jnp.sum(rel * rel, axis=-1, keepdims=True)
+        m_in = jnp.concatenate([h[src], h[dst], d2], -1)
+        m_in = hint(m_in, "edges", None)
+        m = _mlp(p["edge_mlps"][l], m_in, final_act=True)
+        cw = _mlp(p["coord_mlps"][l], m)  # [E, 1]
+        if em is not None:
+            cw = cw * em[:, None]
+        denom = 1.0 + jnp.abs(d2)  # normalized coordinate update
+        pos = pos + jax.ops.segment_sum(
+            rel / denom * cw, dst, num_segments=n
+        ) / max(1, 8)
+        agg = _agg(m, dst, n, em)
+        h = h + _mlp(p["node_mlps"][l],
+                     jnp.concatenate([h, agg], -1))
+        h = hint(h, "nodes", None)
+    return h, pos
+
+
+def _bessel_rbf(d, cutoff, n_radial, dtype):
+    """DimeNet radial basis: sqrt(2/c)·sin(nπd/c)/d, smooth-enveloped."""
+    d = jnp.maximum(d, 1e-6)
+    n = jnp.arange(1, n_radial + 1, dtype=jnp.float32)
+    x = d[:, None] / cutoff  # [E, 1]
+    rbf = jnp.sqrt(2.0 / cutoff) * jnp.sin(n[None] * jnp.pi * x) / d[:, None]
+    env = jnp.where(x < 1.0, 0.5 * (jnp.cos(jnp.pi * x) + 1.0), 0.0)
+    return (rbf * env).astype(dtype)
+
+
+def _legendre(cos_a, n_spherical):
+    """P_l(cos α), l = 0..n_spherical-1, by recurrence."""
+    outs = [jnp.ones_like(cos_a), cos_a]
+    for l in range(2, n_spherical):
+        outs.append(
+            ((2 * l - 1) * cos_a * outs[-1] - (l - 1) * outs[-2]) / l
+        )
+    return jnp.stack(outs[:n_spherical], axis=-1)  # [T, ns]
+
+
+def _forward_dimenet(p, batch, cfg):
+    src, dst = batch["src"], batch["dst"]  # directed edges j -> i
+    pos, z = batch["pos"], batch["z"]
+    n = pos.shape[0]
+    e_count = src.shape[0]
+    em = batch.get("edge_mask")
+    trip_e, trip_f = batch["trip_e"], batch["trip_f"]
+    tm = batch.get("trip_mask")
+
+    rel = pos[src] - pos[dst]
+    dist = jnp.linalg.norm(rel + 1e-9, axis=-1)  # [E]
+    rbf = _bessel_rbf(dist, cfg.cutoff, cfg.n_radial, pos.dtype)  # [E, nr]
+    rbf_h = _mlp(p["rbf_proj"], rbf)  # [E, d]
+
+    hz = p["atom_embed"][z]  # [N, d]
+    m = _mlp(
+        p["edge_embed"],
+        jnp.concatenate([hz[src], hz[dst], rbf_h], -1),
+        final_act=True,
+    )  # [E, d] directed messages
+    m = hint(m, "edges", None)
+
+    # triplet angles: edge e = (j->i), incoming f = (k->j)
+    # cos(angle) between -rel[f] (j->k reversed) and rel[e]? DimeNet uses the
+    # angle at j between (j->i) and (j->k); rel vectors are src - dst.
+    v1 = rel[trip_e]  # j - i direction proxy
+    v2 = rel[trip_f]  # k - j
+    cos_a = jnp.sum(v1 * v2, -1) / (
+        jnp.linalg.norm(v1, axis=-1) * jnp.linalg.norm(v2, axis=-1) + 1e-9
+    )
+    leg = _legendre(cos_a, cfg.n_spherical)  # [T, ns]
+    rbf_t = _bessel_rbf(
+        dist[trip_f], cfg.cutoff, cfg.n_radial, pos.dtype
+    )  # [T, nr]
+    sbf = (leg[:, :, None] * rbf_t[:, None, :]).reshape(
+        trip_e.shape[0], -1
+    )  # [T, ns*nr]
+
+    node_out = jnp.zeros((n, cfg.d_hidden), m.dtype)
+    for blk in p["blocks"]:
+        sp = _mlp(blk["sbf_proj"], sbf)  # [T, nb]
+        msrc = m[trip_f]  # [T, d]
+        inter = jnp.einsum("tb,td,bdh->th", sp, msrc, blk["w_bil"])
+        if tm is not None:
+            inter = inter * tm[:, None]
+        inter = hint(inter, "edges", None)
+        agg_t = jax.ops.segment_sum(
+            inter, trip_e, num_segments=e_count
+        )  # [E, d]
+        m = m + _mlp(
+            blk["msg_mlp"], jnp.concatenate([m, agg_t], -1), final_act=True
+        )
+        m = hint(m, "edges", None)
+        node_out = node_out + _agg(_mlp(blk["out_mlp"], m), dst, n, em)
+    return _mlp(p["readout"], node_out)  # [N, d_out]
+
+
+def forward(params, batch, cfg: GNNConfig):
+    if cfg.arch == "gin":
+        if "src_slot" in batch:  # locality-partitioned halo mode
+            from repro.parallel.axes import current_mesh, current_rules
+
+            out = _forward_gin_halo(params, batch, cfg, current_mesh(),
+                                    current_rules() or {})
+            if out is not None:
+                return out
+            raise ValueError(
+                "halo batch requires a mesh with a 'nodes' axis")
+        h = _forward_gin(params, batch, cfg)
+        return _mlp(params["readout"], h)
+    if cfg.arch == "meshgraphnet":
+        return _forward_meshgraphnet(params, batch, cfg)
+    if cfg.arch == "egnn":
+        h, _pos = _forward_egnn(params, batch, cfg)
+        return _mlp(params["readout"], h)
+    if cfg.arch == "dimenet":
+        return _forward_dimenet(params, batch, cfg)
+    raise ValueError(cfg.arch)
+
+
+# --------------------------------------------------------------------------- #
+# loss
+# --------------------------------------------------------------------------- #
+def _graph_pool(node_vals, graph_ids, n_graphs, node_mask=None):
+    if node_mask is not None:
+        node_vals = node_vals * node_mask[:, None]
+    return jax.ops.segment_sum(node_vals, graph_ids, num_segments=n_graphs)
+
+
+def loss_fn(params, batch, cfg: GNNConfig):
+    out = forward(params, batch, cfg)  # [N, C or d_out]
+    nm = batch.get("node_mask")
+    if cfg.task == "graph":
+        gid = batch["graph_ids"]
+        n_graphs = batch["labels"].shape[0]
+        pooled = _graph_pool(out, gid, n_graphs, nm)
+        if cfg.n_classes:
+            lz = jax.nn.logsumexp(pooled.astype(jnp.float32), -1)
+            gold = jnp.take_along_axis(
+                pooled.astype(jnp.float32),
+                batch["labels"][:, None], axis=-1)[:, 0]
+            return jnp.mean(lz - gold)
+        return jnp.mean(
+            (pooled[:, 0] - batch["labels"].astype(jnp.float32)) ** 2
+        )
+    # node task
+    if cfg.n_classes:
+        logits = out.astype(jnp.float32)
+        lz = jax.nn.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(
+            logits, batch["labels"][:, None], axis=-1)[:, 0]
+        per = lz - gold
+        if nm is not None:
+            return jnp.sum(per * nm) / jnp.maximum(nm.sum(), 1.0)
+        return jnp.mean(per)
+    err = (out - batch["labels"].astype(out.dtype)) ** 2
+    if nm is not None:
+        return (jnp.sum(err.mean(-1) * nm)
+                / jnp.maximum(nm.sum(), 1.0)).astype(jnp.float32)
+    return jnp.mean(err).astype(jnp.float32)

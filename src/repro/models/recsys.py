@@ -1,0 +1,121 @@
+"""Factorization Machine recsys model (Rendle, ICDM'10) with huge tables.
+
+y(x) = w0 + Σ_f w[x_f] + Σ_{f<g} ⟨v[x_f], v[x_g]⟩        (x_f categorical)
+
+Implementation notes (kernel_taxonomy §RecSys):
+
+* One fused embedding table ``[n_fields · vocab_per_field, D]`` with static
+  per-field offsets (the classic TBE layout); the lookup is ``jnp.take`` —
+  JAX has no native EmbeddingBag, so the gather + interaction IS the system.
+* The pairwise term uses the O(F·D) sum-square trick; the fused Pallas
+  kernel (repro.kernels.fm) is the TPU hot path, the jnp expression the
+  XLA / dry-run path.
+* Tables are row-sharded over the ``model`` axis ("rows" logical axis);
+  lookups from data-parallel batches become all-to-all-ish gathers under
+  SPMD — exactly the skewed-access pattern the paper's dynamic partition
+  controller rebalances (DESIGN.md §4: Ω = table rows).
+* ``retrieval_score``: one query against N candidate vectors as a batched
+  dot — FM's interaction with a candidate item factorises into
+  ⟨u_sum, v_c⟩ + const(c), so retrieval is a single [N, D] matvec.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.axes import hint
+
+__all__ = [
+    "FMConfig",
+    "init_params",
+    "forward_logits",
+    "loss_fn",
+    "retrieval_score",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FMConfig:
+    name: str
+    n_fields: int = 39
+    vocab_per_field: int = 1_000_000
+    embed_dim: int = 10
+    dtype: Any = jnp.float32
+
+    @property
+    def n_rows(self) -> int:
+        return self.n_fields * self.vocab_per_field
+
+
+def init_params(cfg: FMConfig, key: jax.Array) -> Dict:
+    k1, k2 = jax.random.split(key)
+    scale = 1.0 / math.sqrt(cfg.embed_dim)
+    return {
+        "table": (
+            jax.random.normal(k1, (cfg.n_rows, cfg.embed_dim), jnp.float32)
+            * scale
+        ).astype(cfg.dtype),
+        "lin_table": jnp.zeros((cfg.n_rows,), cfg.dtype),
+        "bias": jnp.zeros((), cfg.dtype),
+    }
+
+
+def _flat_ids(ids: jax.Array, cfg: FMConfig) -> jax.Array:
+    """[B, F] per-field ids -> fused-table row ids."""
+    offs = (jnp.arange(cfg.n_fields, dtype=ids.dtype)
+            * cfg.vocab_per_field)
+    return ids + offs[None, :]
+
+
+def forward_logits(params, ids: jax.Array, cfg: FMConfig) -> jax.Array:
+    """ids: [B, F] int32 -> logits [B]."""
+    rows = _flat_ids(ids, cfg)
+    v = params["table"][rows]  # [B, F, D] — the hot gather
+    v = hint(v, "batch", None, None)
+    lin = params["lin_table"][rows].sum(-1)  # [B]
+    s1 = v.sum(axis=1)
+    s2 = (v * v).sum(axis=1)
+    pair = 0.5 * (s1 * s1 - s2).sum(-1)
+    return (params["bias"] + lin + pair).astype(jnp.float32)
+
+
+def loss_fn(params, batch, cfg: FMConfig):
+    """Binary cross-entropy on click labels."""
+    logits = forward_logits(params, batch["ids"], cfg)
+    y = batch["labels"].astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def retrieval_score(params, user_ids: jax.Array, cand_ids: jax.Array,
+                    cfg: FMConfig) -> jax.Array:
+    """Score ONE user context against N candidate items (retrieval_cand).
+
+    user_ids: [F-1] context features; cand_ids: [N] ids in the last field.
+    FM score vs candidate c = const(u) + w[c] + ⟨Σ_f v_f, v_c⟩, i.e. one
+    matvec over the candidate embedding block — no per-candidate loop.
+    """
+    f = cfg.n_fields
+    offs = jnp.arange(f - 1, dtype=user_ids.dtype) * cfg.vocab_per_field
+    u_rows = user_ids + offs
+    vu = params["table"][u_rows]  # [F-1, D]
+    u_sum = vu.sum(0)  # [D]
+    u_pair = 0.5 * ((u_sum * u_sum) - (vu * vu).sum(0)).sum()
+    u_lin = params["lin_table"][u_rows].sum()
+
+    c_rows = cand_ids + (f - 1) * cfg.vocab_per_field
+    vc = params["table"][c_rows]  # [N, D]
+    vc = hint(vc, "batch", None)
+    scores = (
+        params["bias"]
+        + u_lin
+        + u_pair
+        + params["lin_table"][c_rows]
+        + vc @ u_sum
+    )
+    return scores.astype(jnp.float32)

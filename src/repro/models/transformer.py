@@ -1,0 +1,792 @@
+"""Decoder-only transformer LM family (dense + MoE) in pure JAX.
+
+Covers the five assigned LM architectures: GQA attention (with optional QKV
+bias, Qwen-style), RMSNorm, RoPE, SwiGLU FFN, optional MoE FFN (shared +
+routed experts, top-k routing with capacity-based dispatch), untied LM head.
+
+Scale features:
+
+* **scan-over-layers** with stacked [L, ...] params — one compiled layer
+  body regardless of depth (88-layer Mistral-Large compiles as fast as the
+  0.5B model).
+* **remat** (activation checkpointing) around the scanned layer body.
+* **gradient-accumulation microbatching** in the loss wrapper (configured
+  per input shape so the 104B cells fit HBM).
+* **chunked cross-entropy** — [B, S, V] logits are never materialised;
+  the sequence is processed in chunks against the vocab-sharded LM head.
+* **logical sharding hints** (repro.parallel.axes) — batch/heads/mlp/vocab
+  annotations that the production mesh maps to (pod, data, model).
+* decode path with a static KV cache, sequence-sharded for the long-context
+  cells (distributed-softmax attention; DESIGN.md §5).
+
+Attention uses the XLA einsum formulation by default (what the dry-run
+lowers and the roofline measures); the Pallas flash kernel
+(repro.kernels.attention) is the TPU drop-in, validated in interpret mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.axes import hint
+
+__all__ = [
+    "MoEConfig",
+    "TransformerConfig",
+    "init_params",
+    "train_loss",
+    "prefill_step",
+    "decode_step",
+    "init_cache",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0  # shared experts, fused into one dense SwiGLU
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01  # load-balance auxiliary loss
+    pad_experts_to: int = 0  # pad expert tensors for even EP sharding
+
+    @property
+    def e_pad(self) -> int:
+        return max(self.n_experts, self.pad_experts_to)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: Optional[int] = None
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    moe: Optional[MoEConfig] = None
+    dtype: Any = jnp.bfloat16
+    # per-shape knobs (overridden by launch configs):
+    ce_chunk: int = 1024
+    n_microbatches: int = 1
+    remat: bool = True
+    attn_q_chunk: Optional[int] = None  # q-chunked attention (long prefill)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    @property
+    def n_params(self) -> int:
+        """Total parameter count (for 6ND model-flops accounting)."""
+        d, v, l = self.d_model, self.vocab, self.n_layers
+        hd = self.head_dim
+        attn = d * hd * (self.n_heads * 2 + self.n_kv_heads * 2)
+        if self.qkv_bias:
+            attn += hd * (self.n_heads + 2 * self.n_kv_heads)
+        if self.moe is None:
+            ffn = 3 * d * self.d_ff
+        else:
+            m = self.moe
+            ffn = m.n_experts * 3 * d * m.d_ff_expert + d * m.n_experts
+            if m.n_shared:
+                ffn += 3 * d * (m.d_ff_expert * m.n_shared)
+        norms = 2 * d
+        return l * (attn + ffn + norms) + 2 * v * d + d
+
+    @property
+    def n_active_params(self) -> int:
+        """Active per-token params (MoE: routed top-k + shared only)."""
+        if self.moe is None:
+            return self.n_params
+        d, l, m = self.d_model, self.n_layers, self.moe
+        routed_all = m.n_experts * 3 * d * m.d_ff_expert
+        routed_act = m.top_k * 3 * d * m.d_ff_expert
+        return self.n_params - l * (routed_all - routed_act)
+
+
+# --------------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------------- #
+def init_params(cfg: TransformerConfig, key: jax.Array) -> Dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    l, v = cfg.n_layers, cfg.vocab
+    dt = cfg.dtype
+    k = iter(jax.random.split(key, 24))
+
+    def dense(key, shape, fan_in):
+        return (jax.random.normal(key, shape, jnp.float32)
+                / math.sqrt(fan_in)).astype(dt)
+
+    layers: Dict[str, Any] = {
+        "ln1": jnp.ones((l, d), dt),
+        "ln2": jnp.ones((l, d), dt),
+        "wq": dense(next(k), (l, d, hq * hd), d),
+        "wk": dense(next(k), (l, d, hkv * hd), d),
+        "wv": dense(next(k), (l, d, hkv * hd), d),
+        "wo": dense(next(k), (l, hq * hd, d), hq * hd),
+    }
+    if cfg.qkv_bias:
+        layers["bq"] = jnp.zeros((l, hq * hd), dt)
+        layers["bk"] = jnp.zeros((l, hkv * hd), dt)
+        layers["bv"] = jnp.zeros((l, hkv * hd), dt)
+    if cfg.moe is None:
+        layers["w1"] = dense(next(k), (l, d, cfg.d_ff), d)
+        layers["w3"] = dense(next(k), (l, d, cfg.d_ff), d)
+        layers["w2"] = dense(next(k), (l, cfg.d_ff, d), cfg.d_ff)
+    else:
+        m = cfg.moe
+        layers["router"] = dense(next(k), (l, d, m.n_experts), d)
+        layers["ew1"] = dense(next(k), (l, m.e_pad, d, m.d_ff_expert), d)
+        layers["ew3"] = dense(next(k), (l, m.e_pad, d, m.d_ff_expert), d)
+        layers["ew2"] = dense(
+            next(k), (l, m.e_pad, m.d_ff_expert, d), m.d_ff_expert
+        )
+        if m.n_shared:
+            fs = m.d_ff_expert * m.n_shared
+            layers["sw1"] = dense(next(k), (l, d, fs), d)
+            layers["sw3"] = dense(next(k), (l, d, fs), d)
+            layers["sw2"] = dense(next(k), (l, fs, d), fs)
+    return {
+        "embed": dense(next(k), (v, d), d),
+        "layers": layers,
+        "final_norm": jnp.ones((d,), dt),
+        "lm_head": dense(next(k), (d, v), d),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# building blocks
+# --------------------------------------------------------------------------- #
+def rmsnorm(x, scale, eps):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * scale
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, Dh]; positions: [B, S] (or [S])."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, half]
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)  # [B, S, 1, half]
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+def _attention(q, k, v, causal: bool, kv_pos_limit=None,
+               q_chunk: Optional[int] = None):
+    """q: [B,Sq,Hq,Dh], k/v: [B,Sk,Hkv,Dh] -> [B,Sq,Hq,Dh] (einsum form).
+
+    ``q_chunk`` streams the query dim through lax.scan so the [Sq, Sk]
+    score matrix is never fully materialised (XLA-level flash for long
+    prefill; the Pallas kernel replaces this on TPU).
+    """
+    b, sq, hq, dh = q.shape
+    if q_chunk is not None and sq > q_chunk and sq % q_chunk == 0:
+        nch = sq // q_chunk
+        qc = q.reshape(b, nch, q_chunk, hq, dh).swapaxes(0, 1)
+        starts = jnp.arange(nch) * q_chunk
+
+        def body(_, xs):
+            st, qblk = xs
+            out = _attention_block(qblk, k, v, causal, kv_pos_limit, st)
+            return None, out
+
+        _, outs = jax.lax.scan(body, None, (starts, qc))
+        return outs.swapaxes(0, 1).reshape(b, sq, hq, dh)
+    return _attention_block(q, k, v, causal, kv_pos_limit, 0)
+
+
+def _attention_block(q, k, v, causal: bool, kv_pos_limit=None, q_start=0):
+    b, sq, hq, dh = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    k = jnp.repeat(k, group, axis=2)
+    v = jnp.repeat(v, group, axis=2)
+    q = hint(q, "batch", None, "heads", None)
+    k = hint(k, "batch", "kv_seq" if kv_pos_limit is not None else None,
+             "heads", None)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    s = s / math.sqrt(dh)
+    if causal:
+        qpos = q_start + jnp.arange(sq)
+        kpos = jnp.arange(sk)
+        mask = qpos[:, None] >= kpos[None, :]
+        s = jnp.where(mask[None, None], s, -1e30)
+    if kv_pos_limit is not None:  # decode: mask cache beyond current pos
+        kpos = jnp.arange(sk)
+        s = jnp.where((kpos <= kv_pos_limit)[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v)
+    return out
+
+
+def _decode_attn_dist(q, ck, cv, kk, vv, pos, cfg, mesh, rules,
+                      scales=None):
+    """Distributed decode attention over a sequence-sharded KV cache.
+
+    Baseline pjit decode all-gathers the WHOLE cache per layer (the
+    dynamic_update_slice at ``pos`` on a kv_seq-sharded dim forces a
+    reshard - 1 GiB x L for command-r decode_32k; EXPERIMENTS.md SPerf B).
+    This shard_map version keeps every cache shard local: the owning shard
+    applies the update in place, each shard computes partial attention
+    over its S_loc keys, and the softmax is combined with tiny
+    pmax/psum([B,H]) collectives (flash-decoding's split-KV scheme).
+
+    Returns None when the cell's sharding doesn't apply (no kv_seq axis or
+    non-divisible dims) so the caller can fall back to the pjit path.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    kv_ax = rules.get("kv_seq")
+    if not isinstance(kv_ax, str) or mesh is None:
+        return None
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    b, s, hkv, dh = ck.shape
+    hq = q.shape[2]
+    s_shards = sizes.get(kv_ax, 1)
+    if s_shards <= 1 or s % s_shards:
+        return None
+    s_loc = s // s_shards
+    group = hq // hkv
+
+    def _san(axes, dim):
+        kept, rem = [], dim
+        for a in (axes if isinstance(axes, tuple)
+                  else (axes,) if axes else ()):
+            n = sizes.get(a, 1)
+            if n > 1 and rem % n == 0:
+                kept.append(a)
+                rem //= n
+        return tuple(kept) if kept else None
+
+    b_ax = _san(rules.get("batch"), b)
+
+    def block(q, ck, cv, kk, vv, pos, *sc):
+        bl = q.shape[0]
+        idx = jax.lax.axis_index(kv_ax)
+        start = idx * s_loc
+        off = jnp.clip(pos - start, 0, s_loc - 1)
+        in_rng = (pos >= start) & (pos < start + s_loc)
+        ck_new = jax.lax.dynamic_update_slice(ck, kk, (0, off, 0, 0))
+        cv_new = jax.lax.dynamic_update_slice(cv, vv, (0, off, 0, 0))
+        ck = jnp.where(in_rng, ck_new, ck)
+        cv = jnp.where(in_rng, cv_new, cv)
+        outs_scale = ()
+        ks = vs = None
+        if sc:  # int8 KV: scales FACTOR OUT of the einsums (per token,head)
+            ks, vs, ks_new, vs_new = sc
+            ks_u = jax.lax.dynamic_update_slice(ks, ks_new, (0, off, 0))
+            vs_u = jax.lax.dynamic_update_slice(vs, vs_new, (0, off, 0))
+            ks = jnp.where(in_rng, ks_u, ks)
+            vs = jnp.where(in_rng, vs_u, vs)
+            ck_q, cv_q = ck, cv
+            # cast only (bf16); never materialise the scaled cache —
+            # scores multiply by ks afterwards, vs folds into p below
+            ck = ck.astype(q.dtype)
+            cv = cv.astype(q.dtype)
+            outs_scale = (ks, vs)
+        # grouped-query local scores without materialising repeated KV
+        qg = q.reshape(bl, 1, hkv, group, dh)
+        sres = jnp.einsum("bqhgd,bkhd->bhgqk", qg, ck).astype(jnp.float32)
+        if ks is not None:
+            sres = sres * ks.transpose(0, 2, 1)[:, :, None, None, :]
+        sres = sres / math.sqrt(dh)
+        kpos = start + jnp.arange(s_loc)
+        sres = jnp.where((kpos <= pos)[None, None, None, None, :],
+                         sres, -1e30)
+        m_loc = sres.max(-1)  # [B,Hkv,G,1]
+        m = jax.lax.pmax(m_loc, kv_ax)
+        p = jnp.exp(sres - m[..., None])
+        l_loc = p.sum(-1)
+        pv = p if vs is None else (
+            p * vs.transpose(0, 2, 1)[:, :, None, None, :])
+        o_loc = jnp.einsum("bhgqk,bkhd->bqhgd", pv.astype(cv.dtype), cv)
+        l = jax.lax.psum(l_loc, kv_ax)  # [B,Hkv,G,1]
+        o = jax.lax.psum(o_loc.astype(jnp.float32), kv_ax)
+        denom = jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+        out = (o / denom).reshape(bl, 1, hq, dh).astype(q.dtype)
+        if sc:
+            return (out, ck_q, cv_q) + outs_scale
+        return out, ck, cv
+
+    spec_q = P(b_ax, None, None, None)
+    spec_c = P(b_ax, kv_ax, None, None)
+    spec_s = P(b_ax, kv_ax, None)
+    if scales is not None:
+        ks, vs, ks_new, vs_new = scales
+        mapped = jax.shard_map(
+            block, mesh=mesh,
+            in_specs=(spec_q, spec_c, spec_c, spec_q, spec_q, P(),
+                      spec_s, spec_s, P(b_ax, None, None),
+                      P(b_ax, None, None)),
+            out_specs=(spec_q, spec_c, spec_c, spec_s, spec_s),
+            check_vma=False,
+        )
+        return mapped(q, ck, cv, kk, vv, pos, ks, vs, ks_new, vs_new)
+    mapped = jax.shard_map(
+        block, mesh=mesh,
+        in_specs=(spec_q, spec_c, spec_c, spec_q, spec_q, P()),
+        out_specs=(spec_q, spec_c, spec_c),
+        check_vma=False,
+    )
+    return mapped(q, ck, cv, kk, vv, pos)
+
+
+def _moe_ffn_ep(lp, x, cfg: TransformerConfig, mesh, rules):
+    """Expert-parallel MoE via shard_map + all_to_all (GShard proper).
+
+    The pjit scatter-based dispatch (_moe_ffn below) lets SPMD materialise
+    a full [E, cap, D] buffer per device and all-reduce it (~5.7 GiB/layer
+    for qwen2-moe; EXPERIMENTS.md §Perf A).  Here tokens are routed
+    locally per device, exchanged with ONE all_to_all over the expert
+    axis (bytes ≈ T_loc·D — three orders of magnitude less), experts
+    compute on their local shard, and a reverse all_to_all returns the
+    outputs.  Local-capacity dropping replaces global-capacity dropping
+    (standard GShard semantics).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    m = cfg.moe
+    b, s, d = x.shape
+    ep_ax = rules.get("expert")
+    batch_ax = rules.get("batch")
+    # internal token split over the expert axis even when the global
+    # residual stream is not sequence-sharded (free slice in, one bf16
+    # all-gather out instead of f32 reshards at every boundary)
+    seq_ax = rules.get("act_seq") or ep_ax
+    fsdp_ax = rules.get("embed") if isinstance(rules.get("embed"), str) \
+        else None
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ep = sizes[ep_ax]
+    e_loc = m.e_pad // ep
+
+    def block(xb, router, ew1, ew3, ew2):
+        bl, sl, _ = xb.shape
+        t_loc = bl * sl
+        xf = xb.reshape(t_loc, d)
+        logits = (xf @ router).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_w, gate_i = jax.lax.top_k(probs, m.top_k)
+        gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+        cap = max(1, int(math.ceil(
+            t_loc * m.top_k / m.e_pad * m.capacity_factor)))
+        flat_e = gate_i.reshape(-1)
+        onehot = jax.nn.one_hot(flat_e, m.e_pad, dtype=jnp.int32)
+        pos = (jnp.cumsum(onehot, axis=0) * onehot - 1).max(axis=-1)
+        keep = pos < cap
+        tok_idx = jnp.repeat(jnp.arange(t_loc), m.top_k)
+        send = jnp.zeros((m.e_pad, cap, d), xb.dtype)
+        send = send.at[
+            jnp.where(keep, flat_e, 0), jnp.where(keep, pos, cap - 1)
+        ].add(jnp.where(keep[:, None], xf[tok_idx], 0.0))
+        # exchange: [E, cap, D] -> [E_loc, ep*cap, D]
+        recv = jax.lax.all_to_all(
+            send, ep_ax, split_axis=0, concat_axis=1, tiled=True)
+        if fsdp_ax is not None:  # FSDP: regather sharded D dim
+            ew1_ = jax.lax.all_gather(ew1, fsdp_ax, axis=1, tiled=True)
+            ew3_ = jax.lax.all_gather(ew3, fsdp_ax, axis=1, tiled=True)
+            ew2_ = jax.lax.all_gather(ew2, fsdp_ax, axis=2, tiled=True)
+        else:
+            ew1_, ew3_, ew2_ = ew1, ew3, ew2
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", recv, ew1_)) \
+            * jnp.einsum("ecd,edf->ecf", recv, ew3_)
+        eo = jnp.einsum("ecf,efd->ecd", h, ew2_)
+        back = jax.lax.all_to_all(
+            eo, ep_ax, split_axis=1, concat_axis=0, tiled=True)
+        gathered = back[jnp.where(keep, flat_e, 0),
+                        jnp.where(keep, pos, cap - 1)]
+        gathered = jnp.where(keep[:, None], gathered, 0.0)
+        w = gate_w.reshape(-1)[:, None].astype(xb.dtype)
+        out = jax.ops.segment_sum(gathered * w, tok_idx,
+                                  num_segments=t_loc)
+        me = probs.mean(axis=0)
+        ce = jnp.bincount(flat_e, length=m.n_experts).astype(jnp.float32) \
+            / max(t_loc * m.top_k, 1)
+        aux = m.n_experts * jnp.sum(me * ce) * m.router_aux_weight
+        aux = jax.lax.pmean(aux, tuple(mesh.axis_names))
+        return out.reshape(bl, sl, d), aux
+
+    mapped = jax.shard_map(
+        block,
+        mesh=mesh,
+        in_specs=(P(batch_ax, seq_ax, None), P(None, None),
+                  P(ep_ax, fsdp_ax, None), P(ep_ax, fsdp_ax, None),
+                  P(ep_ax, None, fsdp_ax)),
+        out_specs=(P(batch_ax, seq_ax, None), P()),
+        check_vma=False,
+    )
+    out, aux = mapped(x, lp["router"], lp["ew1"], lp["ew3"], lp["ew2"])
+    if m.n_shared:
+        xf = x.reshape(b * s, d)
+        sh = jax.nn.silu(xf @ lp["sw1"]) * (xf @ lp["sw3"])
+        out = out + (sh @ lp["sw2"]).reshape(b, s, d)
+    return out, aux
+
+
+def _moe(lp, x, cfg: TransformerConfig):
+    """Route to the shard_map EP path when a mesh + expert axis are live."""
+    from repro.parallel.axes import current_mesh, current_rules
+
+    mesh = current_mesh()
+    rules = current_rules() or {}
+    ep_ax = rules.get("expert")
+    if mesh is not None and isinstance(ep_ax, str):
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        ep = sizes.get(ep_ax, 1)
+        b, s, _ = x.shape
+        batch_ax = rules.get("batch")
+        seq_ax = rules.get("act_seq") or ep_ax
+        bsh = 1
+        for a in (batch_ax if isinstance(batch_ax, tuple)
+                  else (batch_ax,) if batch_ax else ()):
+            bsh *= sizes.get(a, 1)
+        ssh = sizes.get(seq_ax, 1) if isinstance(seq_ax, str) else 1
+        if (ep > 1 and cfg.moe.e_pad % ep == 0 and b % bsh == 0
+                and s % ssh == 0 and (b * s) // (bsh * ssh) >= 1):
+            return _moe_ffn_ep(lp, x, cfg, mesh, rules)
+    return _moe_ffn(lp, x, cfg)
+
+
+def _moe_ffn(lp, x, cfg: TransformerConfig):
+    """Capacity-based top-k MoE (GShard-style dispatch via sorted scatter)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    logits = (xf @ lp["router"]).astype(jnp.float32)  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_i = jax.lax.top_k(probs, m.top_k)  # [T, k]
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+    cap = int(math.ceil(t * m.top_k / m.n_experts * m.capacity_factor))
+    # position of each (token, slot) within its expert via cumsum of one-hot
+    flat_e = gate_i.reshape(-1)  # [T*k]
+    onehot = jax.nn.one_hot(flat_e, m.n_experts, dtype=jnp.int32)
+    pos_in_e = jnp.cumsum(onehot, axis=0) * onehot - 1  # [T*k, E]
+    pos = pos_in_e.max(axis=-1)  # [T*k]
+    keep = pos < cap
+    # dispatch buffer [E_pad, cap, D] (padding experts receive no tokens)
+    buf = jnp.zeros((m.e_pad, cap, d), x.dtype)
+    tok_idx = jnp.repeat(jnp.arange(t), m.top_k)
+    buf = buf.at[
+        jnp.where(keep, flat_e, 0),
+        jnp.where(keep, pos, cap - 1),
+    ].add(jnp.where(keep[:, None], xf[tok_idx], 0.0))
+    buf = hint(buf, "expert", None, None)
+    # expert SwiGLU
+    h1 = jnp.einsum("ecd,edf->ecf", buf, lp["ew1"])
+    h3 = jnp.einsum("ecd,edf->ecf", buf, lp["ew3"])
+    h = jax.nn.silu(h1) * h3
+    eo = jnp.einsum("ecf,efd->ecd", h, lp["ew2"])  # [E, cap, D]
+    eo = hint(eo, "expert", None, None)
+    # combine
+    gathered = eo[jnp.where(keep, flat_e, 0), jnp.where(keep, pos, cap - 1)]
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    w = gate_w.reshape(-1)[:, None].astype(x.dtype)
+    out = jax.ops.segment_sum(gathered * w, tok_idx, num_segments=t)
+    # auxiliary load-balance loss (Switch-style)
+    me = probs.mean(axis=0)  # mean router prob per expert
+    ce = jnp.bincount(flat_e, length=m.n_experts).astype(jnp.float32) / max(
+        t * m.top_k, 1
+    )
+    aux = m.n_experts * jnp.sum(me * ce) * m.router_aux_weight
+    if m.n_shared:
+        sh = jax.nn.silu(xf @ lp["sw1"]) * (xf @ lp["sw3"])
+        out = out + sh @ lp["sw2"]
+    return out.reshape(b, s, d), aux
+
+
+def _dense_ffn(lp, x):
+    h = jax.nn.silu(x @ lp["w1"]) * (x @ lp["w3"])
+    h = hint(h, "batch", None, "mlp")
+    return h @ lp["w2"]
+
+
+def _layer(lp, x, positions, cfg: TransformerConfig,
+           cache: Optional[Tuple] = None, pos_limit=None):
+    """One decoder layer.  cache=(k_cache, v_cache) for decode."""
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    y = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    q = y @ lp["wq"]
+    kk = y @ lp["wk"]
+    vv = y @ lp["wv"]
+    if cfg.qkv_bias:
+        q, kk, vv = q + lp["bq"], kk + lp["bk"], vv + lp["bv"]
+    q = q.reshape(b, s, hq, hd)
+    kk = kk.reshape(b, s, hkv, hd)
+    vv = vv.reshape(b, s, hkv, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    kk = rope(kk, positions, cfg.rope_theta)
+    new_cache = None
+    if cache is None:
+        attn = _attention(q, kk, vv, causal=True, q_chunk=cfg.attn_q_chunk)
+    else:
+        pos0 = positions[0, 0] if positions.ndim == 2 else positions[0]
+        from repro.parallel.axes import current_mesh, current_rules
+
+        mesh = current_mesh()
+        rules = current_rules() or {}
+        if len(cache) == 4:  # int8 KV cache: (ck, cv, k_scale, v_scale)
+            ck, cv, ks, vs = cache
+            ks_new = jnp.max(jnp.abs(kk), axis=-1) / 127.0 + 1e-8
+            vs_new = jnp.max(jnp.abs(vv), axis=-1) / 127.0 + 1e-8
+            kk_q = jnp.clip(jnp.round(kk / ks_new[..., None]),
+                            -127, 127).astype(jnp.int8)
+            vv_q = jnp.clip(jnp.round(vv / vs_new[..., None]),
+                            -127, 127).astype(jnp.int8)
+            dist = None
+            if mesh is not None:
+                dist = _decode_attn_dist(
+                    q, ck, cv, kk_q, vv_q, pos0, cfg, mesh, rules,
+                    scales=(ks, vs, ks_new.astype(jnp.float32),
+                            vs_new.astype(jnp.float32)))
+            if dist is not None:
+                attn, ck, cv, ks, vs = dist
+            else:  # single-device fallback: dequantize-then-attend
+                ck = jax.lax.dynamic_update_slice(ck, kk_q, (0, pos0, 0, 0))
+                cv = jax.lax.dynamic_update_slice(cv, vv_q, (0, pos0, 0, 0))
+                ks = jax.lax.dynamic_update_slice(
+                    ks, ks_new.astype(jnp.float32), (0, pos0, 0))
+                vs = jax.lax.dynamic_update_slice(
+                    vs, vs_new.astype(jnp.float32), (0, pos0, 0))
+                ckf = ck.astype(jnp.float32) * ks[..., None]
+                cvf = cv.astype(jnp.float32) * vs[..., None]
+                attn = _attention(q, ckf.astype(q.dtype),
+                                  cvf.astype(q.dtype), causal=False,
+                                  kv_pos_limit=pos_limit)
+            new_cache = (ck, cv, ks, vs)
+            attn = hint(attn, "batch", None, "heads", None)
+            x = x + (attn.reshape(b, s, hq * hd) @ lp["wo"])
+            y = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+            if cfg.moe is None:
+                x = x + _dense_ffn(lp, y)
+                aux = jnp.zeros((), jnp.float32)
+            else:
+                ffn, aux = _moe(lp, y, cfg)
+                x = x + ffn
+            x = hint(x, "batch", "act_seq", "act_embed")
+            return x, new_cache, aux
+        ck, cv = cache  # [B, Smax, Hkv, Dh]
+        dist = None
+        if mesh is not None:
+            dist = _decode_attn_dist(q, ck, cv, kk, vv, pos0, cfg, mesh,
+                                     rules)
+        if dist is not None:
+            attn, ck, cv = dist
+        else:
+            ck = jax.lax.dynamic_update_slice(ck, kk, (0, pos0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, vv, (0, pos0, 0, 0))
+            ck = hint(ck, "batch", "kv_seq", None, None)
+            cv = hint(cv, "batch", "kv_seq", None, None)
+            attn = _attention(q, ck, cv, causal=False,
+                              kv_pos_limit=pos_limit)
+        new_cache = (ck, cv)
+    attn = hint(attn, "batch", None, "heads", None)
+    x = x + (attn.reshape(b, s, hq * hd) @ lp["wo"])
+    y = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.moe is None:
+        x = x + _dense_ffn(lp, y)
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        ffn, aux = _moe(lp, y, cfg)
+        x = x + ffn
+    x = hint(x, "batch", "act_seq", "act_embed")
+    return x, new_cache, aux
+
+
+def _stack_scan(params, x, positions, cfg: TransformerConfig):
+    """scan over stacked layers (+ remat)."""
+
+    def body(carry, lp):
+        x, aux = carry
+        x, _, a = _layer(lp, x, positions, cfg)
+        return (x, aux + a), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"])
+    return x, aux
+
+
+# --------------------------------------------------------------------------- #
+# training loss (chunked CE + microbatching)
+# --------------------------------------------------------------------------- #
+def _chunked_ce(x, lm_head, labels, chunk: int):
+    """mean token CE without materialising [B, S, V]."""
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    n_chunks = s // chunk
+    assert s % chunk == 0, (s, chunk)
+    xc = x.reshape(b, n_chunks, chunk, d).swapaxes(0, 1)
+    lc = labels.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+
+    def body(tot, xl):
+        xch, lch = xl
+        logits = (xch @ lm_head).astype(jnp.float32)
+        logits = hint(logits, "batch", None, "vocab")
+        lz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lch[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum(lz - gold), None
+
+    tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, lc))
+    return tot / (b * s)
+
+
+def _forward_loss(params, tokens, labels, cfg: TransformerConfig):
+    x = params["embed"][tokens]
+    x = hint(x, "batch", "act_seq", "act_embed")
+    positions = jnp.broadcast_to(
+        jnp.arange(tokens.shape[1]), tokens.shape
+    )
+    x, aux = _stack_scan(params, x, positions, cfg)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return _chunked_ce(x, params["lm_head"], labels, cfg.ce_chunk) + aux
+
+
+def train_loss(params, batch, cfg: TransformerConfig):
+    """Mean CE over the (optionally microbatched) global batch."""
+    tokens, labels = batch["tokens"], batch["labels"]
+    nm = cfg.n_microbatches
+    if nm <= 1:
+        return _forward_loss(params, tokens, labels, cfg)
+    b = tokens.shape[0]
+    assert b % nm == 0, (b, nm)
+    tok = tokens.reshape(nm, b // nm, -1)
+    lab = labels.reshape(nm, b // nm, -1)
+    # keep each microbatch data-sharded (not the microbatch dim itself)
+    tok = hint(tok, None, "batch", None)
+    lab = hint(lab, None, "batch", None)
+
+    def body(tot, tl):
+        t, l_ = tl
+        return tot + _forward_loss(params, t, l_, cfg), None
+
+    tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (tok, lab))
+    return tot / nm
+
+
+# --------------------------------------------------------------------------- #
+# serving
+# --------------------------------------------------------------------------- #
+def init_cache(cfg: TransformerConfig, batch: int, max_seq: int,
+               dtype=None) -> Dict:
+    dt = dtype or cfg.dtype
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill_step(params, tokens, cfg: TransformerConfig,
+                 max_seq: Optional[int] = None):
+    """Process a prompt, return (cache, last-token logits).
+
+    ``max_seq`` pads the returned cache so decode can continue past the
+    prompt length.
+    """
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    x = hint(x, "batch", "act_seq", "act_embed")
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(carry, lp):
+        x = carry
+        y, cache_l, _ = _layer_prefill(lp, x, positions, cfg)
+        return y, cache_l
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, caches = jax.lax.scan(body_fn, x, params["layers"])
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, -1] @ params["lm_head"]).astype(jnp.float32)
+    ck, cv = caches
+    if max_seq is not None and max_seq > s:
+        pad = ((0, 0), (0, 0), (0, max_seq - s), (0, 0), (0, 0))
+        ck, cv = jnp.pad(ck, pad), jnp.pad(cv, pad)
+    cache = {"k": ck, "v": cv, "pos": jnp.array(s, jnp.int32)}
+    return cache, logits
+
+
+def _layer_prefill(lp, x, positions, cfg):
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    y = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    q = y @ lp["wq"]
+    kk = y @ lp["wk"]
+    vv = y @ lp["wv"]
+    if cfg.qkv_bias:
+        q, kk, vv = q + lp["bq"], kk + lp["bk"], vv + lp["bv"]
+    q = rope(q.reshape(b, s, hq, hd), positions, cfg.rope_theta)
+    kk = rope(kk.reshape(b, s, hkv, hd), positions, cfg.rope_theta)
+    vv = vv.reshape(b, s, hkv, hd)
+    attn = _attention(q, kk, vv, causal=True, q_chunk=cfg.attn_q_chunk)
+    x = x + (attn.reshape(b, s, hq * hd) @ lp["wo"])
+    y = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.moe is None:
+        x = x + _dense_ffn(lp, y)
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        ffn, aux = _moe(lp, y, cfg)
+        x = x + ffn
+    kk = hint(kk, "batch", "kv_seq", None, None)
+    vv = hint(vv, "batch", "kv_seq", None, None)
+    return x, (kk, vv), aux
+
+
+def decode_step(params, cache, tokens, cfg: TransformerConfig):
+    """One decode step: tokens [B] -> logits [B, V], updated cache.
+
+    The KV cache is [L, B, Smax, Hkv, Dh], sequence-sharded on the model
+    axis for the long-context cells (distributed softmax over kv_seq).
+    """
+    b = tokens.shape[0]
+    pos = cache["pos"]
+    x = params["embed"][tokens][:, None, :]  # [B, 1, D]
+    x = hint(x, "batch", "act_seq", "act_embed")
+    positions = jnp.broadcast_to(pos[None, None], (b, 1))
+
+    quant = "k_scale" in cache
+
+    def body(x, lp_cache):
+        if quant:
+            lp, ck, cv, ks, vs = lp_cache
+            cache_l = (ck, cv, ks, vs)
+        else:
+            lp, ck, cv = lp_cache
+            cache_l = (ck, cv)
+        y, new_cache, _ = _layer(lp, x, positions, cfg, cache=cache_l,
+                                 pos_limit=pos)
+        return y, new_cache
+
+    if quant:
+        x, (new_k, new_v, new_ks, new_vs) = jax.lax.scan(
+            body, x,
+            (params["layers"], cache["k"], cache["v"],
+             cache["k_scale"], cache["v_scale"]),
+        )
+    else:
+        x, (new_k, new_v) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"])
+        )
+    x = rmsnorm(x[:, 0], params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["lm_head"]).astype(jnp.float32)
+    logits = hint(logits, "batch", "vocab")
+    out_cache = {"k": new_k, "v": new_v, "pos": pos + 1}
+    if quant:
+        out_cache["k_scale"] = new_ks
+        out_cache["v_scale"] = new_vs
+    return logits, out_cache

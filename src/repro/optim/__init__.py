@@ -1,0 +1,15 @@
+from .adamw import (  # noqa: F401
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    cosine_schedule,
+    linear_warmup,
+)
+from .compression import (  # noqa: F401
+    CompressionState,
+    compress_int8,
+    decompress_int8,
+    ef_topk_compress,
+    ef_topk_init,
+)

@@ -1,0 +1,122 @@
+"""AdamW with fp32 master weights, sharded optimizer state, schedules.
+
+Mixed-precision contract: model params may be bf16; the optimizer keeps an
+fp32 master copy plus fp32 moments — all sharded identically to the params
+(ZeRO-3 style under the 2D mesh; the sharding specs come from
+repro.parallel.sharding so opt state never concentrates on one device).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "clip_by_global_norm",
+    "cosine_schedule",
+    "linear_warmup",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"  # cosine | linear | constant
+    min_lr_frac: float = 0.1
+
+
+def adamw_init(params: Any) -> Dict[str, Any]:
+    f32 = lambda p: p.astype(jnp.float32)
+    return {
+        "master": jax.tree.map(f32, params),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def cosine_schedule(step, cfg: AdamWConfig):
+    warm = linear_warmup(step, cfg)
+    t = jnp.clip(
+        (step - cfg.warmup_steps)
+        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * t)
+    )
+    return warm * cos
+
+
+def linear_warmup(step, cfg: AdamWConfig):
+    return jnp.minimum(1.0, (step + 1) / jnp.maximum(cfg.warmup_steps, 1))
+
+
+def _lr_at(step, cfg: AdamWConfig):
+    if cfg.schedule == "cosine":
+        return cfg.lr * cosine_schedule(step, cfg)
+    if cfg.schedule == "linear":
+        t = jnp.clip(step / jnp.maximum(cfg.total_steps, 1), 0.0, 1.0)
+        return cfg.lr * linear_warmup(step, cfg) * (1 - (1 - cfg.min_lr_frac) * t)
+    return cfg.lr * linear_warmup(step, cfg)
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    gn = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads))
+    )
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def adamw_update(
+    grads: Any,
+    opt_state: Dict[str, Any],
+    cfg: AdamWConfig,
+    param_dtype=jnp.bfloat16,
+) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    """Returns (new_params_in_model_dtype, new_opt_state, metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = jnp.zeros(())
+    step = opt_state["step"] + 1
+    lr = _lr_at(step, cfg)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    new_m = jax.tree.map(
+        lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g, opt_state["m"], grads
+    )
+    new_v = jax.tree.map(
+        lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g, opt_state["v"], grads
+    )
+
+    def upd(p, m, v):
+        mhat = m / b1c
+        vhat = v / b2c
+        return p - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                         + cfg.weight_decay * p)
+
+    new_master = jax.tree.map(upd, opt_state["master"], new_m, new_v)
+    new_params = jax.tree.map(lambda p: p.astype(param_dtype), new_master)
+    return (
+        new_params,
+        {"master": new_master, "m": new_m, "v": new_v, "step": step},
+        {"lr": lr, "grad_norm": gnorm},
+    )

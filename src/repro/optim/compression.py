@@ -1,0 +1,80 @@
+"""Gradient compression for cross-pod data parallelism.
+
+Two composable schemes (distributed-optimization tricks for the DCN hop,
+DESIGN.md §5):
+
+* **int8 quantized all-reduce** — per-tensor symmetric int8 with an fp32
+  scale; 4× less DCN traffic for the pod-level gradient reduction.
+* **error-feedback top-k** — keep the top-k fraction of gradient entries,
+  accumulate the rest in a local residual (Stich et al.; SGD with memory),
+  so sparsification stays unbiased over time.
+
+On hardware these wrap the pod-axis psum inside shard_map (compress →
+all-reduce int8/sparse → decompress).  The pure functions here are exactly
+those wrappers' bodies and are unit-tested for the EF contract
+(compressed + residual == original).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "compress_int8",
+    "decompress_int8",
+    "CompressionState",
+    "ef_topk_init",
+    "ef_topk_compress",
+]
+
+
+def compress_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)).astype(jnp.float32) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array,
+                    dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+class CompressionState(NamedTuple):
+    residual: Any  # error-feedback memory, same tree as grads
+
+
+def ef_topk_init(grads: Any) -> CompressionState:
+    return CompressionState(
+        residual=jax.tree.map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads
+        )
+    )
+
+
+def ef_topk_compress(
+    grads: Any, state: CompressionState, k_frac: float = 0.1
+) -> Tuple[Any, CompressionState]:
+    """Per-leaf magnitude top-k with error feedback.
+
+    Returns (sparse-but-dense-layout grads, new residual state).  The dense
+    layout keeps SPMD-friendly static shapes; on the wire the zeros compress
+    (or use (values, indices) pairs on a real deployment).
+    """
+
+    def one(g, r):
+        acc = g.astype(jnp.float32) + r
+        k = max(1, int(acc.size * k_frac))
+        flat = jnp.abs(acc.reshape(-1))
+        thresh = jax.lax.top_k(flat, k)[0][-1]
+        mask = (jnp.abs(acc) >= thresh).astype(jnp.float32)
+        sent = acc * mask
+        return sent.astype(g.dtype), acc - sent
+
+    outs = jax.tree.map(one, grads, state.residual)
+    sent = jax.tree.map(lambda o: o[0], outs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    resid = jax.tree.map(lambda o: o[1], outs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return sent, CompressionState(residual=resid)

@@ -1,0 +1,10 @@
+from .axes import (  # noqa: F401
+    axis_rules,
+    current_rules,
+    hint,
+    logical_to_spec,
+)
+from .sharding import (  # noqa: F401
+    input_sharding_specs,
+    param_sharding_specs,
+)

@@ -1,0 +1,105 @@
+"""Logical-axis sharding hints (mesh-agnostic model code).
+
+Models annotate activations with *logical* axis names
+(``hint(x, "batch", "seq", "embed")``); a context manager installs the
+mapping from logical names to physical mesh axes.  Outside any mapping the
+hint is a no-op, so the same model code runs in single-device tests and in
+the 512-chip dry-run unchanged.
+
+Default production mapping (DESIGN.md §5):
+
+    batch  -> ("pod", "data")   (outer DP over pods, inner DP in-pod)
+    embed  -> "data"            (FSDP shard of the hidden dim where useful)
+    heads  -> "model"           (tensor parallel attention)
+    mlp    -> "model"           (tensor parallel FFN)
+    expert -> "model"           (expert parallel MoE)
+    vocab  -> "model"           (sharded embed/unembed + chunked CE)
+    edges  -> ("pod", "data", "model")  (GNN edge-parallel over everything)
+    nodes  -> ("pod", "data")   (GNN node shards)
+    rows   -> "model"           (recsys embedding-table row shards)
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["axis_rules", "current_rules", "hint", "logical_to_spec",
+           "DEFAULT_RULES", "SINGLE_AXIS_RULES"]
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+DEFAULT_RULES: Dict[str, AxisVal] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": "data",  # PARAM dim only (FSDP); activations use act_embed
+    "act_embed": None,
+    # Megatron-SP style: residual-stream seq dim sharded over TP between
+    # layers (all-gathered inside attention/MLP automatically by SPMD) —
+    # cuts the remat carry by the TP degree.
+    "act_seq": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "expert": "model",
+    "vocab": "model",
+    "layers": None,
+    "edges": ("pod", "data", "model"),
+    "nodes": ("pod", "data"),
+    "feat": None,
+    "rows": "model",
+    "kv_seq": "model",  # long-context decode: sequence-sharded KV cache
+}
+
+# single-pod mapping: identical but without the "pod" axis
+SINGLE_AXIS_RULES: Dict[str, AxisVal] = {
+    **DEFAULT_RULES,
+    "batch": "data",
+    "edges": ("data", "model"),
+    "nodes": "data",
+}
+
+_state = threading.local()
+
+
+def current_rules() -> Optional[Dict[str, AxisVal]]:
+    return getattr(_state, "rules", None)
+
+
+def current_mesh():
+    """Mesh installed by axis_rules (for shard_map-based layers)."""
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Dict[str, AxisVal], mesh=None):
+    prev = current_rules()
+    prev_mesh = current_mesh()
+    _state.rules = rules
+    _state.mesh = mesh
+    try:
+        yield
+    finally:
+        _state.rules = prev
+        _state.mesh = prev_mesh
+
+
+def logical_to_spec(names: Sequence[Optional[str]],
+                    rules: Optional[Dict[str, AxisVal]] = None) -> P:
+    rules = rules if rules is not None else (current_rules() or {})
+    return P(*[rules.get(n) if n else None for n in names])
+
+
+def hint(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op without rules."""
+    rules = current_rules()
+    if not rules:
+        return x
+    spec = logical_to_spec(names, rules)
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x  # no mesh context (e.g. plain CPU test) — ignore

@@ -1,0 +1,1 @@
+from .loop import StragglerMonitor, TrainLoop, TrainLoopConfig  # noqa: F401

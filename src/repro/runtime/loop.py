@@ -1,0 +1,140 @@
+"""Fault-tolerant training runtime.
+
+* **checkpoint/restart** — CheckpointManager (atomic, async, retention) +
+  auto-resume; the data pipeline is seeded-by-step so a restart replays the
+  exact batch stream.
+* **straggler detection** — per-step wall-time EMA; the *paper's own slope
+  controller* is reused as the detector (a straggling host is exactly a
+  "slow PID" whose residual-decay slope lags): feed per-host step times as
+  the progress signal, get "move load away from host i" decisions.  In this
+  single-process container the monitor runs in advisory mode (reports +
+  tested against synthetic host timings); on a pod it drives the bucket /
+  expert rebalancer.
+* **elastic scaling** — the bucket-granular partition (core.distributed)
+  lets K change between chunks; ``TrainLoop.on_world_change`` re-seeds the
+  controller's slopes (DynamicController.reset_pid).
+* **fault injection** — ``crash_at_step`` simulates a hard kill for the
+  restart tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core.partition import DynamicController, DynamicControllerConfig
+
+__all__ = ["TrainLoopConfig", "TrainLoop", "StragglerMonitor"]
+
+
+class StragglerMonitor:
+    """Slope-EMA straggler detector (the paper's controller on step times).
+
+    Feed per-host step durations; a host whose EMA'd log-slowness exceeds
+    the fastest by the paper's 50% rule is flagged.  `advise()` returns the
+    same MoveInstruction the partition controller would issue.
+    """
+
+    def __init__(self, n_hosts: int, eta: float = 0.5, z: int = 10):
+        self.ctl = DynamicController(
+            DynamicControllerConfig(
+                k=n_hosts, target_error=1e-6, eta=eta, z=z
+            )
+        )
+        self.n_hosts = n_hosts
+
+    def advise(self, step_times: np.ndarray,
+               load_units: Optional[np.ndarray] = None):
+        """step_times: [n_hosts] seconds.  Returns MoveInstruction or None.
+
+        The controller's input plays the role of the residual magnitude
+        (bigger = slower PID), so step times feed in directly: the host
+        with the largest EMA'd log step-time becomes i_min and sheds load.
+        """
+        times = np.maximum(np.asarray(step_times, np.float64), 1e-9)
+        sizes = (load_units if load_units is not None
+                 else np.full(self.n_hosts, 1 << 20))
+        return self.ctl.update(times, np.asarray(sizes))
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int
+    ckpt_dir: str
+    ckpt_every: int = 50
+    keep: int = 3
+    log_every: int = 10
+    crash_at_step: Optional[int] = None  # fault injection (tests)
+    n_hosts: int = 1  # straggler monitor width
+
+
+class TrainLoop:
+    """Generic step loop: state = (params, opt_state); restart-safe."""
+
+    def __init__(
+        self,
+        step_fn: Callable[[Any, Any, Dict], tuple],
+        make_batch: Callable[[int], Dict],
+        init_state: Callable[[], tuple],
+        cfg: TrainLoopConfig,
+    ):
+        self.step_fn = step_fn
+        self.make_batch = make_batch
+        self.init_state = init_state
+        self.cfg = cfg
+        self.mgr = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep)
+        self.monitor = StragglerMonitor(cfg.n_hosts)
+        self.metrics_log: list = []
+
+    def run(self, verbose: bool = False) -> Dict[str, Any]:
+        cfg = self.cfg
+        params, opt_state = self.init_state()
+        start = 0
+        restored = self.mgr.restore_or_none((params, opt_state))
+        if restored is not None:
+            (params, opt_state), step, _extra = restored
+            start = step
+            if verbose:
+                print(f"[resume] from step {start}")
+        t_hist = []
+        for step in range(start, cfg.total_steps):
+            if cfg.crash_at_step is not None and step == cfg.crash_at_step:
+                # simulate a hard kill AFTER some checkpoints were cut
+                self.mgr.wait()
+                raise RuntimeError(f"injected fault at step {step}")
+            batch = self.make_batch(step)
+            t0 = time.perf_counter()
+            params, opt_state, metrics = self.step_fn(
+                params, opt_state, batch
+            )
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            t_hist.append(dt)
+            self.metrics_log.append(
+                {k: float(np.asarray(v)) for k, v in metrics.items()}
+                | {"step": step, "sec": dt}
+            )
+            if verbose and step % cfg.log_every == 0:
+                print(f"step {step}: loss={float(metrics['loss']):.4f} "
+                      f"({dt*1e3:.0f} ms)")
+            if (step + 1) % cfg.ckpt_every == 0:
+                self.mgr.save(step + 1, (params, opt_state),
+                              extra={"loss": float(metrics["loss"])})
+            # advisory straggler scan (single host: vector of one)
+            self.monitor.advise(np.full(cfg.n_hosts, dt))
+        self.mgr.save(cfg.total_steps, (params, opt_state))
+        self.mgr.wait()
+        return {
+            "params": params,
+            "opt_state": opt_state,
+            "metrics": self.metrics_log,
+            "mean_step_time": float(np.mean(t_hist)) if t_hist else 0.0,
+        }
+
+    def on_world_change(self, new_hosts: int):
+        """Elastic event: world size changed -> re-seed monitor slopes."""
+        self.monitor = StragglerMonitor(new_hosts)

@@ -1,0 +1,24 @@
+import numpy as np
+import pytest
+
+from repro.core import CSRGraph, pagerank_system, power_law_graph
+
+
+@pytest.fixture(scope="session")
+def small_pagerank():
+    """(P, b, x_dense) for a 300-node power-law PageRank system."""
+    g = power_law_graph(300, seed=3)
+    p, b = pagerank_system(g, damping=0.85)
+    x = np.linalg.solve(np.eye(g.n) - p.to_dense(), b)
+    return p, b, x
+
+
+@pytest.fixture(scope="session")
+def skewed_pagerank():
+    """Out-degree-ordered 1000-node system (paper Table 2 protocol)."""
+    g = power_law_graph(1000, seed=0)
+    order = np.argsort(-g.out_degree(), kind="stable")
+    g = g.reorder(order)
+    p, b = pagerank_system(g, damping=0.85)
+    x = np.linalg.solve(np.eye(g.n) - p.to_dense(), b)
+    return p, b, x

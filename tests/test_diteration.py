@@ -1,0 +1,81 @@
+"""Reference D-iteration solvers vs dense oracle (paper §2.1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    jacobi_solve,
+    pagerank_system,
+    power_law_graph,
+    random_dd_system,
+    solve_frontier_jnp,
+    solve_sequential,
+)
+
+
+def test_sequential_matches_dense(small_pagerank):
+    p, b, x = small_pagerank
+    res = solve_sequential(p, b, target_error=1e-8, eps=0.15)
+    assert res.residual <= 1e-8 * 0.15
+    np.testing.assert_allclose(res.x, x, atol=1e-7)
+
+
+def test_frontier_matches_dense(small_pagerank):
+    p, b, x = small_pagerank
+    res = solve_frontier_jnp(p, b, target_error=1e-7, eps=0.15)
+    np.testing.assert_allclose(res.x, x, atol=1e-5)
+
+
+def test_frontier_and_sequential_agree(small_pagerank):
+    """Any schedule converges to the same fixed point (schedule-freedom)."""
+    p, b, x = small_pagerank
+    r1 = solve_sequential(p, b, target_error=1e-8, eps=0.15)
+    r2 = solve_frontier_jnp(p, b, target_error=1e-8, eps=0.15)
+    np.testing.assert_allclose(r1.x, r2.x, atol=1e-5)
+
+
+def test_jacobi_agrees(small_pagerank):
+    p, b, x = small_pagerank
+    xj, iters = jacobi_solve(p, b, target_error=1e-10, eps=0.15)
+    np.testing.assert_allclose(xj, x, atol=1e-8)
+    assert iters > 1
+
+
+def test_diteration_cheaper_than_jacobi(small_pagerank):
+    """Paper claim C4: D-iteration needs fewer normalized matvecs."""
+    p, b, _ = small_pagerank
+    res = solve_sequential(p, b, target_error=1e-6, eps=0.15)
+    _, jac_iters = jacobi_solve(p, b, target_error=1e-6, eps=0.15)
+    assert res.cost_iterations < jac_iters
+
+
+def test_signed_general_system():
+    """General DD case: entries of P and B may be negative (paper §2)."""
+    g, b = random_dd_system(80, density=0.1, rho=0.7, seed=1, signed=True)
+    x = np.linalg.solve(np.eye(g.n) - g.to_dense(), b)
+    res = solve_sequential(g, b, target_error=1e-10, eps=0.3)
+    np.testing.assert_allclose(res.x, x, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(20, 60),
+    rho=st.floats(0.3, 0.9),
+    seed=st.integers(0, 10_000),
+)
+def test_property_dd_systems_converge(n, rho, seed):
+    """Property: any spectral-radius<1 system is solved by the diffusion."""
+    g, b = random_dd_system(n, density=0.15, rho=rho, seed=seed, signed=True)
+    x = np.linalg.solve(np.eye(n) - g.to_dense(), b)
+    res = solve_sequential(g, b, target_error=1e-9, eps=1 - rho)
+    np.testing.assert_allclose(res.x, x, atol=1e-5)
+
+
+def test_h_plus_f_invariant(small_pagerank):
+    """Conservation: H_n + F_n ``covers`` B exactly — at any stopping point
+    X_exact - H = (I-P)^{-1} F (error controlled by |F|)."""
+    p, b, x = small_pagerank
+    res = solve_sequential(p, b, target_error=1e-3, eps=0.15)
+    err = np.abs(res.x - x).sum()
+    # |x - h|_1 <= |F|_1 / (1 - rho); rho <= damping = 0.85
+    assert err <= res.residual / (1 - 0.85) + 1e-12

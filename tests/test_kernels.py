@@ -1,0 +1,179 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pagerank_system, power_law_graph
+from repro.kernels.attention import attention_ref, flash_attention
+from repro.kernels.diffusion import bsr_spmm, bsr_spmm_ref, prepare_bsr
+from repro.kernels.fm import (
+    fm_interaction,
+    fm_interaction_naive,
+    fm_interaction_ref,
+)
+from repro.kernels.segment import (
+    embedding_bag,
+    embedding_bag_ref,
+    segment_sum_ref,
+    segment_sum_sorted,
+)
+
+RNG = np.random.default_rng(0)
+
+
+# --------------------------------------------------------------------------- #
+# diffusion / BSR
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("n,seed", [(300, 0), (500, 2), (900, 5)])
+@pytest.mark.parametrize("cols", [1, 4])
+def test_bsr_diffusion_vs_dense(n, seed, cols):
+    g = power_law_graph(n, seed=seed)
+    p, _ = pagerank_system(g)
+    m = prepare_bsr(p.indptr, p.indices, p.weights, p.n, bs=128)
+    x = RNG.standard_normal(
+        (m.n_row_blocks * 128, cols) if cols > 1 else (m.n_row_blocks * 128,)
+    ).astype(np.float32)
+    out = np.asarray(bsr_spmm(m, jnp.asarray(x)))
+    ref = np.asarray(bsr_spmm(m, jnp.asarray(x), use_pallas=False))
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bs", [8, 64, 128])
+def test_bsr_block_sizes(bs):
+    g = power_law_graph(200, seed=7)
+    p, _ = pagerank_system(g)
+    m = prepare_bsr(p.indptr, p.indices, p.weights, p.n, bs=bs)
+    x = RNG.standard_normal(m.n_row_blocks * bs).astype(np.float32)
+    out = np.asarray(bsr_spmm(m, jnp.asarray(x)))
+    ref = np.asarray(bsr_spmm(m, jnp.asarray(x), use_pallas=False))
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_bsr_empty_rows_masked():
+    """Rows with no blocks must come out exactly zero."""
+    import numpy as np
+
+    from repro.kernels.diffusion.ref import dense_to_bsr
+    from repro.kernels.diffusion.ops import BsrMatrix
+
+    p = np.zeros((256, 256), np.float32)
+    p[:128, :128] = RNG.standard_normal((128, 128))
+    blocks, br, bc = dense_to_bsr(p, 128)
+    m = BsrMatrix(blocks, br, bc, 2, 128)
+    x = RNG.standard_normal(256).astype(np.float32)
+    out = np.asarray(bsr_spmm(m, jnp.asarray(x)))
+    assert np.all(out[128:] == 0)
+    np.testing.assert_allclose(out[:128], p[:128] @ x, rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------- #
+# segment
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize(
+    "e,d,s", [(100, 4, 7), (513, 8, 64), (2048, 32, 500), (4096, 128, 11)]
+)
+def test_segment_sum_shapes(e, d, s):
+    seg = np.sort(RNG.integers(0, s, e)).astype(np.int32)
+    data = RNG.standard_normal((e, d)).astype(np.float32)
+    out = np.asarray(segment_sum_sorted(jnp.asarray(data), jnp.asarray(seg), s))
+    ref = np.asarray(segment_sum_ref(jnp.asarray(data), jnp.asarray(seg), s))
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    e=st.integers(1, 600),
+    d=st.sampled_from([1, 3, 8]),
+    s=st.integers(1, 64),
+    seed=st.integers(0, 1000),
+)
+def test_segment_sum_property(e, d, s, seed):
+    rng = np.random.default_rng(seed)
+    seg = np.sort(rng.integers(0, s, e)).astype(np.int32)
+    data = rng.standard_normal((e, d)).astype(np.float32)
+    out = np.asarray(
+        segment_sum_sorted(jnp.asarray(data), jnp.asarray(seg), s, tile=128)
+    )
+    ref = np.asarray(segment_sum_ref(jnp.asarray(data), jnp.asarray(seg), s))
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("mode", ["sum", "mean", "max"])
+def test_embedding_bag_modes(mode):
+    table = RNG.standard_normal((500, 16)).astype(np.float32)
+    ids = RNG.integers(0, 500, (32, 8)).astype(np.int32)
+    o = np.asarray(embedding_bag(jnp.asarray(table), jnp.asarray(ids),
+                                 mode=mode))
+    r = np.asarray(embedding_bag_ref(jnp.asarray(table), jnp.asarray(ids),
+                                     mode=mode))
+    np.testing.assert_allclose(o, r, rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------- #
+# fm
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("b,f,d", [(7, 5, 4), (300, 39, 10), (256, 26, 32)])
+def test_fm_vs_naive(b, f, d):
+    v = RNG.standard_normal((b, f, d)).astype(np.float32)
+    o = np.asarray(fm_interaction(jnp.asarray(v)))
+    r = np.asarray(fm_interaction_ref(jnp.asarray(v)))
+    n = np.asarray(fm_interaction_naive(jnp.asarray(v)))
+    np.testing.assert_allclose(o, r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(r, n, rtol=1e-2, atol=1e-2)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 300),
+    f=st.integers(2, 40),
+    d=st.integers(1, 32),
+    seed=st.integers(0, 1000),
+)
+def test_fm_property(b, f, d, seed):
+    rng = np.random.default_rng(seed)
+    v = rng.standard_normal((b, f, d)).astype(np.float32)
+    o = np.asarray(fm_interaction(jnp.asarray(v)))
+    n = np.asarray(fm_interaction_naive(jnp.asarray(v)))
+    np.testing.assert_allclose(o, n, rtol=5e-2, atol=5e-2)
+
+
+# --------------------------------------------------------------------------- #
+# attention
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize(
+    "b,hq,hkv,s,dh,causal",
+    [
+        (2, 4, 2, 256, 64, True),
+        (1, 8, 1, 128, 32, True),  # MQA
+        (2, 4, 4, 384, 64, False),  # MHA bidirectional
+        (1, 2, 1, 100, 64, True),  # padded seq
+        (1, 16, 2, 128, 128, True),
+    ],
+)
+def test_flash_attention(b, hq, hkv, s, dh, causal):
+    q = (RNG.standard_normal((b, hq, s, dh)) * 0.2).astype(np.float32)
+    k = (RNG.standard_normal((b, hkv, s, dh)) * 0.2).astype(np.float32)
+    v = RNG.standard_normal((b, hkv, s, dh)).astype(np.float32)
+    o = np.asarray(
+        flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                        causal=causal)
+    )
+    r = np.asarray(
+        attention_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                      causal=causal)
+    )
+    np.testing.assert_allclose(o, r, rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_bf16():
+    q = (RNG.standard_normal((1, 4, 128, 64)) * 0.2).astype(jnp.bfloat16)
+    k = (RNG.standard_normal((1, 2, 128, 64)) * 0.2).astype(jnp.bfloat16)
+    v = RNG.standard_normal((1, 2, 128, 64)).astype(jnp.bfloat16)
+    o = flash_attention(q, k, v, causal=True)
+    r = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(o, np.float32), np.asarray(r, np.float32),
+        rtol=3e-2, atol=3e-2,
+    )

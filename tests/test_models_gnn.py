@@ -1,0 +1,154 @@
+"""GNN models: losses, grads, invariance/equivariance properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import build_triplets, molecule_batch
+from repro.models import gnn
+
+
+def mk_batch(n=24, e=60, f=6, seed=0, classes=0, graphs=0, trip=False):
+    rng = np.random.default_rng(seed)
+    b = {
+        "x": rng.standard_normal((n, f)).astype(np.float32),
+        "pos": rng.standard_normal((n, 3)).astype(np.float32),
+        "z": rng.integers(0, 8, n).astype(np.int32),
+        "src": rng.integers(0, n, e).astype(np.int32),
+        "dst": rng.integers(0, n, e).astype(np.int32),
+        "node_mask": np.ones(n, np.float32),
+        "edge_mask": np.ones(e, np.float32),
+    }
+    if trip:
+        te, tf = build_triplets(b["src"], b["dst"], n, 4, seed)
+        b["trip_e"], b["trip_f"] = te, tf
+        b["trip_mask"] = np.ones(te.shape[0], np.float32)
+    if graphs:
+        b["graph_ids"] = np.sort(rng.integers(0, graphs, n)).astype(np.int32)
+        b["labels"] = rng.standard_normal(graphs).astype(np.float32)
+    elif classes:
+        b["labels"] = rng.integers(0, classes, n).astype(np.int32)
+    else:
+        b["labels"] = rng.standard_normal((n, 1)).astype(np.float32)
+    return {k: jnp.asarray(v) for k, v in b.items()}
+
+
+CONFIGS = {
+    "gin": gnn.GNNConfig(name="g", arch="gin", n_layers=3, d_hidden=16,
+                         d_feat=6, n_classes=5),
+    "meshgraphnet": gnn.GNNConfig(name="m", arch="meshgraphnet", n_layers=3,
+                                  d_hidden=16, d_feat=6, d_edge=4, d_out=1),
+    "egnn": gnn.GNNConfig(name="e", arch="egnn", n_layers=2, d_hidden=16,
+                          d_feat=6, d_out=1),
+    "dimenet": gnn.GNNConfig(name="d", arch="dimenet", n_layers=2,
+                             d_hidden=16, d_feat=6, n_bilinear=4,
+                             n_spherical=4, n_radial=4, d_out=1,
+                             task="graph"),
+}
+
+
+@pytest.mark.parametrize("arch", list(CONFIGS))
+def test_loss_and_grads(arch):
+    cfg = CONFIGS[arch]
+    batch = mk_batch(
+        classes=cfg.n_classes,
+        graphs=4 if cfg.task == "graph" else 0,
+        trip=(arch == "dimenet"),
+    )
+    p = gnn.init_params(cfg, jax.random.PRNGKey(0))
+    loss, g = jax.value_and_grad(lambda p: gnn.loss_fn(p, batch, cfg))(p)
+    assert np.isfinite(float(loss))
+    assert all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(g))
+
+
+def test_gin_permutation_invariance():
+    """Graph-level readout must be invariant to node relabelling."""
+    cfg = gnn.GNNConfig(name="g", arch="gin", n_layers=3, d_hidden=16,
+                        d_feat=6, n_classes=0, d_out=2, task="graph")
+    b = mk_batch(graphs=1)
+    p = gnn.init_params(cfg, jax.random.PRNGKey(0))
+    out1 = gnn.forward(p, b, cfg)
+    pooled1 = np.asarray(out1.sum(0))
+    n = b["x"].shape[0]
+    perm = np.random.default_rng(1).permutation(n)
+    inv = np.empty(n, np.int64)
+    inv[perm] = np.arange(n)
+    b2 = dict(b)
+    b2["x"] = b["x"][perm]
+    b2["src"] = jnp.asarray(inv)[b["src"]]
+    b2["dst"] = jnp.asarray(inv)[b["dst"]]
+    out2 = gnn.forward(p, b2, cfg)
+    pooled2 = np.asarray(out2.sum(0))
+    np.testing.assert_allclose(pooled1, pooled2, rtol=1e-4, atol=1e-4)
+
+
+def test_egnn_translation_invariance():
+    """EGNN h-outputs depend on relative positions only."""
+    cfg = CONFIGS["egnn"]
+    b = mk_batch()
+    p = gnn.init_params(cfg, jax.random.PRNGKey(0))
+    out1 = np.asarray(gnn.forward(p, b, cfg))
+    b2 = dict(b)
+    b2["pos"] = b["pos"] + jnp.asarray([5.0, -3.0, 2.0])
+    out2 = np.asarray(gnn.forward(p, b2, cfg))
+    np.testing.assert_allclose(out1, out2, rtol=1e-4, atol=1e-4)
+
+
+def test_egnn_rotation_invariance():
+    cfg = CONFIGS["egnn"]
+    b = mk_batch()
+    p = gnn.init_params(cfg, jax.random.PRNGKey(0))
+    out1 = np.asarray(gnn.forward(p, b, cfg))
+    theta = 0.7
+    rot = jnp.asarray(
+        [[np.cos(theta), -np.sin(theta), 0],
+         [np.sin(theta), np.cos(theta), 0],
+         [0, 0, 1.0]], dtype=jnp.float32)
+    b2 = dict(b)
+    b2["pos"] = b["pos"] @ rot.T
+    out2 = np.asarray(gnn.forward(p, b2, cfg))
+    np.testing.assert_allclose(out1, out2, rtol=1e-3, atol=1e-3)
+
+
+def test_dimenet_rotation_invariance():
+    """DimeNet uses distances + angles only -> rotation invariant."""
+    cfg = CONFIGS["dimenet"]
+    b = mk_batch(trip=True, graphs=2)
+    p = gnn.init_params(cfg, jax.random.PRNGKey(0))
+    out1 = np.asarray(gnn.forward(p, b, cfg))
+    theta = -0.4
+    rot = jnp.asarray(
+        [[1, 0, 0],
+         [0, np.cos(theta), -np.sin(theta)],
+         [0, np.sin(theta), np.cos(theta)]], dtype=jnp.float32)
+    b2 = dict(b)
+    b2["pos"] = b["pos"] @ rot.T
+    out2 = np.asarray(gnn.forward(p, b2, cfg))
+    np.testing.assert_allclose(out1, out2, rtol=1e-3, atol=1e-3)
+
+
+def test_edge_mask_zeroes_padding():
+    """Padded edges must not affect the output."""
+    cfg = CONFIGS["gin"]
+    b = mk_batch(classes=5)
+    p = gnn.init_params(cfg, jax.random.PRNGKey(0))
+    out1 = np.asarray(gnn.forward(p, b, cfg))
+    # add junk padding edges with mask 0
+    b2 = dict(b)
+    e_extra = 16
+    rng = np.random.default_rng(9)
+    b2["src"] = jnp.concatenate(
+        [b["src"], jnp.asarray(rng.integers(0, 24, e_extra), jnp.int32)])
+    b2["dst"] = jnp.concatenate(
+        [b["dst"], jnp.asarray(rng.integers(0, 24, e_extra), jnp.int32)])
+    b2["edge_mask"] = jnp.concatenate(
+        [b["edge_mask"], jnp.zeros(e_extra, jnp.float32)])
+    out2 = np.asarray(gnn.forward(p, b2, cfg))
+    np.testing.assert_allclose(out1, out2, rtol=1e-5, atol=1e-5)
+
+
+def test_molecule_batch_builder():
+    b = molecule_batch(8, with_triplets=True)
+    assert b["x"].shape == (240, 16)
+    assert b["graph_ids"].max() == 7
+    assert b["trip_e"].max() < b["src"].shape[0]

@@ -1,0 +1,102 @@
+"""Partition strategies + dynamic controller (paper §2.5)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    DynamicController,
+    DynamicControllerConfig,
+    apply_move,
+    cb_partition,
+    uniform_partition,
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 5000), k=st.integers(1, 64))
+def test_uniform_partition_covers(n, k):
+    if k > n:
+        k = n
+    sets = uniform_partition(n, k)
+    assert len(sets) == k
+    cat = np.concatenate([s for s in sets if s.size])
+    assert cat.shape[0] == n
+    assert np.array_equal(np.sort(cat), np.arange(n))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(10, 2000),
+    k=st.integers(1, 16),
+    seed=st.integers(0, 99),
+)
+def test_cb_partition_covers_and_balances(n, k, seed):
+    rng = np.random.default_rng(seed)
+    deg = rng.zipf(1.6, n).astype(np.int64)
+    sets = cb_partition(deg, k)
+    cat = np.concatenate([s for s in sets if s.size])
+    assert np.array_equal(np.sort(cat), np.arange(n))
+    if k > n:
+        return  # degenerate: empty sets allowed, balance bound vacuous
+    # CB: per-set cost within a factor of the largest single cost + mean
+    cost = np.maximum(deg, 1)
+    per = np.array([cost[s].sum() for s in sets])
+    assert per.max() <= cost.sum() / k + cost.max() + 1
+
+
+def test_controller_moves_from_slow_to_fast():
+    cfg = DynamicControllerConfig(k=3, target_error=1e-6, z=2)
+    ctl = DynamicController(cfg)
+    sizes = np.array([100, 100, 100])
+    move = None
+    # PID 0 keeps a large residual (slow), PID 2 converges fast
+    for t in range(6):
+        rs = np.array([1e-1, 10.0 ** (-2 - t), 10.0 ** (-4 - 2 * t)])
+        move = ctl.update(rs, sizes) or move
+    assert move is not None
+    assert move.src == 0  # slowest sheds load
+    assert move.dst == 2
+    assert 0 < move.n_move <= 10  # capped at 10% of |Ω_src|
+
+
+def test_controller_cooldown():
+    cfg = DynamicControllerConfig(k=2, target_error=1e-6, z=10)
+    ctl = DynamicController(cfg)
+    sizes = np.array([100, 100])
+    fired = []
+    for t in range(12):
+        rs = np.array([1e-1, 10.0 ** (-3 - t)])
+        mv = ctl.update(rs, sizes)
+        fired.append(mv is not None)
+    # after the first fire, both PIDs are frozen for Z=10 steps
+    first = fired.index(True)
+    assert not any(fired[first + 1 : first + 10])
+
+
+def test_controller_no_fire_when_balanced():
+    cfg = DynamicControllerConfig(k=4, target_error=1e-6)
+    ctl = DynamicController(cfg)
+    sizes = np.full(4, 50)
+    for t in range(20):
+        rs = np.full(4, 10.0 ** (-t))  # identical progress
+        assert ctl.update(rs, sizes) is None
+
+
+def test_apply_move_preserves_nodes():
+    sets = [np.arange(0, 50), np.arange(50, 60)]
+    from repro.core.partition import MoveInstruction
+
+    new, moved = apply_move(sets, MoveInstruction(src=0, dst=1, n_move=5))
+    assert moved == 5
+    cat = np.sort(np.concatenate(new))
+    assert np.array_equal(cat, np.arange(60))
+    assert new[0].size == 45 and new[1].size == 15
+
+
+def test_apply_move_never_empties_source():
+    sets = [np.arange(0, 3), np.arange(3, 60)]
+    from repro.core.partition import MoveInstruction
+
+    new, moved = apply_move(sets, MoveInstruction(src=0, dst=1, n_move=99))
+    assert moved == 2
+    assert new[0].size == 1

@@ -1,0 +1,136 @@
+"""Numerical equivalence of the §Perf optimized paths vs the pjit baselines
+(subprocess with 8 fake devices; EXPERIMENTS.md §Perf A/B/C)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, {src!r})
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.transformer import (
+        MoEConfig, TransformerConfig, decode_step, init_params,
+        prefill_step, train_loss)
+    from repro.parallel.axes import axis_rules
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    rules = {{"batch": "data", "act_seq": "model", "expert": "model",
+             "kv_seq": "model", "heads": "model", "mlp": "model",
+             "vocab": "model", "embed": "data", "act_embed": None}}
+
+    # ---- A: EP MoE (shard_map all_to_all) vs pjit dispatch -------------
+    cfg = TransformerConfig(
+        name="t", n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,
+        d_ff=64, vocab=64, dtype=jnp.float32, ce_chunk=8,
+        # capacity 8.0 -> no drops in either scheme; aux weight 0 because
+        # EP computes load-balance stats per shard (documented semantic
+        # difference: mean-of-products vs product-of-means)
+        moe=MoEConfig(n_experts=6, top_k=2, d_ff_expert=16, n_shared=1,
+                      pad_experts_to=8, capacity_factor=8.0,
+                      router_aux_weight=0.0))
+    p = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {{"tokens": jnp.asarray(rng.integers(0, 64, (4, 8)), jnp.int32),
+             "labels": jnp.asarray(rng.integers(0, 64, (4, 8)), jnp.int32)}}
+    loss_plain = float(train_loss(p, batch, cfg))  # no mesh -> pjit path
+    with axis_rules(rules, mesh=mesh), mesh:
+        loss_ep = float(jax.jit(
+            lambda p, b: train_loss(p, b, cfg))(p, batch))
+    # capacity_factor=8 -> no token drops in either scheme
+    assert abs(loss_plain - loss_ep) < 2e-4, (loss_plain, loss_ep)
+    print("EP_MOE_OK", loss_plain, loss_ep)
+
+    # grads flow through the EP path
+    with axis_rules(rules, mesh=mesh), mesh:
+        g = jax.jit(jax.grad(lambda p: train_loss(p, batch, cfg)))(p)
+    gsum = float(jnp.abs(g["layers"]["ew1"]).sum())
+    assert np.isfinite(gsum) and gsum > 0, gsum
+    print("EP_MOE_GRADS_OK")
+
+    # ---- B: distributed split-KV decode vs pjit decode -----------------
+    dcfg = TransformerConfig(
+        name="d", n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,
+        d_ff=64, vocab=64, qkv_bias=True, dtype=jnp.float32, ce_chunk=8)
+    dp = init_params(dcfg, jax.random.PRNGKey(1))
+    toks = jnp.asarray(rng.integers(0, 64, (4, 8)), jnp.int32)
+    cache, _ = prefill_step(dp, toks, dcfg, max_seq=16)
+    nxt = jnp.asarray(rng.integers(0, 64, (4,)), jnp.int32)
+    logits_plain, cache_plain = decode_step(dp, cache, nxt, dcfg)
+    with axis_rules(rules, mesh=mesh), mesh:
+        logits_dist, cache_dist = jax.jit(
+            lambda p, c, t: decode_step(p, c, t, dcfg))(dp, cache, nxt)
+    err = float(jnp.abs(logits_dist - logits_plain).max())
+    assert err < 2e-3, err
+    kerr = float(jnp.abs(cache_dist["k"] - cache_plain["k"]).max())
+    assert kerr < 1e-5, kerr
+    print("DIST_DECODE_OK", err)
+    """
+)
+
+
+def test_optimized_paths_match_baselines():
+    src = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    r = subprocess.run(
+        [sys.executable, "-c", SCRIPT.format(src=src)],
+        capture_output=True, text=True, timeout=600,
+    )
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "EP_MOE_OK" in r.stdout
+    assert "DIST_DECODE_OK" in r.stdout
+
+
+HALO_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, {src!r})
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import power_law_graph
+    from repro.data import build_halo_batch, make_gnn_batch
+    from repro.models import gnn
+    from repro.parallel.axes import axis_rules
+
+    g = power_law_graph(640, seed=4)
+    cfg = gnn.GNNConfig(name="g", arch="gin", n_layers=3, d_hidden=16,
+                        d_feat=8, n_classes=5)
+    p = gnn.init_params(cfg, jax.random.PRNGKey(0))
+    plain = {{k: jnp.asarray(v)
+             for k, v in make_gnn_batch(g, 8, n_classes=5).items()}}
+    out_plain = np.asarray(gnn.forward(p, plain, cfg))
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    halo_np = build_halo_batch(g, 4, 8, n_classes=5)
+    halo_np["x"][:g.n] = np.asarray(plain["x"])
+    halo = {{k: jnp.asarray(v) for k, v in halo_np.items()}}
+    with axis_rules({{"nodes": "data"}}, mesh=mesh), mesh:
+        out_halo = np.asarray(jax.jit(
+            lambda p, b: gnn.forward(p, b, cfg))(p, halo))
+    err = np.abs(out_halo[: g.n] - out_plain[: g.n]).max()
+    assert err < 2e-4, err
+    print("HALO_OK", err)
+    """
+)
+
+
+def test_halo_aggregation_matches_plain():
+    src = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    r = subprocess.run(
+        [sys.executable, "-c", HALO_SCRIPT.format(src=src)],
+        capture_output=True, text=True, timeout=600,
+    )
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "HALO_OK" in r.stdout

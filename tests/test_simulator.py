@@ -1,0 +1,101 @@
+"""Faithful K-PID simulator (paper §2.2–2.5)."""
+import numpy as np
+import pytest
+
+from repro.core import DistributedSimulator, SimulatorConfig
+
+EPS = 0.15
+
+
+def _run(p, b, **kw):
+    kw.setdefault("target_error", 1e-6)
+    kw.setdefault("eps", EPS)
+    kw.setdefault("record_every", 25)
+    cfg = SimulatorConfig(**kw)
+    return DistributedSimulator(p, b, cfg).run()
+
+
+@pytest.mark.parametrize("k", [1, 2, 4, 8])
+@pytest.mark.parametrize("partition", ["uniform", "cb"])
+def test_converges_to_solution(small_pagerank, k, partition):
+    p, b, x = small_pagerank
+    res = _run(p, b, k=k, partition=partition)
+    assert res.converged
+    np.testing.assert_allclose(res.h, x, atol=1e-5)
+
+
+@pytest.mark.parametrize("dynamic", [False, True])
+def test_dynamic_converges(small_pagerank, dynamic):
+    p, b, x = small_pagerank
+    res = _run(p, b, k=4, dynamic=dynamic)
+    assert res.converged
+    np.testing.assert_allclose(res.h, x, atol=1e-5)
+
+
+def test_batch_mode_matches(small_pagerank):
+    p, b, x = small_pagerank
+    res = _run(p, b, k=4, mode="batch", dynamic=True)
+    assert res.converged
+    np.testing.assert_allclose(res.h, x, atol=1e-5)
+
+
+def test_cost_accounting(small_pagerank):
+    """active+idle per PID ~ steps × PID_Speed (cost model §2.3)."""
+    p, b, _ = small_pagerank
+    res = _run(p, b, k=4)
+    speed = p.n // 4
+    budget = res.n_steps * speed
+    per_pid = res.count_active + res.count_idle
+    # freeze/debt can shift ops by up to a couple of steps' budget
+    assert np.all(per_pid <= budget + 3 * speed)
+    assert res.count_active.sum() > 0
+
+
+def test_k1_matches_sequential_cost_scale(small_pagerank):
+    """K=1 normalized cost is O(1) matvecs (paper Table 1: ~2.4 at 1/N)."""
+    p, b, _ = small_pagerank
+    res = _run(p, b, k=1, target_error=1.0 / p.n)
+    assert res.converged
+    assert res.cost_iterations < 25  # small-N looser bound, same order
+
+
+def test_dynamic_beats_static_on_skewed_order(skewed_pagerank):
+    """Paper Tables 2/3: dynamic rescues badly-ordered partitions."""
+    p, b, _ = skewed_pagerank
+    costs = {}
+    for dyn in (False, True):
+        res = _run(p, b, k=16, dynamic=dyn, target_error=1.0 / p.n)
+        assert res.converged
+        costs[dyn] = res.cost_iterations
+    assert costs[True] < costs[False]
+
+
+def test_dynamic_moves_fire_on_skew(skewed_pagerank):
+    p, b, _ = skewed_pagerank
+    res = _run(p, b, k=8, dynamic=True, target_error=1.0 / p.n)
+    assert res.n_moves >= 1
+    # partition sizes actually changed from uniform
+    assert res.hist_sizes.shape[1] == 8
+    assert res.hist_sizes[-1].std() > 0
+
+
+def test_exchange_fires(small_pagerank):
+    p, b, _ = small_pagerank
+    res = _run(p, b, k=4)
+    assert res.n_exchanges > 0
+
+
+def test_speedup_with_k(small_pagerank):
+    """More PIDs converge in fewer wall steps (parallelism claim C3)."""
+    p, b, _ = small_pagerank
+    r1 = _run(p, b, k=1, target_error=1.0 / p.n)
+    r4 = _run(p, b, k=4, target_error=1.0 / p.n)
+    assert r4.cost_iterations < r1.cost_iterations
+
+
+def test_charge_exchange_matters(small_pagerank):
+    """Charging the exchange cost can only slow convergence (C1)."""
+    p, b, _ = small_pagerank
+    free = _run(p, b, k=8, charge_exchange=False, target_error=1.0 / p.n)
+    paid = _run(p, b, k=8, charge_exchange=True, target_error=1.0 / p.n)
+    assert paid.cost_iterations >= free.cost_iterations - 1e-9

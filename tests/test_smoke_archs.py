@@ -1,0 +1,110 @@
+"""Per-architecture smoke tests: reduced same-family config, one
+forward + one train step on CPU, output shapes + no NaNs (deliverable f)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.configs.smoke import smoke_setup
+from repro.models import gnn as gnn_model
+from repro.models import recsys as fm_model
+from repro.models import transformer as lm
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def _finite_tree(t):
+    return all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(t))
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_smoke_train_step(arch_id):
+    cfg, batch, family = smoke_setup(arch_id)
+    key = jax.random.PRNGKey(0)
+    ocfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=10)
+    if family == "lm":
+        params = lm.init_params(cfg, key)
+        loss_fn = lambda p: lm.train_loss(p, batch, cfg)
+    elif family == "gnn":
+        params = gnn_model.init_params(cfg, key)
+        loss_fn = lambda p: gnn_model.loss_fn(p, batch, cfg)
+    else:
+        params = fm_model.init_params(cfg, key)
+        loss_fn = lambda p: fm_model.loss_fn(p, batch, cfg)
+    opt = adamw_init(params)
+    loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    assert np.isfinite(float(loss)), (arch_id, float(loss))
+    assert _finite_tree(grads), arch_id
+    new_params, opt, metrics = adamw_update(
+        grads, opt, ocfg, param_dtype=cfg.dtype
+    )
+    assert _finite_tree(new_params), arch_id
+    # shapes preserved by the update
+    same = jax.tree.map(lambda a, b: a.shape == b.shape, params, new_params)
+    assert all(jax.tree.leaves(same)), arch_id
+
+
+@pytest.mark.parametrize(
+    "arch_id",
+    [a for a in ARCH_IDS if get_arch(a).family == "lm"],
+)
+def test_smoke_lm_decode(arch_id):
+    """Decode shapes apply to every (decoder) LM arch: prefill + 2 steps."""
+    cfg, batch, _ = smoke_setup(arch_id)
+    params = lm.init_params(cfg, jax.random.PRNGKey(1))
+    toks = batch["tokens"][:, :8]
+    cache, logits = lm.prefill_step(params, toks, cfg, max_seq=12)
+    assert logits.shape == (toks.shape[0], cfg.vocab)
+    for t in (8, 9):
+        logits, cache = lm.decode_step(
+            params, cache, batch["tokens"][:, t], cfg)
+        assert logits.shape == (toks.shape[0], cfg.vocab)
+        assert bool(jnp.isfinite(logits).all())
+    assert int(cache["pos"]) == 10
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_full_configs_are_exact(arch_id):
+    """The FULL configs carry the assignment-table dimensions exactly."""
+    spec = get_arch(arch_id)
+    c = spec.model_cfg
+    expect = {
+        "qwen2-moe-a2.7b": lambda: (
+            c.n_layers == 24 and c.d_model == 2048 and c.n_heads == 16
+            and c.n_kv_heads == 16 and c.vocab == 151936
+            and c.moe.n_experts == 60 and c.moe.top_k == 4
+            and c.moe.n_shared == 4),
+        "granite-moe-1b-a400m": lambda: (
+            c.n_layers == 24 and c.d_model == 1024 and c.n_kv_heads == 8
+            and c.vocab == 49155 and c.moe.n_experts == 32
+            and c.moe.top_k == 8 and c.moe.d_ff_expert == 512),
+        "command-r-plus-104b": lambda: (
+            c.n_layers == 64 and c.d_model == 12288 and c.n_heads == 96
+            and c.n_kv_heads == 8 and c.d_ff == 33792
+            and c.vocab == 256000 and not c.qkv_bias),
+        "qwen1.5-0.5b": lambda: (
+            c.n_layers == 24 and c.d_model == 1024 and c.n_heads == 16
+            and c.n_kv_heads == 16 and c.d_ff == 2816
+            and c.vocab == 151936 and c.qkv_bias),
+        "mistral-large-123b": lambda: (
+            c.n_layers == 88 and c.d_model == 12288 and c.n_heads == 96
+            and c.n_kv_heads == 8 and c.d_ff == 28672 and c.vocab == 32768),
+        "meshgraphnet": lambda: (c.n_layers == 15 and c.d_hidden == 128),
+        "egnn": lambda: (c.n_layers == 4 and c.d_hidden == 64),
+        "gin-tu": lambda: (c.n_layers == 5 and c.d_hidden == 64
+                           and c.eps_learnable),
+        "dimenet": lambda: (c.n_layers == 6 and c.d_hidden == 128
+                            and c.n_bilinear == 8 and c.n_spherical == 7
+                            and c.n_radial == 6),
+        "fm": lambda: (c.n_fields == 39 and c.embed_dim == 10
+                       and c.n_rows == 39_000_000),
+    }
+    assert expect[arch_id](), f"{arch_id} config drifted from assignment"
+
+
+def test_forty_cells_present():
+    total = 0
+    for a in ARCH_IDS:
+        total += sum(1 for c in get_arch(a).cells.values()
+                     if not c.meta.get("extra"))
+    assert total == 40

@@ -1,0 +1,167 @@
+"""Optimizer, checkpointing, runtime fault tolerance, data pipeline."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    CheckpointManager,
+    latest_step,
+    load_checkpoint,
+    save_checkpoint,
+)
+from repro.data import NeighborSampler, criteo_like_batch, lm_token_batch
+from repro.core import power_law_graph
+from repro.optim import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    compress_int8,
+    decompress_int8,
+    ef_topk_compress,
+    ef_topk_init,
+)
+from repro.runtime import StragglerMonitor
+
+
+# --------------------------------------------------------------------------- #
+# optimizer
+# --------------------------------------------------------------------------- #
+def test_adamw_converges_quadratic():
+    cfg = AdamWConfig(lr=0.1, warmup_steps=5, total_steps=200,
+                      weight_decay=0.0, grad_clip=0)
+    target = jnp.asarray([3.0, -2.0, 0.5])
+    params = {"w": jnp.zeros(3)}
+    opt = adamw_init(params)
+    for _ in range(200):
+        g = {"w": 2 * (params["w"] - target)}
+        params, opt, _ = adamw_update(g, opt, cfg, param_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=1e-2)
+
+
+def test_grad_clip():
+    g = {"a": jnp.full(100, 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) > 99
+    total = float(jnp.sqrt(sum(jnp.sum(x**2)
+                               for x in jax.tree.leaves(clipped))))
+    assert abs(total - 1.0) < 1e-5
+
+
+def test_bf16_master_weights():
+    cfg = AdamWConfig(lr=1e-3)
+    params = {"w": jnp.ones(4, jnp.bfloat16)}
+    opt = adamw_init(params)
+    assert opt["master"]["w"].dtype == jnp.float32
+    new_p, opt, _ = adamw_update({"w": jnp.ones(4, jnp.bfloat16)}, opt, cfg)
+    assert new_p["w"].dtype == jnp.bfloat16
+    assert opt["master"]["w"].dtype == jnp.float32
+
+
+def test_compression_contracts():
+    rng = np.random.default_rng(0)
+    g = {"a": jnp.asarray(rng.standard_normal(256).astype(np.float32))}
+    st = ef_topk_init(g)
+    sent, st2 = ef_topk_compress(g, st, k_frac=0.1)
+    # error feedback: sent + residual == grad exactly
+    np.testing.assert_allclose(
+        np.asarray(sent["a"] + st2.residual["a"]), np.asarray(g["a"]),
+        rtol=1e-6)
+    # sparsity: ~10% entries kept
+    nz = float((sent["a"] != 0).mean())
+    assert nz <= 0.15
+    q, s = compress_int8(g["a"])
+    deq = decompress_int8(q, s)
+    assert float(jnp.abs(deq - g["a"]).max()) <= float(s) + 1e-7
+
+
+# --------------------------------------------------------------------------- #
+# checkpoint
+# --------------------------------------------------------------------------- #
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"w": jnp.arange(10.0), "n": {"b": jnp.ones((2, 3))}}
+    save_checkpoint(str(tmp_path), 7, tree, extra={"loss": 1.5})
+    restored, step, extra = load_checkpoint(str(tmp_path), tree)
+    assert step == 7 and extra["loss"] == 1.5
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.arange(10.0))
+
+
+def test_checkpoint_atomicity_ignores_tmp(tmp_path):
+    tree = {"w": jnp.ones(3)}
+    save_checkpoint(str(tmp_path), 5, tree)
+    # simulate a crashed half-write
+    os.makedirs(tmp_path / "step_000000009.tmp")
+    assert latest_step(str(tmp_path)) == 5
+
+
+def test_checkpoint_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_write=False)
+    tree = {"w": jnp.ones(3)}
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree)
+    steps = sorted(
+        int(n.split("_")[1]) for n in os.listdir(tmp_path)
+        if n.startswith("step_"))
+    assert steps == [3, 4]
+
+
+def test_checkpoint_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_write=True)
+    tree = {"w": jnp.arange(5.0)}
+    mgr.save(11, tree)
+    mgr.wait()
+    assert latest_step(str(tmp_path)) == 11
+    mgr.close()
+
+
+# --------------------------------------------------------------------------- #
+# straggler monitor
+# --------------------------------------------------------------------------- #
+def test_straggler_monitor_flags_slow_host():
+    mon = StragglerMonitor(n_hosts=4, z=2)
+    mv = None
+    for t in range(8):
+        times = np.array([0.1, 0.1, 0.1, 0.8])  # host 3 is 8× slower
+        mv = mon.advise(times) or mv
+    assert mv is not None
+    assert mv.src == 3  # slow host sheds load
+
+
+# --------------------------------------------------------------------------- #
+# data pipeline
+# --------------------------------------------------------------------------- #
+def test_lm_batch_deterministic():
+    a = lm_token_batch(3, 4, 16, 100, seed=1)
+    b = lm_token_batch(3, 4, 16, 100, seed=1)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = lm_token_batch(4, 4, 16, 100, seed=1)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    assert a["tokens"].max() < 100
+    # teacher forcing alignment
+    np.testing.assert_array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])
+
+
+def test_neighbor_sampler_budgets():
+    g = power_law_graph(5000, seed=2)
+    s = NeighborSampler(g, fanouts=(5, 3))
+    batch = s.sample(batch_nodes=64, step=0, d_feat=8, n_classes=4)
+    n_budget = 64 * (1 + 5 + 15)
+    e_budget = 64 * 5 + 320 * 3
+    assert batch["x"].shape == (n_budget, 8)
+    assert batch["src"].shape == (e_budget,)
+    # edges respect the node budget
+    real = batch["edge_mask"] > 0
+    assert batch["src"][real].max() < n_budget
+    assert batch["node_mask"].sum() > 0
+
+
+def test_criteo_batch():
+    b = criteo_like_batch(0, 128, 10, 1000)
+    assert b["ids"].shape == (128, 10)
+    assert b["ids"].max() < 1000
+    assert set(np.unique(b["labels"])) <= {0, 1}
