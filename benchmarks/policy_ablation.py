@@ -1,0 +1,125 @@
+"""Policy ablation: static vs dynamic cost tables per rebalancing policy.
+
+Reproduces the paper's static-vs-dynamic protocol (Tables 1–3, §3.1) for
+every :mod:`repro.balance` policy instead of only the §2.5.2 controller:
+synthetic power-law graph, PageRank system (damping 0.85, ε = 0.15),
+target error 1/N, K ∈ {2, 4, 8}, node order random or by out-degree
+(the skewed order static partitions hate).  For each (K, order) cell the
+table reports the normalized cost (``cost_iterations``) of:
+
+  static          — no rebalancing (baseline)
+  slope_ema       — paper §2.5.2 exact (through the control plane)
+  cost_refresh    — periodic CB re-split from observed edge-op costs
+  hysteresis      — slope-EMA + deadband + multi-move batching
+
+Usage:
+  PYTHONPATH=src python benchmarks/policy_ablation.py [--quick]
+
+Outputs: results/policy_ablation/<order>.csv + a printed table.
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import os
+import time
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.core import (
+    DistributedSimulator,
+    SimulatorConfig,
+    pagerank_system,
+    power_law_graph,
+)
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "policy_ablation")
+
+KS = (2, 4, 8)
+POLICIES = (None, "slope_ema", "cost_refresh", "hysteresis")
+
+
+def _cfg(k: int, n: int, policy, mode: str) -> SimulatorConfig:
+    return SimulatorConfig(
+        k=k, target_error=1.0 / n, eps=0.15, partition="uniform",
+        policy=policy, dynamic=False, mode=mode, record_every=100,
+        # cost_refresh balances observed work, not residual magnitude
+        signal="edge-ops" if policy == "cost_refresh" else "residual",
+    )
+
+
+def run_ablation(order: str, n: int = 1000, seed: int = 0,
+                 mode: str = "sequential", ks=KS, policies=POLICIES,
+                 verbose: bool = True) -> Dict[Tuple, dict]:
+    g = power_law_graph(n, alpha=1.5, seed=seed)
+    if order == "out_degree":
+        g = g.reorder(np.argsort(-g.out_degree(), kind="stable"))
+    p, b = pagerank_system(g, damping=0.85)
+    out: Dict[Tuple, dict] = {}
+    for k in ks:
+        for policy in policies:
+            t0 = time.time()
+            res = DistributedSimulator(p, b, _cfg(k, n, policy, mode)).run()
+            out[(k, policy or "static")] = {
+                "cost": res.cost_iterations,
+                "moves": res.n_moves,
+                "converged": res.converged,
+                "steps": res.n_steps,
+            }
+            if verbose:
+                print(f"  order={order} K={k} {policy or 'static':>12}: "
+                      f"cost={res.cost_iterations:8.2f} "
+                      f"moves={res.n_moves:3d} "
+                      f"({time.time() - t0:.1f}s, conv={res.converged})")
+    return out
+
+
+def write_csv(table: Dict[Tuple, dict], path: str,
+              policies=POLICIES) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    names = [p or "static" for p in policies]
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["K"] + [f"{nm}_{fld}" for nm in names
+                            for fld in ("cost", "moves")])
+        for k in sorted({key[0] for key in table}):
+            row = [k]
+            for nm in names:
+                cell = table[(k, nm)]
+                row += [f"{cell['cost']:.3f}", cell["moves"]]
+            w.writerow(row)
+
+
+def print_table(order: str, table: Dict[Tuple, dict],
+                policies=POLICIES) -> None:
+    names = [p or "static" for p in policies]
+    print(f"\n[{order}] normalized cost (moves)")
+    print("K   " + "".join(f"{nm:>22}" for nm in names))
+    for k in sorted({key[0] for key in table}):
+        cells = []
+        for nm in names:
+            c = table[(k, nm)]
+            cells.append(f"{c['cost']:>15.2f} ({c['moves']:>3d})")
+        print(f"{k:<4}" + "".join(cells))
+
+
+def main(quick: bool = False):
+    ks = (2, 4) if quick else KS
+    n = 400 if quick else 1000
+    tables = {}
+    for order in ("random", "out_degree"):
+        print(f"[policy_ablation] node order: {order}")
+        t = run_ablation(order, n=n, ks=ks)
+        write_csv(t, os.path.join(os.path.abspath(OUT_DIR),
+                                  f"{order}.csv"))
+        print_table(order, t)
+        tables[order] = t
+    return tables
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    main(quick=ap.parse_args().quick)

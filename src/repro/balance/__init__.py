@@ -1,0 +1,59 @@
+"""Unified rebalancing control plane (DESIGN.md §4).
+
+The paper's claim is that one measurement-driven controller "equalizes
+the computation load between PIDs without any deep analysis of the
+matrix or graph structure" — i.e. the same policy works at any
+granularity.  This package is that claim turned into an architecture:
+
+* :class:`~repro.balance.signals.LoadSignal` — the one measurement
+  container every layer produces (per-PID residuals, per-device edge-op
+  counts, per-host step wall-times, per-expert token counts).
+* :class:`~repro.balance.policies.Rebalancer` — the policy protocol:
+  ``propose(LoadSignal) -> [MovePlan]`` + ``reset_worker(k)``.  Three
+  implementations ship: :class:`SlopeEMAPolicy` (paper §2.5.2 exact),
+  :class:`CostRefreshPolicy` (periodic CB re-split from observed costs),
+  :class:`HysteresisPolicy` (slope-EMA with a deadband and multi-move
+  batching).
+* :class:`~repro.balance.plan.MovePlan` — granularity-agnostic
+  "move ``units`` from worker ``src`` to worker ``dst``" decision with a
+  declared unit kind (``node`` | ``bucket`` | ``expert-shard`` |
+  ``device``).
+* :mod:`~repro.balance.executors` — per-granularity executors that turn
+  a MovePlan into actual state mutation: node moves in the faithful
+  simulator (with the §2.4 reassignment-cost charging), bucket-row
+  permutations in the distributed engine, and an advisory recorder for
+  the runtime's straggler / MoE paths.
+
+Consumers: :mod:`repro.core.simulator` (node-granular),
+:mod:`repro.core.distributed` (bucket-granular),
+:mod:`repro.runtime.loop` (device- and expert-granular).
+"""
+from .plan import MovePlan
+from .signals import LoadSignal
+from .policies import (
+    CostRefreshPolicy,
+    HysteresisPolicy,
+    Rebalancer,
+    SlopeEMAPolicy,
+    make_rebalancer,
+)
+from .executors import (
+    AdvisoryExecutor,
+    BucketMoveExecutor,
+    MoveExecutor,
+    NodeMoveExecutor,
+)
+
+__all__ = [
+    "LoadSignal",
+    "MovePlan",
+    "Rebalancer",
+    "SlopeEMAPolicy",
+    "CostRefreshPolicy",
+    "HysteresisPolicy",
+    "make_rebalancer",
+    "MoveExecutor",
+    "NodeMoveExecutor",
+    "BucketMoveExecutor",
+    "AdvisoryExecutor",
+]

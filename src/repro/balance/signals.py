@@ -1,0 +1,116 @@
+"""The one measurement container behind every rebalancing decision.
+
+Every consumer layer reduces its bookkeeping to the same two vectors —
+a positive per-worker load magnitude and the per-worker unit counts —
+so policies stay blind to the granularity, exactly as the paper's
+controller is blind to the graph structure:
+
+==============  =====================================  ==============
+kind            values[k]                              unit
+==============  =====================================  ==============
+residual        r_k + s_k (fluid left + in flight)     node / bucket
+edge-ops        edge operations charged this window    node / bucket
+step-time       wall-clock seconds of worker k's step  device
+expert-tokens   tokens routed to expert shard k        expert-shard
+==============  =====================================  ==============
+
+The convention throughout: **larger value = slower / more loaded
+worker** (the paper's residual magnitude plays exactly this role in
+§2.5.2 — the PID with the largest remaining residual has the lagging
+slope and sheds load).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["LoadSignal", "SIGNAL_KINDS"]
+
+SIGNAL_KINDS = ("residual", "edge-ops", "step-time", "expert-tokens")
+
+
+@dataclasses.dataclass
+class LoadSignal:
+    """Per-worker load measurement at one control step.
+
+    ``values`` — [K] positive magnitudes (larger = more loaded);
+    ``sizes`` — [K] load units currently owned by each worker;
+    ``kind`` — which measurement produced ``values``;
+    ``step`` — producer's control-step counter (simulator time step,
+    engine chunk index, runtime step).
+    """
+
+    values: np.ndarray
+    sizes: np.ndarray
+    kind: str = "residual"
+    step: int = 0
+
+    def __post_init__(self):
+        self.values = np.asarray(self.values, dtype=np.float64)
+        self.sizes = np.asarray(self.sizes, dtype=np.int64)
+        if self.values.shape != self.sizes.shape:
+            raise ValueError(
+                f"values {self.values.shape} vs sizes {self.sizes.shape}"
+            )
+        if self.kind not in SIGNAL_KINDS:
+            raise ValueError(
+                f"unknown signal kind {self.kind!r}; expected one of "
+                f"{SIGNAL_KINDS}"
+            )
+
+    @property
+    def k(self) -> int:
+        return int(self.values.shape[0])
+
+    # ------------------------------------------------------------------ #
+    # producers
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def from_residuals(cls, r_plus_s: np.ndarray, sizes: np.ndarray,
+                       step: int = 0) -> "LoadSignal":
+        """§2.5.2's native signal: per-PID ``r_k + s_k``."""
+        return cls(values=r_plus_s, sizes=sizes, kind="residual", step=step)
+
+    @classmethod
+    def from_edge_ops(cls, ops_delta: np.ndarray, sizes: np.ndarray,
+                      step: int = 0) -> "LoadSignal":
+        """Edge operations charged since the previous control step."""
+        return cls(values=np.maximum(ops_delta, 0), sizes=sizes,
+                   kind="edge-ops", step=step)
+
+    @classmethod
+    def from_step_times(cls, seconds: np.ndarray,
+                        load_units: Optional[np.ndarray] = None,
+                        step: int = 0) -> "LoadSignal":
+        """Per-host step wall-times (a straggler is a slow PID).
+
+        Times are normalized to fractions of the total so the slope
+        policies see residual-like magnitudes in (0, 1) — the §2.5.2
+        move-fraction formula ``(slope_min+1)/(slope_max+1)`` assumes the
+        signal exponent is negative, and fractions make the signal
+        independent of the absolute step duration.
+        """
+        seconds = np.maximum(np.asarray(seconds, np.float64), 1e-9)
+        if load_units is None:
+            load_units = np.full(seconds.shape[0], 1 << 20)
+        return cls(values=seconds / seconds.sum(), sizes=load_units,
+                   kind="step-time", step=step)
+
+    @classmethod
+    def from_expert_counts(cls, token_counts: np.ndarray,
+                           shards_per_expert: Optional[np.ndarray] = None,
+                           step: int = 0) -> "LoadSignal":
+        """Per-expert routed-token counts (a hot expert is a hot Ω_k).
+
+        Counts are normalized to routing fractions (see
+        :meth:`from_step_times` for why).
+        """
+        token_counts = np.maximum(
+            np.asarray(token_counts, np.float64), 1e-12)
+        return cls(values=token_counts / token_counts.sum(),
+                   sizes=(shards_per_expert if shards_per_expert is not None
+                          else np.ones(token_counts.shape[0],
+                                       dtype=np.int64)),
+                   kind="expert-tokens", step=step)

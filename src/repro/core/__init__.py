@@ -6,6 +6,11 @@ Layers:
   partition    — static Uniform/CB partitions + the dynamic slope controller
   simulator    — faithful time-stepped K-PID simulation (§2.2–2.5)
   distributed  — production shard_map engine (TPU-native adaptation)
+
+Rebalancing decisions flow through the shared :mod:`repro.balance`
+control plane (policies, LoadSignals, MovePlans, per-granularity
+executors — DESIGN.md §4); the simulator and the engine are its node-
+and bucket-granular consumers.
 """
 from .graph import (
     BucketedGraph,

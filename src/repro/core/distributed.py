@@ -7,11 +7,14 @@ mapped onto JAX-native constructs:
 * **shard_map over a ``pid`` device axis** — each device plays one PID.
 * **Bucket-granular state** — nodes are packed into fixed-size buckets
   (:func:`repro.core.graph.bucketize`); every device owns a *fixed* number of
-  bucket rows (static shapes), some of which are inert headroom.  The dynamic
-  partition controller moves whole buckets between devices by permuting the
-  bucket-indexed arrays in-graph (``jnp.take`` on the sharded axis lowers to
-  collective-permute / all-gather under SPMD), so load can move without any
-  reshaping — this is also the elastic-scaling path.
+  bucket rows (static shapes), some of which are inert headroom.  The
+  :mod:`repro.balance` control plane moves whole buckets between devices
+  (``MovePlan`` kind ``bucket`` executed by ``BucketMoveExecutor``) by
+  permuting the bucket-indexed arrays in-graph (``jnp.take`` on the sharded
+  axis lowers to collective-permute / all-gather under SPMD), so load can
+  move without any reshaping — this is also the elastic-scaling path.  The
+  engine takes any ``Rebalancer`` policy; the legacy ``dynamic`` flag maps
+  to the paper-exact ``slope_ema``.
 * **Frontier-batched local diffusion** — every local node above the
   threshold diffuses simultaneously (a valid D-iteration schedule); the push
   becomes gather → multiply → ``segment_sum``.
@@ -38,9 +41,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.balance.executors import BucketMoveExecutor
+from repro.balance.policies import Rebalancer, make_rebalancer
+from repro.balance.signals import LoadSignal
+from repro.parallel.compat import shard_map
+
 from .graph import BucketedGraph, CSRGraph, bucketize
 from .diteration import default_weights
-from .partition import DynamicController, DynamicControllerConfig
 
 __all__ = [
     "EngineConfig",
@@ -62,7 +69,10 @@ class EngineConfig:
     headroom: int = 2  # inert bucket rows per device for load moves
     max_inner: int = 8  # max local rounds between exchanges
     gamma: float = GAMMA
-    dynamic: bool = False
+    dynamic: bool = False  # enable the control plane (slope_ema policy)
+    policy: Optional[str] = None  # repro.balance policy name (overrides
+    # ``dynamic``): slope_ema | cost_refresh | hysteresis
+    signal: str = "residual"  # rebalancing signal: residual | edge-ops
     eta: float = 0.5
     z: int = 10
     chunk_rounds: int = 4  # exchange cycles per jitted chunk
@@ -198,7 +208,13 @@ class DistributedEngine:
         cfg: EngineConfig,
         mesh: Optional[Mesh] = None,
         axis: str = "pid",
+        rebalancer: Optional[Rebalancer] = None,
     ):
+        if cfg.signal not in ("residual", "edge-ops"):
+            raise ValueError(
+                f"unknown rebalancing signal {cfg.signal!r}; expected "
+                "'residual' or 'edge-ops'"
+            )
         self.a = arrays
         self.cfg = cfg
         self.axis = axis
@@ -212,16 +228,16 @@ class DistributedEngine:
         self.mesh = mesh
         self.row_sharding = NamedSharding(mesh, P(axis))
         self.rep_sharding = NamedSharding(mesh, P())
-        self.controller = (
-            DynamicController(
-                DynamicControllerConfig(
-                    k=cfg.k, target_error=cfg.target_error, eta=cfg.eta,
-                    z=cfg.z,
-                )
+        if rebalancer is not None:
+            self.rebalancer: Optional[Rebalancer] = rebalancer
+        elif cfg.policy or cfg.dynamic:
+            self.rebalancer = make_rebalancer(
+                cfg.policy or "slope_ema", k=cfg.k,
+                target_error=cfg.target_error, eta=cfg.eta, z=cfg.z,
+                unit="bucket",
             )
-            if cfg.dynamic
-            else None
-        )
+        else:
+            self.rebalancer = None
         self._chunk = self._build_chunk()
         self._repartition = self._build_repartition()
 
@@ -352,7 +368,7 @@ class DistributedEngine:
                     rounds + i)
 
         pr, pp = P(axis), P()
-        mapped = jax.shard_map(
+        mapped = shard_map(
             chunk,
             mesh=self.mesh,
             in_specs=(pr, pr, pr, pr, pp, pr, pp, pr, pr, pr, pr, pr),
@@ -423,57 +439,56 @@ class DistributedEngine:
     # ------------------------------------------------------------------ #
     def solve(self, verbose: bool = False):
         cfg, a = self.cfg, self.a
-        state = self.init_state()
+        ex = BucketMoveExecutor(self, self.init_state())
         tol = cfg.target_error * cfg.eps
-        row_of_bucket = np.array(a.pos_of_bucket)  # stable id -> current row
-        w, src_slot = self.w, self.src_slot
-        dst_bucket, dst_slot, wgt = self.dst_bucket, self.dst_slot, self.wgt
         history = []
+        move_log = []
         n_moves = 0
+        prev_ops = np.zeros(cfg.k, dtype=np.int64)
         resid = float("inf")
         chunk_i = -1
         for chunk_i in range(cfg.max_chunks):
-            state, stats = self._chunk(state, w, src_slot, dst_bucket,
-                                       dst_slot, wgt)
+            ex.state, stats = self._chunk(ex.state, ex.w, ex.src_slot,
+                                          ex.dst_bucket, ex.dst_slot,
+                                          ex.wgt)
             r = np.asarray(stats["r"])
             s_ = np.asarray(stats["s"])
             resid = float(np.asarray(stats["residual"])) + float(s_.sum())
             history.append(
-                (int(np.asarray(state.rounds)), resid, (r + s_).copy())
+                (int(np.asarray(ex.state.rounds)), resid, (r + s_).copy())
             )
             if verbose:
                 print(f"chunk {chunk_i}: residual={resid:.3e} "
-                      f"rounds={int(np.asarray(state.rounds))}")
+                      f"rounds={int(np.asarray(ex.state.rounds))}")
             if resid <= tol:
                 break
-            if self.controller is not None:
-                n_real = cfg.k * (cfg.buckets_per_dev - cfg.headroom)
-                dev_of_bucket = row_of_bucket // cfg.buckets_per_dev
-                sizes = np.bincount(
-                    dev_of_bucket[:n_real], minlength=cfg.k
-                )
-                move = self.controller.update(r + s_, sizes)
-                if move is not None:
-                    perm, new_map, moved = self._plan_move(
-                        row_of_bucket, move.src, move.dst, move.n_move)
+            if self.rebalancer is not None:
+                sizes = ex.sizes()
+                if cfg.signal == "edge-ops":
+                    ops = np.asarray(ex.state.ops).astype(np.int64)
+                    # the on-device counter is int32 and cumulative over
+                    # the whole solve; recover the true per-chunk delta
+                    # through wraparound (valid while one chunk stays
+                    # under 2^32 ops)
+                    delta = (ops - prev_ops) & 0xFFFFFFFF
+                    sig = LoadSignal.from_edge_ops(
+                        delta, sizes, step=chunk_i)
+                    prev_ops = ops
+                else:
+                    sig = LoadSignal.from_residuals(r + s_, sizes,
+                                                    step=chunk_i)
+                for plan in self.rebalancer.propose(sig):
+                    moved = ex.apply(plan)
                     if moved:
                         n_moves += 1
-                        row_of_bucket = new_map
-                        (state, w, src_slot, dst_bucket, dst_slot,
-                         wgt) = self._repartition(
-                            state,
-                            jax.device_put(perm, self.rep_sharding),
-                            jax.device_put(
-                                self._bucket_pos_map(row_of_bucket),
-                                self.rep_sharding,
-                            ),
-                            w, src_slot, dst_bucket, dst_slot, wgt)
+                        move_log.append(
+                            (chunk_i, plan.src, plan.dst, moved))
         # ---- gather solution: bucket id's H now lives at its current row --
-        h = np.asarray(state.h).reshape(a.n_rows, a.bucket_size)
+        h = np.asarray(ex.state.h).reshape(a.n_rows, a.bucket_size)
         x = np.zeros(a.n, dtype=np.float64)
         for bid in range(a.n_rows):
             row0 = int(a.pos_of_bucket[bid])  # initial row (node map)
-            row1 = int(row_of_bucket[bid])  # current row (data)
+            row1 = int(ex.row_of_bucket[bid])  # current row (data)
             nodes = a.node_of_slot[row0]
             valid = nodes >= 0
             if valid.any():
@@ -481,16 +496,13 @@ class DistributedEngine:
         return x, {
             "residual": resid,
             "chunks": chunk_i + 1,
-            "rounds": int(np.asarray(state.rounds)),
+            "rounds": int(np.asarray(ex.state.rounds)),
             "moves": n_moves,
+            "move_log": move_log,
             "history": history,
             "converged": resid <= tol,
-            "ops": np.asarray(state.ops).copy(),
+            "ops": np.asarray(ex.state.ops).copy(),
         }
-
-    @staticmethod
-    def _bucket_pos_map(row_of_bucket: np.ndarray) -> np.ndarray:
-        return row_of_bucket.astype(np.int32)
 
     def _plan_move(self, row_of_bucket: np.ndarray, src_dev: int,
                    dst_dev: int, n_move: int

@@ -13,13 +13,21 @@ Three strategies:
   the whole point of the paper is that load balance emerges from the
   *observed* residual decay rates alone.
 
-The controller is reused at three levels of the system (DESIGN.md §4/§5):
+The controller is reused at three levels of the system through the
+:mod:`repro.balance` control plane (DESIGN.md §4/§5), where it is wrapped
+as ``SlopeEMAPolicy`` and its decisions travel as granularity-agnostic
+``MovePlan``\\ s:
 
 1. node-granular in the faithful simulator (paper-exact reproduction),
 2. bucket-granular in the production distributed solver (static shapes),
 3. device-granular in the runtime as a straggler/elastic policy (a
-   straggling host is exactly a "slow PID") and as the MoE expert
-   rebalancer (a hot expert is exactly an overloaded Ω_k).
+   straggling host is exactly a "slow PID") and expert-granular as the
+   MoE rebalancer (a hot expert is exactly an overloaded Ω_k).
+
+This module keeps only the paper-exact primitives (§2.5.1 static
+partitions, the §2.5.2 slope-EMA update, :func:`apply_move`); policy
+plumbing, alternative policies, and executors live in
+:mod:`repro.balance`.
 """
 from __future__ import annotations
 
@@ -36,6 +44,7 @@ __all__ = [
     "DynamicControllerConfig",
     "DynamicController",
     "MoveInstruction",
+    "slope_ema_update",
 ]
 
 
@@ -110,6 +119,16 @@ class MoveInstruction:
     n_move: int  # |Ω_src| · min((slope_min+1)/(slope_max+1), 0.1)
 
 
+def slope_ema_update(slope: np.ndarray, r_plus_s: np.ndarray,
+                     eta: float, eps_c: float) -> np.ndarray:
+    """The §2.5.2 slope update, shared by every slope-based policy::
+
+        slope_k := slope_k·(1−η) − log10(r_k + s_k + ε')·η
+    """
+    r_plus_s = np.asarray(r_plus_s, dtype=np.float64)
+    return slope * (1.0 - eta) - np.log10(r_plus_s + eps_c) * eta
+
+
 class DynamicController:
     """Slope-EMA load balancer (paper §2.5.2), unit-agnostic.
 
@@ -140,10 +159,8 @@ class DynamicController:
         self, r_plus_s: np.ndarray, set_sizes: np.ndarray
     ) -> Optional[MoveInstruction]:
         cfg = self.cfg
-        r_plus_s = np.asarray(r_plus_s, dtype=np.float64)
-        self.slope = self.slope * (1.0 - cfg.eta) - (
-            np.log10(r_plus_s + cfg.eps_c) * cfg.eta
-        )
+        self.slope = slope_ema_update(self.slope, r_plus_s, cfg.eta,
+                                      cfg.eps_c)
         self.n_updates += 1
         self.cooldown = np.maximum(self.cooldown - 1, 0)
 

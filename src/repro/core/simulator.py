@@ -22,9 +22,12 @@ Implements the paper's §2.2–§2.5 exactly:
   of moved nodes to both PIDs.  Costs can exceed the per-step budget — the
   PID is then "frozen" (debt carried into following steps), reproducing the
   freeze artifact the paper notes under Figures 15–18.
-* Dynamic partition (§2.5.2): the slope-EMA controller from
-  :mod:`repro.core.partition` runs every time step and moves boundary nodes
-  from the slowest PID to the fastest one (cooldown Z).
+* Dynamic partition (§2.5.2): a :mod:`repro.balance` policy (default
+  ``SlopeEMAPolicy`` — the paper's slope-EMA controller, exact) runs every
+  time step on the per-PID residual signal and its ``MovePlan``\\ s are
+  executed by the node-granular ``NodeMoveExecutor`` (boundary-node moves
+  from the slowest PID to the fastest one, cooldown Z, §2.4 reassignment
+  cost charged by the executor).
 
 Two schedule modes:
 
@@ -43,15 +46,13 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.balance.executors import NodeMoveExecutor
+from repro.balance.policies import Rebalancer, make_rebalancer
+from repro.balance.signals import LoadSignal
+
 from .graph import CSRGraph
 from .diteration import default_weights, residual_l1
-from .partition import (
-    DynamicController,
-    DynamicControllerConfig,
-    apply_move,
-    cb_partition,
-    uniform_partition,
-)
+from .partition import cb_partition, uniform_partition
 
 __all__ = [
     "SimulatorConfig",
@@ -69,7 +70,10 @@ class SimulatorConfig:
     target_error: float
     eps: float  # ε: 1 - damping for PageRank systems (§2.2.1)
     partition: str = "uniform"  # uniform | cb
-    dynamic: bool = False  # enable §2.5.2 controller
+    dynamic: bool = False  # enable §2.5.2 controller (slope_ema policy)
+    policy: Optional[str] = None  # repro.balance policy name (overrides
+    # ``dynamic``): slope_ema | cost_refresh | hysteresis
+    signal: str = "residual"  # rebalancing signal: residual | edge-ops
     mode: str = "sequential"  # sequential | batch
     weight_mode: str = "inv_out"  # w_i choice (§2.2.1)
     gamma: float = GAMMA
@@ -98,6 +102,10 @@ class SimResult:
     hist_rs: np.ndarray  # [T, K]  r_k + s_k
     hist_sizes: np.ndarray  # [T, K] |Ω_k|
     hist_residual: np.ndarray  # [T] global residual upper bound
+    # executed rebalancing decisions: (time step, src, dst, units moved)
+    move_log: List[Tuple[int, int, int, int]] = dataclasses.field(
+        default_factory=list
+    )
 
     @property
     def cost_per_pid(self) -> np.ndarray:
@@ -118,9 +126,20 @@ def _edge_ranges(indptr: np.ndarray, nodes: np.ndarray) -> np.ndarray:
 
 
 class DistributedSimulator:
-    """Time-stepped simulation of K PIDs running the D-iteration on (P, B)."""
+    """Time-stepped simulation of K PIDs running the D-iteration on (P, B).
 
-    def __init__(self, g: CSRGraph, b: np.ndarray, cfg: SimulatorConfig):
+    ``rebalancer`` injects any :class:`repro.balance.policies.Rebalancer`;
+    when omitted it is built from ``cfg.policy`` (or the legacy
+    ``cfg.dynamic`` flag, which means the paper-exact ``slope_ema``).
+    """
+
+    def __init__(self, g: CSRGraph, b: np.ndarray, cfg: SimulatorConfig,
+                 rebalancer: Optional[Rebalancer] = None):
+        if cfg.signal not in ("residual", "edge-ops"):
+            raise ValueError(
+                f"unknown rebalancing signal {cfg.signal!r}; expected "
+                "'residual' or 'edge-ops'"
+            )
         self.g = g
         self.cfg = cfg
         n, k = g.n, cfg.k
@@ -165,16 +184,20 @@ class DistributedSimulator:
         self.n_exchanges = 0
         self.n_moves = 0
 
-        # --- dynamic controller ----------------------------------------------
-        self.controller = (
-            DynamicController(
-                DynamicControllerConfig(
-                    k=k, target_error=cfg.target_error, eta=cfg.eta, z=cfg.z
-                )
+        # --- rebalancing control plane ---------------------------------------
+        if rebalancer is not None:
+            self.rebalancer: Optional[Rebalancer] = rebalancer
+        elif cfg.policy or cfg.dynamic:
+            self.rebalancer = make_rebalancer(
+                cfg.policy or "slope_ema", k=k,
+                target_error=cfg.target_error, eta=cfg.eta, z=cfg.z,
+                unit="node",
             )
-            if cfg.dynamic
-            else None
-        )
+        else:
+            self.rebalancer = None
+        self.executor = NodeMoveExecutor(self)
+        self.move_log: List[Tuple[int, int, int, int]] = []
+        self._prev_active = np.zeros(k, dtype=np.int64)
 
         self.tol = cfg.target_error * cfg.eps
 
@@ -356,32 +379,24 @@ class DistributedSimulator:
                     self.t_k[kp] = received
 
     # --------------------------------------------------------------------- #
-    # dynamic partition (§2.5.2)
+    # dynamic partition (§2.5.2) via the repro.balance control plane
     # --------------------------------------------------------------------- #
-    def _repartition(self) -> None:
+    def _load_signal(self, step: int) -> LoadSignal:
+        sizes = np.array([s.size for s in self.sets], dtype=np.int64)
+        if self.cfg.signal == "edge-ops":
+            delta = self.count_active - self._prev_active
+            self._prev_active = self.count_active.copy()
+            return LoadSignal.from_edge_ops(delta, sizes, step=step)
         rs = np.array(
             [self.r_of(i) + self.s_abs[i] for i in range(self.k)]
         )
-        sizes = np.array([s.size for s in self.sets], dtype=np.int64)
-        move = self.controller.update(rs, sizes)
-        if move is None:
-            return
-        self.sets, moved = apply_move(self.sets, move)
-        if moved == 0:
-            return
-        self.n_moves += 1
-        self.owner[self.sets[move.dst]] = move.dst
-        # §2.4: charge the number of re-affected nodes to both PIDs
-        self.count_active[move.src] += moved
-        self.count_active[move.dst] += moved
-        self.debt[move.src] -= moved
-        self.debt[move.dst] -= moved
-        # thresholds: receiving PID may now hold hotter fluid than its T
-        s_dst = self.sets[move.dst]
-        if s_dst.size:
-            mx = float((np.abs(self.f[s_dst]) * self.weights[s_dst]).max())
-            if mx > 0:
-                self.t_k[move.dst] = min(self.t_k[move.dst], mx * 1.0001)
+        return LoadSignal.from_residuals(rs, sizes, step=step)
+
+    def _repartition(self, step: int) -> None:
+        for plan in self.rebalancer.propose(self._load_signal(step)):
+            moved = self.executor.apply(plan)
+            if moved:
+                self.move_log.append((step, plan.src, plan.dst, moved))
 
     # --------------------------------------------------------------------- #
     # main loop
@@ -402,8 +417,8 @@ class DistributedSimulator:
             for k in range(self.k):
                 if self.s_abs[k] > 0 and self.s_abs[k] > self.r_of(k) / 2.0:
                     self._exchange(k)
-            if self.controller is not None:
-                self._repartition()
+            if self.rebalancer is not None:
+                self._repartition(step)
             if step % cfg.record_every == 0:
                 hist_steps.append(step)
                 hist_rs.append(
@@ -434,6 +449,7 @@ class DistributedSimulator:
                 np.array(hist_sizes) if hist_sizes else np.zeros((0, self.k))
             ),
             hist_residual=np.array(hist_res, dtype=np.float64),
+            move_log=list(self.move_log),
         )
 
 

@@ -25,6 +25,8 @@ import traceback
 import jax
 import numpy as np
 
+from repro.parallel.compat import cost_analysis_dict, mesh_axis_types_kw
+
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "results", "dryrun")
 
@@ -273,7 +275,7 @@ def lower_cell(arch_id: str, cell_name: str, multi_pod: bool,
             t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     hlo = compiled.as_text()
     # known scan lengths of this cell -> while trip counts per nesting
     # depth (see parse_collectives; XLA:CPU cost analysis counts loop
@@ -388,8 +390,7 @@ def lower_solver(multi_pod: bool, out_dir: str = None, verbose=True):
     axis = mesh.axis_names  # treat the whole mesh as one pid axis
     # flatten mesh to a single 'pid' axis view for the solver
     flat_mesh = jax.sharding.Mesh(
-        mesh.devices.reshape(-1), ("pid",),
-        axis_types=(jax.sharding.AxisType.Auto,),
+        mesh.devices.reshape(-1), ("pid",), **mesh_axis_types_kw(1)
     )
     cfg = EngineConfig(
         k=k, target_error=1e-8, eps=0.15,
@@ -442,7 +443,7 @@ def lower_solver(multi_pod: bool, out_dir: str = None, verbose=True):
         ).lower(*args)
         compiled = lowered.compile()
     mem = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     colls = parse_collectives(compiled.as_text())
     for c in colls:
         c["link"] = classify_link(c)

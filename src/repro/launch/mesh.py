@@ -11,18 +11,15 @@ state (the dry-run must set XLA_FLAGS before any jax initialisation).
 """
 from __future__ import annotations
 
-import jax
-
 __all__ = ["make_production_mesh", "mesh_rules"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
+    from repro.parallel.compat import make_mesh, mesh_axis_types_kw
+
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return make_mesh(shape, axes, **mesh_axis_types_kw(len(axes)))
 
 
 def mesh_rules(multi_pod: bool):

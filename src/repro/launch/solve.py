@@ -6,6 +6,7 @@ paper-protocol runs).
 
   PYTHONPATH=src python -m repro.launch.solve --n 20000 --dynamic
   PYTHONPATH=src python -m repro.launch.solve --simulate --k 16
+  PYTHONPATH=src python -m repro.launch.solve --policy hysteresis
 """
 import argparse
 
@@ -18,6 +19,9 @@ def main():
     ap.add_argument("--graph", choices=["powerlaw", "web"], default="web")
     ap.add_argument("--target-error", type=float, default=None)
     ap.add_argument("--dynamic", action="store_true")
+    ap.add_argument("--policy", default=None,
+                    choices=["slope_ema", "cost_refresh", "hysteresis"],
+                    help="rebalancing policy (implies dynamic)")
     ap.add_argument("--simulate", action="store_true",
                     help="faithful K-PID simulator instead of the engine")
     ap.add_argument("--k", type=int, default=None,
@@ -42,8 +46,8 @@ def main():
     if args.simulate:
         k = args.k or 8
         cfg = SimulatorConfig(k=k, target_error=te, eps=0.15,
-                              dynamic=args.dynamic, mode="batch",
-                              record_every=100)
+                              dynamic=args.dynamic, policy=args.policy,
+                              mode="batch", record_every=100)
         res = DistributedSimulator(p, b, cfg).run()
         print(f"simulator K={k}: converged={res.converged} "
               f"cost={res.cost_iterations:.2f} moves={res.n_moves}")
@@ -60,7 +64,8 @@ def main():
     k = len(jax.devices())
     cfg = EngineConfig(k=k, target_error=te, eps=0.15,
                        buckets_per_dev=args.buckets_per_dev, headroom=2,
-                       dynamic=args.dynamic and k > 1)
+                       dynamic=args.dynamic and k > 1,
+                       policy=args.policy if k > 1 else None)
     eng = DistributedEngine(build_engine_arrays(p, b, cfg), cfg)
     x, info = eng.solve(verbose=True)
     print(f"engine K={k}: converged={info['converged']} "

@@ -37,6 +37,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.parallel.compat import shard_map
+
 from repro.parallel.axes import hint
 
 __all__ = [
@@ -226,7 +228,7 @@ def _forward_gin_halo(p, batch, cfg, mesh, rules):
                      final_act=True)
         return _mlp(p["readout"], h)
 
-    mapped = jax.shard_map(
+    mapped = shard_map(
         block,
         mesh=mesh,
         in_specs=(P(node_ax, None), P(node_ax), P(node_ax), P(node_ax),

@@ -33,6 +33,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.parallel.compat import shard_map
+
 from repro.parallel.axes import hint
 
 __all__ = [
@@ -330,7 +332,7 @@ def _decode_attn_dist(q, ck, cv, kk, vv, pos, cfg, mesh, rules,
     spec_s = P(b_ax, kv_ax, None)
     if scales is not None:
         ks, vs, ks_new, vs_new = scales
-        mapped = jax.shard_map(
+        mapped = shard_map(
             block, mesh=mesh,
             in_specs=(spec_q, spec_c, spec_c, spec_q, spec_q, P(),
                       spec_s, spec_s, P(b_ax, None, None),
@@ -339,7 +341,7 @@ def _decode_attn_dist(q, ck, cv, kk, vv, pos, cfg, mesh, rules,
             check_vma=False,
         )
         return mapped(q, ck, cv, kk, vv, pos, ks, vs, ks_new, vs_new)
-    mapped = jax.shard_map(
+    mapped = shard_map(
         block, mesh=mesh,
         in_specs=(spec_q, spec_c, spec_c, spec_q, spec_q, P()),
         out_specs=(spec_q, spec_c, spec_c),
@@ -422,7 +424,7 @@ def _moe_ffn_ep(lp, x, cfg: TransformerConfig, mesh, rules):
         aux = jax.lax.pmean(aux, tuple(mesh.axis_names))
         return out.reshape(bl, sl, d), aux
 
-    mapped = jax.shard_map(
+    mapped = shard_map(
         block,
         mesh=mesh,
         in_specs=(P(batch_ax, seq_ax, None), P(None, None),
@@ -463,6 +465,44 @@ def _moe(lp, x, cfg: TransformerConfig):
     return _moe_ffn(lp, x, cfg)
 
 
+# --------------------------------------------------------------------------- #
+# balance-plane tap: per-expert routed-token counts (repro.balance hook)
+# --------------------------------------------------------------------------- #
+_expert_load_sink = None
+
+
+def set_expert_load_sink(fn) -> None:
+    """Register ``fn(counts: np.ndarray[n_experts])`` as the expert-load sink.
+
+    Every MoE dispatch then streams its per-expert routed-token counts to
+    ``fn`` (via ``jax.debug.callback``, so it works under jit) — the
+    ``expert-tokens`` LoadSignal of the :mod:`repro.balance` control plane:
+    a hot expert is an overloaded Ω_k and the same slope policy that moves
+    nodes/buckets proposes expert-shard moves.  Pass ``None`` to unhook.
+    Register BEFORE the step function is traced; the tap is baked in at
+    trace time (dispatch at call time goes through the module global, so
+    re-registering a different sink needs no re-trace).
+
+    Active on the pjit dispatch path (``_moe_ffn``); the expert-parallel
+    shard_map path keeps its per-shard stats local (documented semantic
+    difference) and does not tap.
+    """
+    global _expert_load_sink
+    _expert_load_sink = fn
+
+
+def _dispatch_expert_load(counts) -> None:
+    if _expert_load_sink is not None:
+        import numpy as np
+
+        _expert_load_sink(np.asarray(counts))
+
+
+def _tap_expert_load(counts) -> None:
+    if _expert_load_sink is not None:  # traced-in only when hooked
+        jax.debug.callback(_dispatch_expert_load, counts)
+
+
 def _moe_ffn(lp, x, cfg: TransformerConfig):
     """Capacity-based top-k MoE (GShard-style dispatch via sorted scatter)."""
     m = cfg.moe
@@ -501,9 +541,9 @@ def _moe_ffn(lp, x, cfg: TransformerConfig):
     out = jax.ops.segment_sum(gathered * w, tok_idx, num_segments=t)
     # auxiliary load-balance loss (Switch-style)
     me = probs.mean(axis=0)  # mean router prob per expert
-    ce = jnp.bincount(flat_e, length=m.n_experts).astype(jnp.float32) / max(
-        t * m.top_k, 1
-    )
+    counts = jnp.bincount(flat_e, length=m.n_experts)
+    _tap_expert_load(counts)
+    ce = counts.astype(jnp.float32) / max(t * m.top_k, 1)
     aux = m.n_experts * jnp.sum(me * ce) * m.router_aux_weight
     if m.n_shared:
         sh = jax.nn.silu(xf @ lp["sw1"]) * (xf @ lp["sw3"])

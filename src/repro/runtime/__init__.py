@@ -1,1 +1,6 @@
-from .loop import StragglerMonitor, TrainLoop, TrainLoopConfig  # noqa: F401
+from .loop import (  # noqa: F401
+    ExpertLoadMonitor,
+    StragglerMonitor,
+    TrainLoop,
+    TrainLoopConfig,
+)

@@ -4,15 +4,21 @@
   auto-resume; the data pipeline is seeded-by-step so a restart replays the
   exact batch stream.
 * **straggler detection** — per-step wall-time EMA; the *paper's own slope
-  controller* is reused as the detector (a straggling host is exactly a
+  policy* is reused as the detector through the shared
+  :mod:`repro.balance` control plane (a straggling host is exactly a
   "slow PID" whose residual-decay slope lags): feed per-host step times as
-  the progress signal, get "move load away from host i" decisions.  In this
-  single-process container the monitor runs in advisory mode (reports +
-  tested against synthetic host timings); on a pod it drives the bucket /
-  expert rebalancer.
+  the ``step-time`` LoadSignal, get "move load away from host i"
+  MovePlans.  In this single-process container the monitor runs against an
+  :class:`~repro.balance.executors.AdvisoryExecutor` (reports + tested
+  against synthetic host timings); on a pod the drained plan log drives
+  the bucket / expert rebalancer.
+* **MoE expert rebalancing** — the same policy on per-expert routed-token
+  counts (``expert-tokens`` LoadSignal; a hot expert is an overloaded
+  Ω_k), fed by the transformer's expert-load tap
+  (:func:`repro.models.transformer.set_expert_load_sink`).
 * **elastic scaling** — the bucket-granular partition (core.distributed)
-  lets K change between chunks; ``TrainLoop.on_world_change`` re-seeds the
-  controller's slopes (DynamicController.reset_pid).
+  lets K change between chunks; ``TrainLoop.on_world_change`` re-seeds
+  the policy through the shared interface (``Rebalancer.reset_worker``).
 * **fault injection** — ``crash_at_step`` simulates a hard kill for the
   restart tests.
 """
@@ -20,45 +26,113 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import numpy as np
 
+from repro.balance.executors import AdvisoryExecutor
+from repro.balance.plan import MovePlan
+from repro.balance.policies import Rebalancer, SlopeEMAPolicy
+from repro.balance.signals import LoadSignal
 from repro.checkpoint import CheckpointManager
-from repro.core.partition import DynamicController, DynamicControllerConfig
 
-__all__ = ["TrainLoopConfig", "TrainLoop", "StragglerMonitor"]
+__all__ = ["TrainLoopConfig", "TrainLoop", "StragglerMonitor",
+           "ExpertLoadMonitor"]
 
 
 class StragglerMonitor:
-    """Slope-EMA straggler detector (the paper's controller on step times).
+    """Slope-EMA straggler detector: the paper's policy on step times.
 
-    Feed per-host step durations; a host whose EMA'd log-slowness exceeds
-    the fastest by the paper's 50% rule is flagged.  `advise()` returns the
-    same MoveInstruction the partition controller would issue.
+    A thin adapter over the shared control plane — per-host step
+    durations become a ``step-time`` :class:`LoadSignal`, any
+    :class:`Rebalancer` proposes, and an :class:`AdvisoryExecutor`
+    records the accepted plans (``self.executor.log`` / ``drain()``).
+    A host whose EMA'd log-slowness exceeds the fastest by the paper's
+    50% rule is flagged and sheds load.
     """
 
-    def __init__(self, n_hosts: int, eta: float = 0.5, z: int = 10):
-        self.ctl = DynamicController(
-            DynamicControllerConfig(
-                k=n_hosts, target_error=1e-6, eta=eta, z=z
-            )
+    def __init__(self, n_hosts: int, eta: float = 0.5, z: int = 10,
+                 policy: Optional[Rebalancer] = None):
+        self.policy: Rebalancer = policy or SlopeEMAPolicy(
+            k=n_hosts, target_error=1e-6, eta=eta, z=z, unit="device"
         )
+        self.executor = AdvisoryExecutor(kind="device")
         self.n_hosts = n_hosts
+        self._step = 0
 
     def advise(self, step_times: np.ndarray,
-               load_units: Optional[np.ndarray] = None):
-        """step_times: [n_hosts] seconds.  Returns MoveInstruction or None.
+               load_units: Optional[np.ndarray] = None
+               ) -> Optional[MovePlan]:
+        """step_times: [n_hosts] seconds.  Returns the first MovePlan (or
+        None); the full batch lands in ``self.executor.log``.
 
-        The controller's input plays the role of the residual magnitude
-        (bigger = slower PID), so step times feed in directly: the host
-        with the largest EMA'd log step-time becomes i_min and sheds load.
+        The signal plays the role of the residual magnitude (bigger =
+        slower PID), so step times feed in directly: the host with the
+        largest EMA'd log step-time becomes i_min and sheds load.
         """
-        times = np.maximum(np.asarray(step_times, np.float64), 1e-9)
-        sizes = (load_units if load_units is not None
-                 else np.full(self.n_hosts, 1 << 20))
-        return self.ctl.update(times, np.asarray(sizes))
+        self._step += 1
+        sig = LoadSignal.from_step_times(step_times, load_units,
+                                         step=self._step)
+        plans = self.policy.propose(sig)
+        for p in plans:
+            self.executor.apply(p)
+        return plans[0] if plans else None
+
+    def reseed(self) -> None:
+        """Elastic event at unchanged width: re-seed every host's slope."""
+        for k in range(self.n_hosts):
+            self.policy.reset_worker(k)
+
+
+class ExpertLoadMonitor:
+    """MoE expert rebalancer: the same policy on routed-token counts.
+
+    Register :meth:`observe` via
+    :func:`repro.models.transformer.set_expert_load_sink`; every MoE
+    layer then streams its per-expert token counts here.  A hot expert
+    (slope lagging on the ``expert-tokens`` signal) sheds shards.
+    """
+
+    def __init__(self, n_experts: int, eta: float = 0.5, z: int = 10,
+                 shards_per_expert: int = 16,
+                 policy: Optional[Rebalancer] = None):
+        self.policy: Rebalancer = policy or SlopeEMAPolicy(
+            k=n_experts, target_error=1e-6, eta=eta, z=z,
+            unit="expert-shard"
+        )
+        self.executor = AdvisoryExecutor(kind="expert-shard")
+        self.n_experts = n_experts
+        # the movable-unit budget: each expert's capacity is split into
+        # this many shards (the 10% move cap needs >= 10 units to act)
+        self.shards = np.full(n_experts, shards_per_expert, dtype=np.int64)
+        self._step = 0
+
+    def observe(self, token_counts: np.ndarray) -> List[MovePlan]:
+        counts = np.asarray(token_counts, np.float64)
+        if counts.shape[0] != self.n_experts:
+            return []
+        self._step += 1
+        sig = LoadSignal.from_expert_counts(
+            np.maximum(counts, 1e-9), shards_per_expert=self.shards,
+            step=self._step)
+        plans = self.policy.propose(sig)
+        accepted = []
+        for p in plans:
+            # keep the shard ledger truthful: a source never drops below
+            # one shard, and proposals beyond it are clipped like every
+            # other executor clips
+            units = int(min(p.units, self.shards[p.src] - 1))
+            if units < 1:
+                continue
+            if units != p.units:
+                p = MovePlan(src=p.src, dst=p.dst, units=units,
+                             kind=p.kind)
+            self.executor.apply(p)
+            self.shards[p.src] -= units
+            self.shards[p.dst] += units
+            accepted.append(p)
+        return accepted
 
 
 @dataclasses.dataclass
@@ -70,6 +144,7 @@ class TrainLoopConfig:
     log_every: int = 10
     crash_at_step: Optional[int] = None  # fault injection (tests)
     n_hosts: int = 1  # straggler monitor width
+    moe_experts: int = 0  # >0 wires the MoE expert-load monitor
 
 
 class TrainLoop:
@@ -88,9 +163,22 @@ class TrainLoop:
         self.cfg = cfg
         self.mgr = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep)
         self.monitor = StragglerMonitor(cfg.n_hosts)
+        self.expert_monitor = (ExpertLoadMonitor(cfg.moe_experts)
+                               if cfg.moe_experts > 0 else None)
         self.metrics_log: list = []
 
     def run(self, verbose: bool = False) -> Dict[str, Any]:
+        if self.expert_monitor is None:
+            return self._run(verbose)
+        from repro.models.transformer import set_expert_load_sink
+
+        set_expert_load_sink(self.expert_monitor.observe)
+        try:
+            return self._run(verbose)
+        finally:  # injected faults must not leave a stale global sink
+            set_expert_load_sink(None)
+
+    def _run(self, verbose: bool = False) -> Dict[str, Any]:
         cfg = self.cfg
         params, opt_state = self.init_state()
         start = 0
@@ -136,5 +224,14 @@ class TrainLoop:
         }
 
     def on_world_change(self, new_hosts: int):
-        """Elastic event: world size changed -> re-seed monitor slopes."""
-        self.monitor = StragglerMonitor(new_hosts)
+        """Elastic event: re-seed the policy through the shared interface.
+
+        Unchanged width (host replaced in place) re-seeds every slope via
+        ``Rebalancer.reset_worker``; a changed width rebuilds the monitor
+        at the new K (the policy state is per-worker and cannot survive a
+        dimension change).
+        """
+        if new_hosts == self.monitor.n_hosts:
+            self.monitor.reseed()
+        else:
+            self.monitor = StragglerMonitor(new_hosts)

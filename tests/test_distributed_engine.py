@@ -70,39 +70,43 @@ MULTI_SCRIPT = textwrap.dedent(
         err = np.abs(xs - x_ref).max()
         assert err < 1e-5, (K, dyn, err)
 
-    # deterministic repartition test: force a bucket move mid-solve and
-    # check the solution is still exact (state+edges travel with buckets)
+    # deterministic repartition test: force a bucket move mid-solve through
+    # the balance control plane's executor and check the solution is still
+    # exact (state+edges travel with buckets) — the MovePlan round-trip at
+    # bucket granularity
+    from repro.balance import BucketMoveExecutor, MovePlan
+
     cfg = EngineConfig(k=4, target_error=1e-6, eps=0.15,
                        buckets_per_dev=12, headroom=4, dynamic=False)
     arrs = build_engine_arrays(p, b, cfg)
     eng = DistributedEngine(arrs, cfg)
-    state = eng.init_state()
-    w, ss, db, dsl, wg = (eng.w, eng.src_slot, eng.dst_bucket,
-                          eng.dst_slot, eng.wgt)
-    row_map = np.array(arrs.pos_of_bucket)
-    state, _ = eng._chunk(state, w, ss, db, dsl, wg)
-    perm, new_map, moved = eng._plan_move(row_map, 0, 3, 2)
+    ex = BucketMoveExecutor(eng, eng.init_state())
+    sizes0 = ex.sizes().copy()
+    ex.state, _ = eng._chunk(ex.state, ex.w, ex.src_slot, ex.dst_bucket,
+                             ex.dst_slot, ex.wgt)
+    moved = ex.apply(MovePlan(src=0, dst=3, units=2, kind="bucket"))
     assert moved == 2, moved
-    import jax
-    (state, w, ss, db, dsl, wg) = eng._repartition(
-        state, jax.device_put(perm, eng.rep_sharding),
-        jax.device_put(new_map.astype(np.int32), eng.rep_sharding),
-        w, ss, db, dsl, wg)
+    sizes1 = ex.sizes()
+    assert sizes1[0] == sizes0[0] - 2 and sizes1[3] == sizes0[3] + 2
+    # a move exceeding the destination headroom is clipped to free rows
+    moved2 = ex.apply(MovePlan(src=1, dst=3, units=99, kind="bucket"))
+    assert moved2 == cfg.headroom - 2, moved2  # only 2 inert rows left
     tol = cfg.target_error * cfg.eps
     for _ in range(cfg.max_chunks):
-        state, stats = eng._chunk(state, w, ss, db, dsl, wg)
+        ex.state, stats = eng._chunk(ex.state, ex.w, ex.src_slot,
+                                     ex.dst_bucket, ex.dst_slot, ex.wgt)
         resid = float(np.asarray(stats["residual"])) + float(
             np.asarray(stats["s"]).sum())
         if resid <= tol:
             break
     assert resid <= tol, resid
-    h = np.asarray(state.h).reshape(arrs.n_rows, arrs.bucket_size)
+    h = np.asarray(ex.state.h).reshape(arrs.n_rows, arrs.bucket_size)
     x2 = np.zeros(arrs.n)
     for bid in range(arrs.n_rows):
         nodes = arrs.node_of_slot[int(arrs.pos_of_bucket[bid])]
         valid = nodes >= 0
         if valid.any():
-            x2[nodes[valid]] = h[int(new_map[bid]), valid]
+            x2[nodes[valid]] = h[int(ex.row_of_bucket[bid]), valid]
     err = np.abs(x2 - x_ref).max()
     assert err < 1e-5, ("post-move solution wrong", err)
     print("MULTI_OK")

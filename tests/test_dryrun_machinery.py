@@ -21,6 +21,7 @@ SCRIPT = textwrap.dedent(
     from repro.launch.steps import build_cell_step
     from repro.launch.dryrun import parse_collectives
     from repro.parallel.axes import axis_rules
+    from repro.parallel.compat import cost_analysis_dict
 
     # a tiny LM spec with the same machinery as the real cells
     from repro.models.transformer import TransformerConfig
@@ -37,8 +38,8 @@ SCRIPT = textwrap.dedent(
     spec = ArchSpec(arch_id="tiny-lm", family="lm", model_cfg=cfg,
                     cells={{"train_tiny": cell}})
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.parallel.compat import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     rules = {{"batch": "data", "embed": "data", "act_embed": None,
              "act_seq": "model", "heads": "model", "mlp": "model",
              "vocab": "model", "kv_seq": "model"}}
@@ -52,7 +53,7 @@ SCRIPT = textwrap.dedent(
         with mesh:
             compiled = jax.jit(step, in_shardings=shards).lower(
                 *args).compile()
-    ca = compiled.cost_analysis()
+    ca = cost_analysis_dict(compiled)
     assert ca.get("flops", 0) > 0
     mem = compiled.memory_analysis()
     assert mem.argument_size_in_bytes > 0

@@ -1,7 +1,6 @@
 """Partition strategies + dynamic controller (paper §2.5)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (
     DynamicController,
@@ -11,10 +10,15 @@ from repro.core import (
     uniform_partition,
 )
 
+try:
+    from hypothesis import given, settings, strategies as st
 
-@settings(max_examples=25, deadline=None)
-@given(n=st.integers(1, 5000), k=st.integers(1, 64))
-def test_uniform_partition_covers(n, k):
+    HAVE_HYPOTHESIS = True
+except ImportError:  # optional dep: property tests skip, fallbacks run
+    HAVE_HYPOTHESIS = False
+
+
+def _check_uniform_covers(n, k):
     if k > n:
         k = n
     sets = uniform_partition(n, k)
@@ -24,13 +28,7 @@ def test_uniform_partition_covers(n, k):
     assert np.array_equal(np.sort(cat), np.arange(n))
 
 
-@settings(max_examples=25, deadline=None)
-@given(
-    n=st.integers(10, 2000),
-    k=st.integers(1, 16),
-    seed=st.integers(0, 99),
-)
-def test_cb_partition_covers_and_balances(n, k, seed):
+def _check_cb_covers_and_balances(n, k, seed):
     rng = np.random.default_rng(seed)
     deg = rng.zipf(1.6, n).astype(np.int64)
     sets = cb_partition(deg, k)
@@ -42,6 +40,39 @@ def test_cb_partition_covers_and_balances(n, k, seed):
     cost = np.maximum(deg, 1)
     per = np.array([cost[s].sum() for s in sets])
     assert per.max() <= cost.sum() / k + cost.max() + 1
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(n=st.integers(1, 5000), k=st.integers(1, 64))
+    def test_uniform_partition_covers(n, k):
+        _check_uniform_covers(n, k)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(10, 2000),
+        k=st.integers(1, 16),
+        seed=st.integers(0, 99),
+    )
+    def test_cb_partition_covers_and_balances(n, k, seed):
+        _check_cb_covers_and_balances(n, k, seed)
+
+
+@pytest.mark.parametrize(
+    "n,k", [(1, 1), (7, 3), (100, 64), (5000, 64), (64, 64)]
+)
+def test_uniform_partition_covers_cases(n, k):
+    """Deterministic fallback for the property test (no hypothesis)."""
+    _check_uniform_covers(n, k)
+
+
+@pytest.mark.parametrize(
+    "n,k,seed", [(10, 1, 0), (100, 16, 42), (2000, 16, 3), (11, 16, 7)]
+)
+def test_cb_partition_covers_and_balances_cases(n, k, seed):
+    """Deterministic fallback for the property test (no hypothesis)."""
+    _check_cb_covers_and_balances(n, k, seed)
 
 
 def test_controller_moves_from_slow_to_fast():

@@ -20,8 +20,8 @@ SCRIPT = textwrap.dedent(
         prefill_step, train_loss)
     from repro.parallel.axes import axis_rules
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.parallel.compat import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     rules = {{"batch": "data", "act_seq": "model", "expert": "model",
              "kv_seq": "model", "heads": "model", "mlp": "model",
              "vocab": "model", "embed": "data", "act_embed": None}}
@@ -110,8 +110,8 @@ HALO_SCRIPT = textwrap.dedent(
     plain = {{k: jnp.asarray(v)
              for k, v in make_gnn_batch(g, 8, n_classes=5).items()}}
     out_plain = np.asarray(gnn.forward(p, plain, cfg))
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.parallel.compat import make_mesh
+    mesh = make_mesh((4, 2), ("data", "model"))
     halo_np = build_halo_batch(g, 4, 8, n_classes=5)
     halo_np["x"][:g.n] = np.asarray(plain["x"])
     halo = {{k: jnp.asarray(v) for k, v in halo_np.items()}}
