@@ -1,19 +1,75 @@
-"""Benchmark suite entry: ``python -m benchmarks.run [--quick|--full]``.
+"""Benchmark suite entry: ``python -m benchmarks.run [--quick|--full|--smoke]``.
 
 One section per paper table/figure + kernel microbench + roofline summary.
 Asserts the paper's qualitative claims (C1–C4, DESIGN.md §1) on the
 regenerated data and prints CSV-ish lines throughout.
+
+``--smoke`` is the CI guard for the perf-trajectory artifacts: it runs a
+tiny frontier sweep + engine bench end-to-end, validates the JSON schema
+they emit, and validates any committed ``BENCH_*.json`` against the same
+schema — so a schema break is caught before it lands.
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
 import time
+
+KERNEL_ROW_KEYS = {
+    "n", "c", "density", "n_edges", "n_blocks", "n_blocks_active",
+    "segment_sum_us", "bsr_full_us", "pallas_skip_us",
+    "speedup_vs_segment_sum",
+}
+ENGINE_ROW_KEYS = {
+    "n", "k", "backend", "n_edges", "bucket_size", "chunk_ms", "rounds",
+    "us_per_round", "residual_after",
+}
+
+
+def _validate_bench(payload: dict, required: set, name: str) -> None:
+    assert isinstance(payload.get("meta"), dict), f"{name}: missing meta"
+    rows = payload.get("rows")
+    assert isinstance(rows, list) and rows, f"{name}: missing rows"
+    real = [r for r in rows if "skipped" not in r]
+    assert real, f"{name}: every row skipped"
+    for r in real:
+        missing = required - r.keys()
+        assert not missing, f"{name}: row missing keys {sorted(missing)}"
+    print(f"  {name}: {len(real)} measured rows, schema OK")
+
+
+def smoke() -> int:
+    """Fast end-to-end bench smoke + BENCH_*.json schema validation."""
+    from benchmarks import engine_bench, kernel_bench
+
+    print("[smoke] frontier kernel sweep (tiny)")
+    kp = kernel_bench.frontier_sweep(
+        ns=(2**12,), cs=(1, 2), densities=(1.0, 0.5), iters=1,
+        out_path="BENCH_kernels.smoke.json")
+    _validate_bench(kp, KERNEL_ROW_KEYS, "kernel sweep (smoke)")
+    print("[smoke] engine bench (tiny)")
+    ep = engine_bench.main(smoke=True, out_path="BENCH_engine.smoke.json")
+    _validate_bench(ep, ENGINE_ROW_KEYS, "engine bench (smoke)")
+    for tmp in ("BENCH_kernels.smoke.json", "BENCH_engine.smoke.json"):
+        if os.path.exists(tmp):
+            os.remove(tmp)
+    for path, keys in (("BENCH_kernels.json", KERNEL_ROW_KEYS),
+                       ("BENCH_engine.json", ENGINE_ROW_KEYS)):
+        if os.path.exists(path):
+            with open(path) as fh:
+                _validate_bench(json.load(fh), keys, path)
+        else:
+            print(f"  {path} not present (perf trajectory not seeded yet)")
+    print("[smoke] OK")
+    return 0
 
 
 def main():
     quick = "--quick" in sys.argv
     full = "--full" in sys.argv
+    if "--smoke" in sys.argv:
+        return smoke()
     t0 = time.time()
     print("=" * 70)
     print("D-iteration dynamic-partition benchmark suite")

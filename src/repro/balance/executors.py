@@ -113,6 +113,19 @@ class BucketMoveExecutor:
         self.dst_bucket = engine.dst_bucket
         self.dst_slot = engine.dst_slot
         self.wgt = engine.wgt
+        # BSR tile operands travel with their rows too (None when the
+        # engine runs the per-edge segment-sum backend)
+        self.tiles = getattr(engine, "tiles", None)
+        self.tile_dst = getattr(engine, "tile_dst", None)
+        self.slot_out_deg = getattr(engine, "slot_out_deg", None)
+
+    def chunk_operands(self) -> tuple:
+        """Row-sharded operands in the order the engine's chunk expects."""
+        ops = (self.w, self.src_slot, self.dst_bucket, self.dst_slot,
+               self.wgt)
+        if self.tiles is not None:
+            ops = ops + (self.tiles, self.tile_dst, self.slot_out_deg)
+        return ops
 
     def sizes(self) -> np.ndarray:
         """Real (non-inert) buckets currently owned per device."""
@@ -131,13 +144,15 @@ class BucketMoveExecutor:
         if moved == 0:
             return 0
         self.row_of_bucket = new_map
-        (self.state, self.w, self.src_slot, self.dst_bucket,
-         self.dst_slot, self.wgt) = eng._repartition(
+        self.state, arrs = eng._repartition(
             self.state,
             jax.device_put(perm, eng.rep_sharding),
             jax.device_put(new_map.astype(np.int32), eng.rep_sharding),
-            self.w, self.src_slot, self.dst_bucket, self.dst_slot,
-            self.wgt)
+            self.chunk_operands())
+        (self.w, self.src_slot, self.dst_bucket, self.dst_slot,
+         self.wgt) = arrs[:5]
+        if self.tiles is not None:
+            self.tiles, self.tile_dst, self.slot_out_deg = arrs[5:8]
         return moved
 
 

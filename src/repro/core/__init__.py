@@ -16,6 +16,7 @@ from .graph import (
     BucketedGraph,
     CSRGraph,
     bucketize,
+    host_block_graph,
     pagerank_system,
     power_law_graph,
     random_dd_system,

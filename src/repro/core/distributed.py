@@ -78,6 +78,11 @@ class EngineConfig:
     chunk_rounds: int = 4  # exchange cycles per jitted chunk
     max_chunks: int = 4096
     dtype: jnp.dtype = jnp.float32
+    diffusion_backend: str = "segment_sum"  # per-edge scatter | "bsr":
+    # bucket-tiled dense blocks (MXU path; Pallas gather kernel on TPU,
+    # einsum + segment-sum elsewhere)
+    pallas_interpret: bool = False  # force the Pallas tile kernel through
+    # the interpreter off-TPU (parity tests only — emulation speed)
 
 
 @dataclasses.dataclass
@@ -101,6 +106,17 @@ class EngineArrays:
     node_of_slot: np.ndarray  # [R, S] global node id or -1 (initial rows)
     n: int
     n_edges: int
+    # BSR tiling of the bucket-local edges (diffusion_backend="bsr"):
+    # ``tiles[r, t]`` is the dense [S, S] block pushing fluid from the bucket
+    # currently at row ``r`` into stable bucket ``tile_dst[r, t]``
+    # (``tiles[r, t][dst_slot, src_slot] = weight``; padding tiles are zero
+    # and point at bucket 0 — harmless).  Row-indexed on purpose: a bucket
+    # move permutes whole tile groups with the same ``jnp.take`` that moves
+    # f/h/w, while ``tile_dst`` stores *stable* ids and never changes.
+    tiles: Optional[np.ndarray] = None  # [R, T, S, S]
+    tile_dst: Optional[np.ndarray] = None  # [R, T] int32
+    slot_out_deg: Optional[np.ndarray] = None  # [R, S] int32 real edges per
+    # slot — the bsr path's §2.3 op counter (no per-edge gather needed)
 
     @property
     def n_rows(self) -> int:
@@ -166,7 +182,19 @@ def build_engine_arrays(
     ]
     for bid, row in zip(range(n_real, r), inert_rows):
         pos_of_bucket[bid] = row
+    tiles = tile_dst = slot_out_deg = None
+    if cfg.diffusion_backend != "segment_sum":
+        tiles, tile_dst = _tile_engine_edges(
+            src_slot, dst_bucket, dst_slot, wgt, s, np.dtype(cfg.dtype)
+        )
+        slot_out_deg = np.zeros((r, s), dtype=np.int32)
+        rows_e = np.broadcast_to(np.arange(r)[:, None], src_slot.shape)
+        real = wgt != 0
+        np.add.at(slot_out_deg, (rows_e[real], src_slot[real]), 1)
     return EngineArrays(
+        tiles=tiles,
+        tile_dst=tile_dst,
+        slot_out_deg=slot_out_deg,
         f0=f0,
         w=w,
         src_slot=src_slot,
@@ -178,6 +206,98 @@ def build_engine_arrays(
         n=g.n,
         n_edges=g.n_edges,
     )
+
+
+def _tile_push_stable(
+    tiles: jax.Array,  # [B_loc, T, S, S] this device's tile groups
+    tile_dst: jax.Array,  # [B_loc, T] stable destination bucket ids
+    sent: jax.Array,  # [B_loc, S] masked fluid leaving this round
+    r_total: int,
+    *,
+    use_pallas: bool,
+    interpret: bool = False,
+    visits: Optional[tuple] = None,
+) -> jax.Array:
+    """delta[bid] = sum of tile @ sent over tiles targeting stable bucket bid.
+
+    Two implementations of the same contraction:
+
+    * Pallas (TPU / forced-interpret): the tiles stay in their row-owned
+      pool; an in-graph ``argsort`` of the destination ids builds the
+      dst-sorted visit order that :func:`bsr_gather_spmm_pallas` consumes via
+      scalar prefetch, and the visit-derived occupancy map masks buckets no
+      tile targets (their output blocks are uninitialised by design).
+    * einsum + segment-sum: XLA batched-matmul path, the CPU default.
+
+    Padding tiles are all-zero and point at bucket 0 — they contribute
+    nothing either way.
+    """
+    b_loc, t_cap, s, _ = tiles.shape
+    dst_flat = tile_dst.reshape(-1)
+    if use_pallas:
+        from repro.kernels.diffusion import bsr_gather_spmm_pallas
+
+        order, visit_dst, visit_col, occ = (
+            visits if visits is not None
+            else _tile_visit_order(tile_dst, r_total))
+        out = bsr_gather_spmm_pallas(
+            tiles.reshape(-1, s, s), order, visit_dst, visit_col,
+            sent[:, :, None], r_total, bs=s, interpret=interpret,
+        )
+        return jnp.where(occ[:, None], out[..., 0], jnp.zeros_like(out[..., 0]))
+    partial = jnp.einsum("btij,bj->bti", tiles, sent)
+    return jax.ops.segment_sum(
+        partial.reshape(-1, s), dst_flat, num_segments=r_total
+    )
+
+
+def _tile_visit_order(tile_dst: jax.Array, r_total: int):
+    """dst-sorted visit tables for the gather kernel + the row-occupancy
+    mask.  Loop-invariant given ``tile_dst`` — hoist out of the round loop
+    (an ``argsort`` per round would partially undo the kernel's win)."""
+    t_cap = tile_dst.shape[1]
+    dst_flat = tile_dst.reshape(-1)
+    order = jnp.argsort(dst_flat).astype(jnp.int32)
+    occ = jnp.zeros(r_total, bool).at[dst_flat].set(True)
+    return (order, dst_flat[order], (order // t_cap).astype(jnp.int32), occ)
+
+
+def _tile_engine_edges(
+    src_slot: np.ndarray,  # [R, E]
+    dst_bucket: np.ndarray,  # [R, E] stable bucket ids
+    dst_slot: np.ndarray,  # [R, E]
+    wgt: np.ndarray,  # [R, E] (0 = padding)
+    s: int,
+    dtype: np.dtype,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Group each row's edge buffer into dense [S, S] per-destination tiles.
+
+    The tile capacity T is the max distinct destination buckets of any row
+    (shared across rows/devices so shard_map sees one static shape); unused
+    tile slots stay zero with ``tile_dst = 0``.
+    """
+    r = src_slot.shape[0]
+    groups = []
+    t_max = 1
+    for row in range(r):
+        mask = wgt[row] != 0
+        uniq = np.unique(dst_bucket[row][mask])
+        groups.append(uniq)
+        t_max = max(t_max, uniq.shape[0])
+    tiles = np.zeros((r, t_max, s, s), dtype=dtype)  # compute dtype: the
+    # engine casts anyway, and a float64 intermediate doubles peak memory
+    tile_dst = np.zeros((r, t_max), dtype=np.int32)
+    for row in range(r):
+        mask = wgt[row] != 0
+        db = dst_bucket[row][mask]
+        ds = dst_slot[row][mask]
+        ss = src_slot[row][mask]
+        wv = wgt[row][mask]
+        uniq = groups[row]
+        tile_dst[row, : uniq.shape[0]] = uniq
+        t_of_edge = np.searchsorted(uniq, db)
+        np.add.at(tiles, (row, t_of_edge, ds, ss), wv)
+    return tiles, tile_dst
 
 
 @jax.tree_util.register_dataclass
@@ -214,6 +334,16 @@ class DistributedEngine:
             raise ValueError(
                 f"unknown rebalancing signal {cfg.signal!r}; expected "
                 "'residual' or 'edge-ops'"
+            )
+        if cfg.diffusion_backend not in ("segment_sum", "bsr"):
+            raise ValueError(
+                f"unknown diffusion backend {cfg.diffusion_backend!r}; "
+                "expected 'segment_sum' or 'bsr'"
+            )
+        if cfg.diffusion_backend == "bsr" and arrays.tiles is None:
+            raise ValueError(
+                "diffusion_backend='bsr' needs tiled arrays — build them "
+                "with build_engine_arrays(..., cfg) using the same config"
             )
         self.a = arrays
         self.cfg = cfg
@@ -256,6 +386,12 @@ class DistributedEngine:
         self.dst_bucket = put_row(a.dst_bucket)
         self.dst_slot = put_row(a.dst_slot)
         self.wgt = put_row(a.wgt.astype(dt))
+        if cfg.diffusion_backend == "bsr":
+            self.tiles = put_row(np.asarray(a.tiles, dtype=dt))
+            self.tile_dst = put_row(a.tile_dst)
+            self.slot_out_deg = put_row(a.slot_out_deg)
+        else:
+            self.tiles = self.tile_dst = self.slot_out_deg = None
         return EngineState(
             f=put_row(a.f0.astype(dt)),
             h=put_row(np.zeros(a.f0.shape, dtype=dt)),
@@ -277,26 +413,51 @@ class DistributedEngine:
         r_total = a.n_rows
         b_loc = cfg.buckets_per_dev
         k = cfg.k
+        use_bsr = cfg.diffusion_backend == "bsr"
+        pallas_path = (jax.default_backend() == "tpu"
+                       or cfg.pallas_interpret)
 
-        def local_round(f, h, obox, t_d, ops_d, pos, w, src_slot,
-                        dst_bucket, dst_slot, wgt, my_start):
+        def tile_push(tiles, tile_dst, sent, pos, visits):
+            """BSR push: dense [S, S] tile matmuls instead of the per-edge
+            scatter.  Returns the full-length [R*S] contribution in *row*
+            space (current bucket positions).  ``visits`` is the chunk-level
+            precomputed dst-sorted visit table (pallas path only)."""
+            contrib_stable = _tile_push_stable(
+                tiles, tile_dst, sent, r_total,
+                use_pallas=pallas_path,
+                interpret=cfg.pallas_interpret,
+                visits=visits,
+            )  # [R, S] indexed by stable bucket id
+            # stable bucket space -> current row space via the position map
+            inv = jnp.zeros(r_total, jnp.int32).at[pos].set(
+                jnp.arange(r_total, dtype=jnp.int32)
+            )
+            return contrib_stable[inv].reshape(-1)
+
+        def local_round(f, h, obox, t_d, ops_d, pos, operands, my_start,
+                        visits):
             """One frontier round on this device's [B_loc, S] rows.
 
             ``obox`` is the device's full-length [R*S] outbox.
             """
+            w, src_slot, dst_bucket, dst_slot, wgt = operands[:5]
             fw = jnp.abs(f) * w
             sel = fw > t_d  # [B_loc, S]
             any_sel = jnp.any(sel)
             sent = jnp.where(sel, f, jnp.zeros_like(f))
             h = h + sent
             f = f - sent
-            row_idx = jnp.arange(f.shape[0])[:, None]
-            msg = sent[row_idx, src_slot] * wgt  # [B_loc, E]
-            flat_dst = pos[dst_bucket] * s + dst_slot  # [B_loc, E]
-            contrib = jax.ops.segment_sum(
-                msg.reshape(-1), flat_dst.reshape(-1),
-                num_segments=r_total * s,
-            )
+            if use_bsr:
+                tiles, tile_dst = operands[5], operands[6]
+                contrib = tile_push(tiles, tile_dst, sent, pos, visits)
+            else:
+                row_idx = jnp.arange(f.shape[0])[:, None]
+                msg = sent[row_idx, src_slot] * wgt  # [B_loc, E]
+                flat_dst = pos[dst_bucket] * s + dst_slot  # [B_loc, E]
+                contrib = jax.ops.segment_sum(
+                    msg.reshape(-1), flat_dst.reshape(-1),
+                    num_segments=r_total * s,
+                )
             mine = jax.lax.dynamic_slice(
                 contrib, (my_start,), (b_loc * s,)
             ).reshape(f.shape)
@@ -306,28 +467,43 @@ class DistributedEngine:
             )
             obox = obox + contrib
             t_d = jnp.where(any_sel, t_d, t_d / cfg.gamma)
-            active_edges = sel[row_idx, src_slot] & (wgt != 0)
-            ops_d = ops_d + jnp.sum(active_edges).astype(jnp.int32)
+            if use_bsr:
+                # same §2.3 count without the per-edge gather: every slot's
+                # real edges all fire when the slot is selected
+                slot_deg = operands[7]
+                ops_d = ops_d + jnp.sum(
+                    jnp.where(sel, slot_deg, 0)).astype(jnp.int32)
+            else:
+                row_idx = jnp.arange(f.shape[0])[:, None]
+                active_edges = sel[row_idx, src_slot] & (wgt != 0)
+                ops_d = ops_d + jnp.sum(active_edges).astype(jnp.int32)
             return f, h, obox, t_d, ops_d
 
-        def chunk(f, h, outbox, t, pos, ops, rounds, w, src_slot,
-                  dst_bucket, dst_slot, wgt):
+        def chunk(f, h, outbox, t, pos, ops, rounds, *operands):
             """shard_map body.  Per-device shards:
 
             f, h, w, src_slot, ...: [B_loc, S] / [B_loc, E]
             outbox: [1, R*S]   t, ops: [1]   pos: [R] replicated
+            operands: w, src_slot, dst_bucket, dst_slot, wgt
+            [, tiles [B_loc, T, S, S], tile_dst [B_loc, T],
+             slot_out_deg [B_loc, S] when bsr]
             """
             idx = jax.lax.axis_index(axis)
             my_start = idx * b_loc * s
             obox = outbox[0]
             t_d = t[0]
             ops_d = ops[0]
+            # visit tables depend only on tile_dst: compute once per chunk,
+            # not once per round (argsort inside the while_loop body would
+            # not be hoisted by XLA)
+            visits = (_tile_visit_order(operands[6], r_total)
+                      if use_bsr and pallas_path else None)
 
             def body(carry):
                 f, h, obox, t_d, ops_d, i, fire = carry
                 f, h, obox, t_d, ops_d = local_round(
-                    f, h, obox, t_d, ops_d, pos, w, src_slot, dst_bucket,
-                    dst_slot, wgt, my_start)
+                    f, h, obox, t_d, ops_d, pos, operands, my_start,
+                    visits)
                 r_k = jnp.sum(jnp.abs(f))
                 s_k = jnp.sum(jnp.abs(obox))
                 fire_local = (s_k > r_k / 2.0).astype(jnp.int32)
@@ -367,25 +543,24 @@ class DistributedEngine:
             return (f, h, obox[None], t_new[None], pos, ops_d[None],
                     rounds + i)
 
+        n_operands = 8 if use_bsr else 5
         pr, pp = P(axis), P()
         mapped = shard_map(
             chunk,
             mesh=self.mesh,
-            in_specs=(pr, pr, pr, pr, pp, pr, pp, pr, pr, pr, pr, pr),
+            in_specs=(pr, pr, pr, pr, pp, pr, pp) + (pr,) * n_operands,
             out_specs=(pr, pr, pr, pr, pp, pr, pp),
             check_vma=False,
         )
 
         @jax.jit
-        def run_chunk(state: EngineState, w, src_slot, dst_bucket, dst_slot,
-                      wgt):
+        def run_chunk(state: EngineState, *operands):
             f, h, outbox, t, pos, ops, rounds = (
                 state.f, state.h, state.outbox, state.t,
                 state.pos_of_bucket, state.ops, state.rounds)
             for _ in range(cfg.chunk_rounds):
                 f, h, outbox, t, pos, ops, rounds = mapped(
-                    f, h, outbox, t, pos, ops, rounds, w, src_slot,
-                    dst_bucket, dst_slot, wgt)
+                    f, h, outbox, t, pos, ops, rounds, *operands)
             new = EngineState(f=f, h=h, outbox=outbox, t=t,
                               pos_of_bucket=pos, ops=ops, rounds=rounds)
             stats = {
@@ -401,26 +576,22 @@ class DistributedEngine:
     # in-graph bucket repartition (dynamic strategy / elastic scaling)
     # ------------------------------------------------------------------ #
     def _build_repartition(self):
-        shardings = None
-
         @jax.jit
-        def repart(state: EngineState, row_perm, new_pos, w, src_slot,
-                   dst_bucket, dst_slot, wgt):
+        def repart(state: EngineState, row_perm, new_pos, operands):
             take = lambda x: jnp.take(x, row_perm, axis=0)
             new_state = EngineState(
                 f=take(state.f), h=take(state.h), outbox=state.outbox,
                 t=state.t, pos_of_bucket=new_pos, ops=state.ops,
                 rounds=state.rounds)
-            return (new_state, take(w), take(src_slot), take(dst_bucket),
-                    take(dst_slot), take(wgt))
+            return new_state, tuple(take(x) for x in operands)
 
-        def run(state, row_perm, new_pos, w, src_slot, dst_bucket, dst_slot,
-                wgt):
-            out = repart(state, row_perm, new_pos, w, src_slot, dst_bucket,
-                         dst_slot, wgt)
+        def run(state, row_perm, new_pos, operands):
+            new_state, arrs = repart(state, row_perm, new_pos,
+                                     tuple(operands))
             # keep row-sharded layout after the gather
-            new_state, *arrs = out
-            arrs = [jax.device_put(x, self.row_sharding) for x in arrs]
+            arrs = tuple(
+                jax.device_put(x, self.row_sharding) for x in arrs
+            )
             new_state = EngineState(
                 f=jax.device_put(new_state.f, self.row_sharding),
                 h=jax.device_put(new_state.h, self.row_sharding),
@@ -430,7 +601,7 @@ class DistributedEngine:
                 ops=new_state.ops,
                 rounds=new_state.rounds,
             )
-            return (new_state, *arrs)
+            return new_state, arrs
 
         return run
 
@@ -448,9 +619,7 @@ class DistributedEngine:
         resid = float("inf")
         chunk_i = -1
         for chunk_i in range(cfg.max_chunks):
-            ex.state, stats = self._chunk(ex.state, ex.w, ex.src_slot,
-                                          ex.dst_bucket, ex.dst_slot,
-                                          ex.wgt)
+            ex.state, stats = self._chunk(ex.state, *ex.chunk_operands())
             r = np.asarray(stats["r"])
             s_ = np.asarray(stats["s"])
             resid = float(np.asarray(stats["residual"])) + float(s_.sum())

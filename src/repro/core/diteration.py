@@ -141,14 +141,18 @@ def frontier_step(
     dst: jnp.ndarray,
     wgt: jnp.ndarray,
     weights: jnp.ndarray,
+    dangling: jnp.ndarray,
     n: int,
     gamma: float = GAMMA,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """One frontier round: diffuse every node with |F_i| w_i > T simultaneously.
 
-    Returns (f, h, t, ops) — ``ops`` counts edge pushes this round (0 edge
-    pushes -> threshold decays by gamma, matching the sweep semantics).
-    All shapes static: (src, dst, wgt) is the fixed edge list.
+    Returns (f, h, t, ops) — ``ops`` charges one op per edge push plus one op
+    per *dangling* selected node (absorb-and-charge, matching
+    :func:`solve_sequential`'s §2.3 accounting exactly: a diffused node costs
+    ``max(out_degree, 1)``).  Zero selected nodes -> threshold decays by
+    gamma, matching the sweep semantics.  All shapes static: (src, dst, wgt)
+    is the fixed edge list; ``dangling`` is the [N] out-degree-zero mask.
     """
     sel = (jnp.abs(f) * weights) > t_k  # [N] frontier mask
     sent = jnp.where(sel, f, 0.0)
@@ -159,9 +163,9 @@ def frontier_step(
     f = f + delta
     edge_active = sel[src]
     ops = jnp.sum(edge_active.astype(jnp.int32))
+    ops = ops + jnp.sum((sel & dangling).astype(jnp.int32))
     any_sel = jnp.any(sel)
     t_new = jnp.where(any_sel, t_k, t_k / gamma)
-    ops = ops + jnp.where(any_sel, jnp.sum(sel) - jnp.sum(edge_active), 0)
     return f, h, t_new, ops
 
 
@@ -173,18 +177,43 @@ def solve_frontier_jnp(
     weights: Optional[np.ndarray] = None,
     gamma: float = GAMMA,
     max_rounds: int = 1_000_000,
+    backend: str = "segment_sum",
+    bs: int = 128,
+    interpret: bool = False,
 ) -> DiterationResult:
-    """Frontier-batched D-iteration under ``lax.while_loop`` (f64 on CPU)."""
+    """Frontier-batched D-iteration under ``lax.while_loop``.
+
+    ``backend`` selects the diffusion hot path (DESIGN.md §3 "kernel path"):
+
+    * ``"segment_sum"`` — per-edge gather → multiply → ``segment_sum`` over
+      the full edge list every round.  O(L) work per round regardless of the
+      frontier; the right backend for tiny N and for CPU.
+    * ``"pallas"`` — the fused BSR frontier round
+      (:func:`repro.kernels.diffusion.frontier_round_bsr`): P is pre-tiled
+      into ``bs``-sized dense blocks once, then every round runs threshold
+      masking + tile matmuls + the per-row residual reduction inside one
+      kernel sweep, skipping block columns with no fluid above the
+      threshold.  Off-TPU it runs the jnp block oracle unless
+      ``interpret=True`` forces the real kernel through the Pallas
+      interpreter (tests).
+    """
     if weights is None:
         weights = default_weights(g)
+    tol = target_error * eps
+    if backend == "pallas":
+        return _solve_frontier_bsr(
+            g, b, tol, weights, gamma, max_rounds, bs, interpret
+        )
+    if backend != "segment_sum":
+        raise ValueError(f"unknown frontier backend {backend!r}")
     src, dst, wgt = g.edge_list()
     src = jnp.asarray(src, dtype=jnp.int32)
     dst = jnp.asarray(dst, dtype=jnp.int32)
     wgt = jnp.asarray(wgt)
     wts = jnp.asarray(weights)
+    dang = jnp.asarray(g.dangling_mask())
     f0 = jnp.asarray(b)
     h0 = jnp.zeros_like(f0)
-    tol = target_error * eps
     t0 = jnp.abs(f0 * wts).max() * 2.0
     n = g.n
 
@@ -194,7 +223,9 @@ def solve_frontier_jnp(
 
     def body(state):
         f, h, t, ops, rounds = state
-        f, h, t, dops = frontier_step(f, h, t, src, dst, wgt, wts, n, gamma)
+        f, h, t, dops = frontier_step(
+            f, h, t, src, dst, wgt, wts, dang, n, gamma
+        )
         return f, h, t, ops + dops, rounds + 1
 
     f, h, t, ops, rounds = jax.lax.while_loop(
@@ -203,6 +234,70 @@ def solve_frontier_jnp(
     return DiterationResult(
         x=np.asarray(h),
         residual=float(jnp.abs(f).sum()),
+        n_ops=int(ops),
+        n_diffusions=-1,
+        n_sweeps=int(rounds),
+        cost_iterations=float(ops) / max(g.n_edges, 1),
+    )
+
+
+def _solve_frontier_bsr(
+    g: CSRGraph,
+    b: np.ndarray,
+    tol: float,
+    weights: np.ndarray,
+    gamma: float,
+    max_rounds: int,
+    bs: int,
+    interpret: bool,
+) -> DiterationResult:
+    """BSR-kernel frontier solve: pre-tile P once, fused rounds after."""
+    from repro.kernels.diffusion import frontier_round_bsr, prepare_bsr
+
+    m = prepare_bsr(g.indptr, g.indices, g.weights, g.n, bs=bs)
+    n_pad = m.n_row_blocks * bs
+    f0 = jnp.zeros(n_pad, dtype=m.blocks.dtype).at[: g.n].set(
+        jnp.asarray(b, dtype=m.blocks.dtype)
+    )
+    w = jnp.zeros(n_pad, dtype=m.blocks.dtype).at[: g.n].set(
+        jnp.asarray(weights, dtype=m.blocks.dtype)
+    )  # padding slots keep w = 0 and are never selected
+    out_deg = jnp.zeros(n_pad, dtype=jnp.int32).at[: g.n].set(
+        jnp.asarray(g.out_degree(), dtype=jnp.int32)
+    )
+    dang = jnp.zeros(n_pad, dtype=bool).at[: g.n].set(
+        jnp.asarray(g.dangling_mask())
+    )
+    h0 = jnp.zeros_like(f0)
+    t0 = jnp.abs(f0 * w).max() * 2.0
+    op_backend = "pallas" if interpret else None  # None = auto
+
+    def cond(state):
+        f, res, h, t, ops, rounds = state
+        return (res > tol) & (rounds < max_rounds)
+
+    def body(state):
+        f, _res, h, t, ops, rounds = state
+        f_new, sent, res = frontier_round_bsr(
+            m, f, w, t, backend=op_backend, interpret=interpret or None
+        )
+        # the op's threshold predicate is authoritative (the pallas backend
+        # folds t into the weights); sel follows from the sent fluid
+        sel = sent != 0
+        dops = jnp.sum(jnp.where(sel, out_deg, 0))
+        dops = dops + jnp.sum((sel & dang).astype(jnp.int32))
+        any_sel = jnp.any(sel)
+        t_new = jnp.where(any_sel, t, t / gamma)
+        return f_new, res, h + sent, t_new, ops + dops, rounds + 1
+
+    f, res, h, t, ops, rounds = jax.lax.while_loop(
+        cond, body,
+        (f0, jnp.abs(f0).sum(), h0, t0,
+         jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32)),
+    )
+    return DiterationResult(
+        x=np.asarray(h[: g.n], dtype=np.float64),
+        residual=float(res),
         n_ops=int(ops),
         n_diffusions=-1,
         n_sweeps=int(rounds),

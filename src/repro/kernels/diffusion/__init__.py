@@ -1,3 +1,17 @@
-from .ops import BsrMatrix, bsr_spmm, prepare_bsr  # noqa: F401
-from .ref import bsr_spmm_ref, csr_to_bsr, dense_to_bsr  # noqa: F401
-from .kernel import bsr_spmm_pallas  # noqa: F401
+from .ops import (  # noqa: F401
+    BsrMatrix,
+    bsr_spmm,
+    frontier_round_bsr,
+    prepare_bsr,
+)
+from .ref import (  # noqa: F401
+    bsr_spmm_ref,
+    csr_to_bsr,
+    dense_to_bsr,
+    frontier_round_ref,
+)
+from .kernel import (  # noqa: F401
+    bsr_gather_spmm_pallas,
+    bsr_spmm_pallas,
+    frontier_round_bsr_pallas,
+)

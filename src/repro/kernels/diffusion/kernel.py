@@ -28,7 +28,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["bsr_spmm_pallas"]
+__all__ = [
+    "bsr_spmm_pallas",
+    "bsr_gather_spmm_pallas",
+    "frontier_round_bsr_pallas",
+]
 
 
 def _kernel(block_row_ref, block_col_ref, blocks_ref, x_ref, o_ref):
@@ -90,3 +94,172 @@ def bsr_spmm_pallas(
     # output blocks never visited keep uninitialised garbage; mask them in
     # ops.py via the row-occupancy map (cheap [n_row_blocks] bool).
     return fn(block_row, block_col, blocks, x)
+
+
+# --------------------------------------------------------------------------- #
+# gather-indirection SpMM: tiles stay in a row-owned layout (the distributed
+# engine permutes them with bucket moves); a per-round visit order — sorted by
+# destination block — arrives through scalar prefetch, so the same revisiting-
+# output accumulation works without ever materialising a gathered/sorted copy
+# of the tile array in HBM.
+# --------------------------------------------------------------------------- #
+def _gather_kernel(visit_block_ref, visit_row_ref, visit_col_ref,
+                   blocks_ref, x_ref, o_ref):
+    """Step i: o[visit_row[i]] += blocks[visit_block[i]] @ x[visit_col[i]]."""
+    i = pl.program_id(0)
+    is_first = i == 0
+    new_row = visit_row_ref[i] != visit_row_ref[jnp.maximum(i - 1, 0)]
+
+    @pl.when(jnp.logical_or(is_first, new_row))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        blocks_ref[0], x_ref[0], preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_row_blocks", "interpret", "bs")
+)
+def bsr_gather_spmm_pallas(
+    blocks: jax.Array,  # [n_tiles, bs, bs] row-owned tile pool (any order)
+    visit_block: jax.Array,  # [V] int32 index into ``blocks``
+    visit_row: jax.Array,  # [V] int32 destination block row, sorted ascending
+    visit_col: jax.Array,  # [V] int32 source block col of each visit
+    x: jax.Array,  # [n_col_blocks, bs, C]
+    n_row_blocks: int,
+    *,
+    bs: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """delta = sum_i blocks[visit_block[i]] @ x[visit_col[i]] into visit_row[i].
+
+    The visit arrays may be computed in-graph (e.g. ``argsort`` of the
+    destination ids each round) — scalar prefetch takes traced values.
+    Rows never visited keep uninitialised garbage; callers mask them with the
+    visit-derived row-occupancy map.
+    """
+    v = visit_block.shape[0]
+    c = x.shape[-1]
+    out_shape = jax.ShapeDtypeStruct((n_row_blocks, bs, c), x.dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,  # visit_block, visit_row, visit_col
+        grid=(v,),
+        in_specs=[
+            pl.BlockSpec((1, bs, bs), lambda i, vb, vr, vc: (vb[i], 0, 0)),
+            pl.BlockSpec((1, bs, c), lambda i, vb, vr, vc: (vc[i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, c), lambda i, vb, vr, vc: (vr[i], 0, 0)),
+    )
+    fn = pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    return fn(visit_block, visit_row, visit_col, blocks, x)
+
+
+# --------------------------------------------------------------------------- #
+# fused frontier round: threshold masking of the sent fluid, the block-column
+# occupancy skip, and the per-block-row residual reduction all live inside the
+# kernel, so one grid sweep turns F into F' = F - sent + P @ sent and emits the
+# per-row |F'|_1 partial sums the solver's stopping rule needs.
+# --------------------------------------------------------------------------- #
+def _frontier_kernel(block_row_ref, block_col_ref, col_active_ref,
+                     blocks_ref, f_col_ref, wt_col_ref, f_row_ref, wt_row_ref,
+                     o_ref, l1_ref, *, n_blocks: int):
+    """Grid step i (blocks sorted by block_row):
+
+    * first visit of a row: seed o with the row's kept fluid
+      ``where(|f| * wt > 1, 0, f)`` (the un-diffused residual),
+    * active column: accumulate ``blocks[i] @ sent(col)`` where
+      ``sent = where(|f| * wt > 1, f, 0)`` is recomputed in-register —
+      ``wt = w / T`` folds the threshold into the weights so no scalar
+      operand is needed,
+    * inactive column (no fluid above threshold anywhere in the col block —
+      most tiles late in convergence): the matmul is skipped entirely,
+    * last visit of a row: reduce ``|o|_1`` into the per-row residual output.
+    """
+    i = pl.program_id(0)
+    row = block_row_ref[i]
+    prev_row = block_row_ref[jnp.maximum(i - 1, 0)]
+    next_row = block_row_ref[jnp.minimum(i + 1, n_blocks - 1)]
+    first = jnp.logical_or(i == 0, row != prev_row)
+    last = jnp.logical_or(i == n_blocks - 1, next_row != row)
+
+    @pl.when(first)
+    def _seed_kept_fluid():
+        fr = f_row_ref[0]
+        sel = jnp.abs(fr) * wt_row_ref[0] > 1.0
+        o_ref[0] = jnp.where(sel, jnp.zeros_like(fr), fr)
+
+    @pl.when(col_active_ref[block_col_ref[i]] != 0)
+    def _push():
+        fc = f_col_ref[0]
+        sent = jnp.where(jnp.abs(fc) * wt_col_ref[0] > 1.0, fc,
+                         jnp.zeros_like(fc))
+        o_ref[0] += jnp.dot(
+            blocks_ref[0], sent, preferred_element_type=o_ref.dtype
+        )
+
+    @pl.when(last)
+    def _row_residual():
+        l1_ref[0, 0] = jnp.sum(jnp.abs(o_ref[0]))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_row_blocks", "interpret", "bs")
+)
+def frontier_round_bsr_pallas(
+    blocks: jax.Array,  # [n_blocks, bs, bs] dense tiles of P, row-sorted
+    block_row: jax.Array,  # [n_blocks] int32, sorted ascending
+    block_col: jax.Array,  # [n_blocks] int32
+    col_active: jax.Array,  # [n_col_blocks] int32 occupancy of the frontier
+    f: jax.Array,  # [n_col_blocks, bs, C] residual fluid, tiled
+    wt: jax.Array,  # [n_col_blocks, bs, 1] selection weights / threshold
+    n_row_blocks: int,
+    *,
+    bs: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """One fused frontier round over the BSR structure.
+
+    Returns ``(f_new, row_l1)`` with ``f_new: [n_row_blocks, bs, C]`` holding
+    ``F - sent + P @ sent`` for every *occupied* block row and
+    ``row_l1: [n_row_blocks, 1]`` its per-row |·|_1.  Rows that own no block
+    are left uninitialised (garbage) in BOTH outputs by design — the ops.py
+    wrapper substitutes the kept fluid ``F - sent`` there via the
+    row-occupancy map.  The square tiling (n_col_blocks == n_row_blocks)
+    means the f/wt operands serve double duty: indexed by block_col for the
+    sent gather and by block_row for the kept-fluid seeding.
+    """
+    n_blocks = blocks.shape[0]
+    c = f.shape[-1]
+    out_shape = (
+        jax.ShapeDtypeStruct((n_row_blocks, bs, c), f.dtype),
+        jax.ShapeDtypeStruct((n_row_blocks, 1), f.dtype),
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,  # block_row, block_col, col_active
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((1, bs, bs), lambda i, br, bc, ca: (i, 0, 0)),
+            pl.BlockSpec((1, bs, c), lambda i, br, bc, ca: (bc[i], 0, 0)),
+            pl.BlockSpec((1, bs, 1), lambda i, br, bc, ca: (bc[i], 0, 0)),
+            pl.BlockSpec((1, bs, c), lambda i, br, bc, ca: (br[i], 0, 0)),
+            pl.BlockSpec((1, bs, 1), lambda i, br, bc, ca: (br[i], 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, bs, c), lambda i, br, bc, ca: (br[i], 0, 0)),
+            pl.BlockSpec((1, 1), lambda i, br, bc, ca: (br[i], 0)),
+        ),
+    )
+    fn = pl.pallas_call(
+        functools.partial(_frontier_kernel, n_blocks=n_blocks),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    return fn(block_row, block_col, col_active, blocks, f, wt, f, wt)

@@ -13,10 +13,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .kernel import bsr_spmm_pallas
+from .kernel import bsr_spmm_pallas, frontier_round_bsr_pallas
 from .ref import bsr_spmm_ref, csr_to_bsr
 
-__all__ = ["bsr_spmm", "prepare_bsr", "BsrMatrix"]
+__all__ = ["bsr_spmm", "frontier_round_bsr", "prepare_bsr", "BsrMatrix"]
 
 
 def _on_tpu() -> bool:
@@ -81,3 +81,76 @@ def bsr_spmm(
         )
     out = out.reshape(-1, c)
     return out[:, 0] if squeeze else out
+
+
+def frontier_round_bsr(
+    m: BsrMatrix,
+    f: jax.Array,  # [n] or [n, C] residual fluid, n = n_row_blocks * bs
+    w: jax.Array,  # [n] selection weights (0 = padding / inert slot)
+    t: jax.Array,  # scalar threshold (traced value is fine)
+    *,
+    backend: str | None = None,  # None/"auto" | "pallas" | "block"
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One fused frontier round ``F' = F - sent + P @ sent`` over BSR ``m``.
+
+    ``sent = where(|F| * w > t, F, 0)`` — every node above the threshold
+    diffuses simultaneously (the frontier-batched D-iteration schedule).
+    Returns ``(f_new, sent, res)`` with ``res = |f_new|_1`` (scalar).
+
+    Backends:
+
+    * ``pallas`` — the fused TPU kernel: masking, the block-column occupancy
+      skip, and the per-row residual reduction run inside one grid sweep;
+      block rows with no tiles fall back to the kept fluid via the
+      row-occupancy epilogue (the kernel leaves them uninitialised).
+    * ``block`` — jnp oracle (einsum over tiles + segment-sum), the fast
+      path on CPU where interpret-mode Pallas is emulation-speed.
+    * ``auto``/None — pallas on TPU, block elsewhere.
+    """
+    squeeze = f.ndim == 1
+    f2 = f[:, None] if squeeze else f
+    c = f2.shape[1]
+    if backend in (None, "auto"):
+        backend = "pallas" if _on_tpu() else "block"
+    if backend == "pallas":
+        # the kernel folds the threshold into the weights (wt = w/t, select
+        # when |f|*wt > 1); the wrapper MUST use the identical rounded
+        # predicate or a boundary node could be "sent" by one side and
+        # "kept" by the other, double-counting or losing its fluid.
+        wt_flat = (w / t).astype(f2.dtype)
+        sel = jnp.abs(f2) * wt_flat[:, None] > 1.0
+    else:
+        sel = jnp.abs(f2) * w[:, None] > t
+    sent = jnp.where(sel, f2, jnp.zeros_like(f2))
+    if backend == "block":
+        xt = sent.reshape(-1, m.bs, c)
+        delta = bsr_spmm_ref(
+            m.blocks, m.block_row, m.block_col, xt, m.n_row_blocks
+        )
+        f_new = (f2 - sent) + delta.reshape(f2.shape)
+        res = jnp.sum(jnp.abs(f_new))
+    elif backend == "pallas":
+        if interpret is None:
+            interpret = not _on_tpu()
+        ft = f2.reshape(-1, m.bs, c)
+        wt = wt_flat.reshape(-1, m.bs, 1)
+        col_active = jnp.any(
+            sel.reshape(-1, m.bs * c), axis=1
+        ).astype(jnp.int32)
+        out, row_l1 = frontier_round_bsr_pallas(
+            m.blocks.astype(f2.dtype), m.block_row, m.block_col, col_active,
+            ft, wt, m.n_row_blocks, bs=m.bs, interpret=interpret,
+        )
+        # rows owning no block never get their output tile initialised:
+        # substitute the kept fluid (F - sent) and its |·|_1 there.
+        keep = (f2 - sent).reshape(-1, m.bs, c)
+        occ = m.row_occupied
+        f_new = jnp.where(occ[:, None, None], out, keep).reshape(f2.shape)
+        keep_l1 = jnp.sum(jnp.abs(keep), axis=(1, 2))
+        res = jnp.sum(jnp.where(occ, row_l1[:, 0], keep_l1))
+    else:
+        raise ValueError(f"unknown frontier backend {backend!r}")
+    if squeeze:
+        return f_new[:, 0], sent[:, 0], res
+    return f_new, sent, res

@@ -7,7 +7,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["bsr_spmm_ref", "csr_to_bsr", "dense_to_bsr"]
+__all__ = [
+    "bsr_spmm_ref",
+    "frontier_round_ref",
+    "csr_to_bsr",
+    "dense_to_bsr",
+]
 
 
 @functools.partial(jax.jit, static_argnames=("n_row_blocks",))
@@ -23,6 +28,35 @@ def bsr_spmm_ref(
         "bij,bjc->bic", blocks, x[block_col]
     )  # [n_blocks, bs, C]
     return jax.ops.segment_sum(partial, block_row, num_segments=n_row_blocks)
+
+
+def frontier_round_ref(
+    blocks: np.ndarray,  # [n_blocks, bs, bs]
+    block_row: np.ndarray,  # [n_blocks]
+    block_col: np.ndarray,  # [n_blocks]
+    f: np.ndarray,  # [n] or [n, C] residual fluid (n = n_row_blocks * bs)
+    w: np.ndarray,  # [n] selection weights
+    t: float,  # threshold
+):
+    """Pure-numpy twin of the fused frontier round (oracle for the kernel).
+
+    Returns ``(f_new, sent, res)`` where ``f_new = F - sent + P @ sent``,
+    ``sent = where(|F| * w > t, F, 0)`` and ``res = |f_new|_1``.
+    """
+    squeeze = f.ndim == 1
+    f2 = f[:, None] if squeeze else f
+    bs = blocks.shape[1]
+    sel = np.abs(f2) * w[:, None] > t
+    sent = np.where(sel, f2, 0.0)
+    xt = sent.reshape(-1, bs, f2.shape[1])
+    partial = np.einsum("bij,bjc->bic", blocks, xt[block_col])
+    delta = np.zeros_like(xt)
+    np.add.at(delta, block_row, partial)
+    f_new = (f2 - sent) + delta.reshape(f2.shape)
+    res = float(np.abs(f_new).sum())
+    if squeeze:
+        return f_new[:, 0], sent[:, 0], res
+    return f_new, sent, res
 
 
 def dense_to_bsr(p: np.ndarray, bs: int):

@@ -27,6 +27,59 @@ def test_engine_k1_matches_dense(small_pagerank):
     np.testing.assert_allclose(xs, x, atol=1e-5)
 
 
+def test_engine_k1_bsr_matches_dense(small_pagerank):
+    """BSR tile backend: same fixed point through the dense-tile push."""
+    p, b, x = small_pagerank
+    cfg = EngineConfig(k=1, target_error=1e-6, eps=0.15,
+                       buckets_per_dev=8, headroom=2,
+                       diffusion_backend="bsr")
+    arrs = build_engine_arrays(p, b, cfg)
+    assert arrs.tiles is not None and arrs.tile_dst is not None
+    eng = DistributedEngine(arrs, cfg)
+    xs, info = eng.solve()
+    assert info["converged"]
+    np.testing.assert_allclose(xs, x, atol=1e-5)
+
+
+def test_engine_k1_bsr_pallas_interpret():
+    """The Pallas gather kernel inside the jitted chunk (interpret mode)."""
+    g = power_law_graph(200, seed=3)
+    p, b = pagerank_system(g)
+    x = np.linalg.solve(np.eye(g.n) - p.to_dense(), b)
+    cfg = EngineConfig(k=1, target_error=1e-6, eps=0.15,
+                       buckets_per_dev=6, headroom=2,
+                       diffusion_backend="bsr", pallas_interpret=True,
+                       max_inner=4, chunk_rounds=2)
+    arrs = build_engine_arrays(p, b, cfg)
+    eng = DistributedEngine(arrs, cfg)
+    xs, info = eng.solve()
+    assert info["converged"]
+    np.testing.assert_allclose(xs, x, atol=1e-5)
+
+
+def test_engine_tile_push_pallas_parity(small_pagerank):
+    """einsum and Pallas-gather implementations of the tile push agree."""
+    import jax.numpy as jnp
+
+    from repro.core.distributed import _tile_push_stable
+
+    p, b, _ = small_pagerank
+    cfg = EngineConfig(k=1, target_error=1e-6, eps=0.15,
+                       buckets_per_dev=8, headroom=2,
+                       diffusion_backend="bsr")
+    a = build_engine_arrays(p, b, cfg)
+    rng = np.random.default_rng(1)
+    sent = rng.standard_normal((a.n_rows, a.bucket_size)).astype(np.float32)
+    o1 = _tile_push_stable(
+        jnp.asarray(a.tiles, jnp.float32), jnp.asarray(a.tile_dst),
+        jnp.asarray(sent), a.n_rows, use_pallas=False)
+    o2 = _tile_push_stable(
+        jnp.asarray(a.tiles, jnp.float32), jnp.asarray(a.tile_dst),
+        jnp.asarray(sent), a.n_rows, use_pallas=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-4, atol=2e-4)
+
+
 def test_engine_arrays_roundtrip(small_pagerank):
     """Every node and edge lands exactly once in the bucketed layout."""
     p, b, _ = small_pagerank
@@ -123,3 +176,91 @@ def test_engine_multidevice_subprocess():
     )
     assert r.returncode == 0, r.stderr[-3000:]
     assert "MULTI_OK" in r.stdout
+
+
+REPLAY_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, {src!r})
+    import numpy as np
+    from repro.core import pagerank_system, power_law_graph
+    from repro.core.distributed import (
+        DistributedEngine, EngineConfig, build_engine_arrays)
+    from repro.balance import BucketMoveExecutor, MovePlan
+
+    g = power_law_graph(1600, seed=7)
+    order = np.argsort(-g.out_degree(), kind="stable")
+    g = g.reorder(order)
+    p, b = pagerank_system(g)
+    P = np.zeros((g.n, g.n))
+    for i in range(g.n):
+        js, ws = p.out_neighbors(i)
+        P[js, i] += ws
+    x_ref = np.linalg.solve(np.eye(g.n) - P, b)
+
+    # ---- replay: both diffusion backends must make the SAME MovePlan
+    # decisions and converge to the same residual -----------------------
+    out = {{}}
+    for be in ("segment_sum", "bsr"):
+        cfg = EngineConfig(k=8, target_error=1e-8, eps=0.15,
+                           buckets_per_dev=40, headroom=8, dynamic=True,
+                           eta=0.9, diffusion_backend=be)
+        arrs = build_engine_arrays(p, b, cfg)
+        eng = DistributedEngine(arrs, cfg)
+        xs, info = eng.solve()
+        assert info["converged"], (be, info["residual"])
+        err = np.abs(xs - x_ref).max()
+        assert err < 1e-5, (be, err)
+        out[be] = (info["move_log"], info["residual"], xs)
+    seg, bsr = out["segment_sum"], out["bsr"]
+    assert len(seg[0]) > 0, "replay exercised no bucket moves"
+    assert seg[0] == bsr[0], ("MovePlan decisions diverged",
+                              seg[0], bsr[0])
+    assert abs(seg[1] - bsr[1]) <= 1e-5, (seg[1], bsr[1])
+    assert np.abs(seg[2] - bsr[2]).max() < 1e-5
+
+    # ---- forced mid-solve move under the bsr backend: the tile groups
+    # must travel with their bucket rows ---------------------------------
+    cfg = EngineConfig(k=4, target_error=1e-6, eps=0.15,
+                       buckets_per_dev=12, headroom=4,
+                       diffusion_backend="bsr")
+    arrs = build_engine_arrays(p, b, cfg)
+    eng = DistributedEngine(arrs, cfg)
+    ex = BucketMoveExecutor(eng, eng.init_state())
+    ex.state, _ = eng._chunk(ex.state, *ex.chunk_operands())
+    moved = ex.apply(MovePlan(src=0, dst=3, units=2, kind="bucket"))
+    assert moved == 2, moved
+    tol = cfg.target_error * cfg.eps
+    for _ in range(cfg.max_chunks):
+        ex.state, stats = eng._chunk(ex.state, *ex.chunk_operands())
+        resid = float(np.asarray(stats["residual"])) + float(
+            np.asarray(stats["s"]).sum())
+        if resid <= tol:
+            break
+    assert resid <= tol, resid
+    h = np.asarray(ex.state.h).reshape(arrs.n_rows, arrs.bucket_size)
+    x2 = np.zeros(arrs.n)
+    for bid in range(arrs.n_rows):
+        nodes = arrs.node_of_slot[int(arrs.pos_of_bucket[bid])]
+        valid = nodes >= 0
+        if valid.any():
+            x2[nodes[valid]] = h[int(ex.row_of_bucket[bid]), valid]
+    err = np.abs(x2 - x_ref).max()
+    assert err < 1e-5, ("post-move bsr solution wrong", err)
+    print("REPLAY_OK")
+    """
+)
+
+
+def test_engine_backend_replay_subprocess():
+    """Acceptance: identical MovePlans + same residual for either backend."""
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    r = subprocess.run(
+        [sys.executable, "-c", REPLAY_SCRIPT.format(src=src)],
+        capture_output=True, text=True, timeout=600,
+    )
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "REPLAY_OK" in r.stdout

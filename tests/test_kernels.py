@@ -11,9 +11,17 @@ try:
 except ImportError:  # optional dep: property tests skip, fallbacks run
     HAVE_HYPOTHESIS = False
 
-from repro.core import pagerank_system, power_law_graph
+from repro.core import CSRGraph, pagerank_system, power_law_graph
 from repro.kernels.attention import attention_ref, flash_attention
-from repro.kernels.diffusion import bsr_spmm, bsr_spmm_ref, prepare_bsr
+from repro.kernels.diffusion import (
+    BsrMatrix,
+    bsr_gather_spmm_pallas,
+    bsr_spmm,
+    bsr_spmm_ref,
+    frontier_round_bsr,
+    frontier_round_ref,
+    prepare_bsr,
+)
 from repro.kernels.fm import (
     fm_interaction,
     fm_interaction_naive,
@@ -72,6 +80,142 @@ def test_bsr_empty_rows_masked():
     out = np.asarray(bsr_spmm(m, jnp.asarray(x)))
     assert np.all(out[128:] == 0)
     np.testing.assert_allclose(out[:128], p[:128] @ x, rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------- #
+# diffusion / fused frontier round (pallas ≈ block oracle ≈ numpy ref)
+# --------------------------------------------------------------------------- #
+def _check_frontier_round(n, c, seed, t_quantile, bs=64):
+    """Parity of the fused frontier round across all three backends on a
+    random CSR graph, at a threshold hitting ``t_quantile`` of the fluid."""
+    rng = np.random.default_rng(seed)
+    if n == 1:  # single node, no edges (all-dangling degenerate graph)
+        p = CSRGraph(indptr=np.zeros(2, np.int64),
+                     indices=np.zeros(0, np.int32),
+                     weights=np.zeros(0, np.float64), n=1)
+    else:
+        g = power_law_graph(n, seed=seed)
+        p, _ = pagerank_system(g)
+    m = prepare_bsr(p.indptr, p.indices, p.weights, p.n, bs=bs)
+    n_pad = m.n_row_blocks * bs
+    f = np.zeros((n_pad, c), np.float32)
+    f[: p.n] = rng.standard_normal((p.n, c))
+    w = np.zeros(n_pad, np.float32)
+    w[: p.n] = 1.0 / np.maximum(np.diff(p.indptr), 1)
+    fw = (np.abs(f) * w[:, None]).ravel()
+    if t_quantile >= 1.0:
+        t = float(fw.max()) * 2.0 + 1.0  # empty frontier
+    else:
+        t = max(float(np.quantile(fw, t_quantile)), 1e-6)
+    f_in = f[:, 0] if c == 1 else f
+    fr, sr, rr = frontier_round_ref(
+        np.asarray(m.blocks), np.asarray(m.block_row),
+        np.asarray(m.block_col), f_in, w, t)
+    for backend in ("block", "pallas"):
+        fo, so, ro = frontier_round_bsr(
+            m, jnp.asarray(f_in), jnp.asarray(w), jnp.float32(t),
+            backend=backend, interpret=True if backend == "pallas" else None)
+        np.testing.assert_allclose(np.asarray(fo), fr, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(so), sr, rtol=1e-6, atol=1e-6)
+        assert abs(float(ro) - rr) <= 1e-3 * max(rr, 1.0), (backend, ro, rr)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        n=st.integers(2, 300),
+        c=st.sampled_from([1, 3]),
+        seed=st.integers(0, 1000),
+        t_quantile=st.sampled_from([0.0, 0.5, 0.9, 1.0]),
+    )
+    def test_frontier_round_property(n, c, seed, t_quantile):
+        _check_frontier_round(n, c, seed, t_quantile)
+
+
+@pytest.mark.parametrize(
+    "n,c,seed,t_quantile",
+    [
+        (1, 1, 0, 0.0),  # single-node graph
+        (2, 1, 3, 0.5),
+        (150, 1, 1, 0.0),  # full frontier
+        (150, 1, 1, 1.0),  # empty frontier: f must pass through unchanged
+        (300, 3, 7, 0.5),
+        (257, 1, 11, 0.9),  # sparse frontier (occupancy skip exercised)
+    ],
+)
+def test_frontier_round_cases(n, c, seed, t_quantile):
+    """Deterministic fallback for the property test (no hypothesis)."""
+    _check_frontier_round(n, c, seed, t_quantile)
+
+
+def test_frontier_round_interleaved_empty_rows():
+    """Block rows 1 and 3 own no tiles: the kernel leaves their output
+    uninitialised — the epilogue must substitute the kept fluid exactly."""
+    bs = 8
+    rng = np.random.default_rng(5)
+    p = np.zeros((4 * bs, 4 * bs), np.float32)
+    p[:bs, :bs] = rng.random((bs, bs)) * 0.1  # block row 0
+    p[2 * bs : 3 * bs, bs : 2 * bs] = rng.random((bs, bs)) * 0.1  # row 2
+    from repro.kernels.diffusion.ref import dense_to_bsr
+
+    blocks, br, bc = dense_to_bsr(p, bs)
+    m = BsrMatrix(blocks, br, bc, 4, bs)
+    assert not m.row_occupied[1] and not m.row_occupied[3]
+    f = rng.standard_normal(4 * bs).astype(np.float32)
+    w = np.ones(4 * bs, np.float32)
+    t = 0.5
+    fr, sr, rr = frontier_round_ref(blocks, br, bc, f, w, t)
+    for backend in ("block", "pallas"):
+        fo, so, ro = frontier_round_bsr(
+            m, jnp.asarray(f), jnp.asarray(w), jnp.float32(t),
+            backend=backend, interpret=True if backend == "pallas" else None)
+        np.testing.assert_allclose(np.asarray(fo), fr, rtol=2e-5, atol=2e-5)
+        # empty rows keep exactly the un-diffused residual
+        keep = np.where(np.abs(f) * w > t, 0.0, f)
+        np.testing.assert_allclose(np.asarray(fo)[bs : 2 * bs],
+                                   keep[bs : 2 * bs], atol=0)
+
+
+def test_bsr_spmm_interleaved_empty_rows_masked():
+    """bsr_spmm's row-occupancy epilogue zeroes every block row without
+    tiles, also when occupied/empty rows interleave."""
+    bs = 8
+    rng = np.random.default_rng(9)
+    p = np.zeros((4 * bs, 4 * bs), np.float32)
+    p[:bs] = rng.standard_normal((bs, 4 * bs))
+    p[2 * bs : 3 * bs] = rng.standard_normal((bs, 4 * bs))
+    from repro.kernels.diffusion.ref import dense_to_bsr
+
+    blocks, br, bc = dense_to_bsr(p, bs)
+    m = BsrMatrix(blocks, br, bc, 4, bs)
+    x = rng.standard_normal(4 * bs).astype(np.float32)
+    out = np.asarray(bsr_spmm(m, jnp.asarray(x)))
+    assert np.all(out[bs : 2 * bs] == 0) and np.all(out[3 * bs :] == 0)
+    np.testing.assert_allclose(out, p @ x, rtol=2e-4, atol=2e-4)
+
+
+def test_bsr_gather_spmm_shuffled_pool():
+    """The gather kernel consumes tiles from an arbitrarily-ordered pool
+    through the visit indirection (the engine's row-owned layout)."""
+    bs = 16
+    rng = np.random.default_rng(3)
+    n_tiles, nrb = 24, 6
+    pool = rng.standard_normal((n_tiles, bs, bs)).astype(np.float32) * 0.1
+    dst = rng.integers(0, nrb, n_tiles).astype(np.int32)
+    col = rng.integers(0, nrb, n_tiles).astype(np.int32)
+    x = rng.standard_normal((nrb, bs, 2)).astype(np.float32)
+    order = np.argsort(dst, kind="stable").astype(np.int32)
+    out = np.asarray(bsr_gather_spmm_pallas(
+        jnp.asarray(pool), jnp.asarray(order), jnp.asarray(dst[order]),
+        jnp.asarray(col[order]), jnp.asarray(x), nrb, bs=bs,
+        interpret=True))
+    ref = np.zeros((nrb, bs, 2), np.float32)
+    for i in range(n_tiles):
+        ref[dst[i]] += pool[i] @ x[col[i]]
+    occ = np.zeros(nrb, bool)
+    occ[dst] = True
+    np.testing.assert_allclose(out[occ], ref[occ], rtol=2e-4, atol=2e-4)
 
 
 # --------------------------------------------------------------------------- #
