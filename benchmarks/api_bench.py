@@ -1,0 +1,103 @@
+"""Auto-dispatch benchmark: ``method="auto"`` vs each explicit backend.
+
+Runs the :func:`repro.solve` front door on a host-ordered web graph
+(the block-compressible family the BSR tiers exploit — same generator
+as engine_bench) and times every registry backend plus the auto
+dispatcher, so the registry's priority table can be audited against
+measured wall time.  Emits ``BENCH_api.json`` (schema-guarded by
+``python -m benchmarks.run --smoke``).
+
+  PYTHONPATH=src python -m benchmarks.api_bench            # N=2^16
+  PYTHONPATH=src python -m benchmarks.api_bench --smoke    # tiny CI run
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+METHODS = (
+    "auto",
+    "sequential",
+    "frontier:segment_sum",
+    "frontier:pallas",
+    "engine:chunk",
+    "engine:bsr",
+    "simulator",
+)
+
+
+def run_method(problem, method: str, k_sim: int = 8) -> dict:
+    import repro
+
+    opts = repro.SolverOptions(
+        k=k_sim if method == "simulator" else None,
+        record_every=200,
+    )
+    t0 = time.perf_counter()
+    rep = repro.solve(problem, method=method, options=opts)
+    wall = time.perf_counter() - t0
+    return {
+        "method": method,
+        "resolved": rep.method,
+        "n": problem.n,
+        "n_edges": problem.n_edges,
+        "wall_s": round(wall, 3),
+        "n_ops": int(rep.n_ops),
+        "cost_iterations": round(rep.cost_iterations, 3),
+        "residual": float(rep.residual),
+        "converged": bool(rep.converged),
+    }
+
+
+def main(smoke: bool = False, out_path: str = "BENCH_api.json",
+         n: int | None = None) -> dict:
+    import jax
+
+    import repro
+    from repro.core import host_block_graph
+
+    n = n if n is not None else (2**10 if smoke else 2**16)
+    methods = (
+        ("auto", "frontier:segment_sum", "engine:chunk", "simulator")
+        if smoke else METHODS
+    )
+    g = host_block_graph(n, host_size=128, links_per_node=8.0,
+                         intra_frac=0.92, span_hosts=2, seed=1)
+    problem = repro.Problem.pagerank(g, target_error=1.0 / n)
+    print(f"[api bench] N={n} L={g.n_edges} "
+          f"target_error={problem.target_error:.2e} "
+          f"platform={jax.default_backend()}")
+    rows = []
+    for method in methods:
+        try:
+            row = run_method(problem, method)
+        except Exception as e:  # e.g. k/device constraints on this host
+            row = {"method": method, "n": n, "skipped": str(e)}
+        rows.append(row)
+        if "skipped" in row:
+            print(f"  {method:22s} skipped: {row['skipped']}")
+        else:
+            tag = (f" -> {row['resolved']}" if method == "auto" else "")
+            print(f"  {method:22s}{tag:24s} {row['wall_s']:8.2f}s  "
+                  f"cost={row['cost_iterations']:7.2f}  "
+                  f"converged={row['converged']}")
+    payload = {
+        "meta": {
+            "bench": "api_auto_dispatch",
+            "n": n,
+            "graph": "host_block_graph",
+            "target_error": problem.target_error,
+            "platform": jax.default_backend(),
+            "backends_registered": sorted(repro.list_backends()),
+        },
+        "rows": rows,
+    }
+    with open(out_path, "w") as fh:
+        json.dump(payload, fh, indent=1)
+    print(f"[api bench] wrote {out_path} ({len(rows)} rows)")
+    return payload
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv)

@@ -25,6 +25,10 @@ ENGINE_ROW_KEYS = {
     "n", "k", "backend", "n_edges", "bucket_size", "chunk_ms", "rounds",
     "us_per_round", "residual_after",
 }
+API_ROW_KEYS = {
+    "method", "resolved", "n", "n_edges", "wall_s", "n_ops",
+    "cost_iterations", "residual", "converged",
+}
 
 
 def _validate_bench(payload: dict, required: set, name: str) -> None:
@@ -41,7 +45,7 @@ def _validate_bench(payload: dict, required: set, name: str) -> None:
 
 def smoke() -> int:
     """Fast end-to-end bench smoke + BENCH_*.json schema validation."""
-    from benchmarks import engine_bench, kernel_bench
+    from benchmarks import api_bench, engine_bench, kernel_bench
 
     print("[smoke] frontier kernel sweep (tiny)")
     kp = kernel_bench.frontier_sweep(
@@ -51,11 +55,20 @@ def smoke() -> int:
     print("[smoke] engine bench (tiny)")
     ep = engine_bench.main(smoke=True, out_path="BENCH_engine.smoke.json")
     _validate_bench(ep, ENGINE_ROW_KEYS, "engine bench (smoke)")
-    for tmp in ("BENCH_kernels.smoke.json", "BENCH_engine.smoke.json"):
+    print("[smoke] api auto-dispatch bench (tiny)")
+    ap = api_bench.main(smoke=True, out_path="BENCH_api.smoke.json")
+    _validate_bench(ap, API_ROW_KEYS, "api bench (smoke)")
+    auto_rows = [r for r in ap["rows"]
+                 if r.get("method") == "auto" and "skipped" not in r]
+    assert auto_rows and auto_rows[0]["resolved"] != "auto", (
+        "auto dispatch did not resolve to a concrete backend")
+    for tmp in ("BENCH_kernels.smoke.json", "BENCH_engine.smoke.json",
+                "BENCH_api.smoke.json"):
         if os.path.exists(tmp):
             os.remove(tmp)
     for path, keys in (("BENCH_kernels.json", KERNEL_ROW_KEYS),
-                       ("BENCH_engine.json", ENGINE_ROW_KEYS)):
+                       ("BENCH_engine.json", ENGINE_ROW_KEYS),
+                       ("BENCH_api.json", API_ROW_KEYS)):
         if os.path.exists(path):
             with open(path) as fh:
                 _validate_bench(json.load(fh), keys, path)

@@ -1,5 +1,5 @@
 """The paper's technique applied beyond the solver: the dynamic partition
-controller as a load balancer for skewed GNN edge shards (DESIGN.md §4).
+controller as a load balancer for skewed GNN edge shards (DESIGN.md §5).
 
 A power-law graph is bucketised into edge shards; shard costs are wildly
 imbalanced (degree skew).  The slope controller — fed only the observed

@@ -1,61 +1,58 @@
 """Quickstart: solve PageRank with the D-iteration, three ways.
 
-1. Reference sequential solver (paper §2.1 pseudo-code).
-2. Faithful K-PID simulator with the dynamic partition (§2.2–2.5).
-3. Production distributed engine (shard_map; uses however many JAX devices
-   exist — 1 on a plain CPU run).
+The three tiers of the architecture are three ``method=`` strings on
+the same :func:`repro.solve` front door (DESIGN.md §4):
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+1. ``sequential``  — reference solver (paper §2.1 pseudo-code).
+2. ``simulator``   — faithful K-PID simulator with the dynamic
+                     partition (§2.2–2.5).
+3. ``engine:chunk``— production distributed engine (shard_map; uses
+                     however many JAX devices exist — 1 on plain CPU).
+
+Run:  PYTHONPATH=src python examples/quickstart.py [--n 2000]
 """
+import argparse
+
 import numpy as np
 
-from repro.core import (
-    DistributedSimulator,
-    SimulatorConfig,
-    jacobi_solve,
-    pagerank_system,
-    power_law_graph,
-    solve_sequential,
-)
-from repro.core.distributed import (
-    DistributedEngine,
-    EngineConfig,
-    build_engine_arrays,
-)
+import repro
+from repro.core import jacobi_solve, power_law_graph
 
-N = 2000
+ap = argparse.ArgumentParser()
+ap.add_argument("--n", type=int, default=2000)
+args = ap.parse_args()
+
+N = args.n
 print(f"generating power-law graph (alpha=1.5), N={N} ...")
 g = power_law_graph(N, alpha=1.5, seed=0)
-p, b = pagerank_system(g, damping=0.85)
+problem = repro.Problem.pagerank(g, damping=0.85, target_error=1.0 / N)
 print(f"  L = {g.n_edges} links, {int(g.dangling_mask().sum())} dangling")
 
 # --- 1. reference solver ---------------------------------------------------
-res = solve_sequential(p, b, target_error=1.0 / N, eps=0.15)
-print(f"[sequential]  cost = {res.cost_iterations:.2f} matvec-equivalents, "
-      f"|F| = {res.residual:.2e}")
-x_jac, iters = jacobi_solve(p, b, target_error=1.0 / N, eps=0.15)
+ref = repro.solve(problem, method="sequential")
+print(f"[sequential]  cost = {ref.cost_iterations:.2f} matvec-equivalents, "
+      f"|F| = {ref.residual:.2e}")
+x_jac, iters = jacobi_solve(problem.p, problem.b,
+                            target_error=1.0 / N, eps=0.15)
 print(f"[jacobi]      cost = {iters} matvecs  "
-      f"(D-iteration is {iters / res.cost_iterations:.1f}x cheaper)")
+      f"(D-iteration is {iters / ref.cost_iterations:.1f}x cheaper)")
 
 # --- 2. K-PID simulator with dynamic partition ------------------------------
-cfg = SimulatorConfig(k=8, target_error=1.0 / N, eps=0.15,
-                      partition="uniform", dynamic=True, record_every=50)
-sim = DistributedSimulator(p, b, cfg).run()
-err = np.abs(sim.h - res.x).max()
+sim = repro.solve(problem, method="simulator", k=8, dynamic=True,
+                  mode="sequential", record_every=50)
+err = np.abs(sim.x - ref.x).max()
 print(f"[simulator]   K=8 dynamic: cost = {sim.cost_iterations:.2f}, "
-      f"moves = {sim.n_moves}, exchanges = {sim.n_exchanges}, "
+      f"moves = {len(sim.move_log)}, "
+      f"exchanges = {sim.extras['n_exchanges']}, "
       f"max|Δx| vs sequential = {err:.2e}")
 
 # --- 3. production engine ----------------------------------------------------
 import jax
 
 k = len(jax.devices())
-ecfg = EngineConfig(k=k, target_error=1.0 / N, eps=0.15,
-                    buckets_per_dev=8, headroom=2, dynamic=k > 1)
-eng = DistributedEngine(build_engine_arrays(p, b, ecfg), ecfg)
-x, info = eng.solve()
-print(f"[engine]      K={k} devices: converged={info['converged']} "
-      f"rounds={info['rounds']} max|Δx| = {np.abs(x - res.x).max():.2e}")
+eng = repro.solve(problem, method="engine:chunk", k=k, dynamic=k > 1)
+print(f"[engine]      K={k} devices: converged={eng.converged} "
+      f"rounds={eng.n_rounds} max|Δx| = {np.abs(eng.x - ref.x).max():.2e}")
 
-top = np.argsort(-res.x)[:5]
+top = np.argsort(-ref.x)[:5]
 print("top-5 PageRank nodes:", top.tolist())

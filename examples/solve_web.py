@@ -1,23 +1,21 @@
 """End-to-end driver (the paper's kind): distributed PageRank on a web-scale
 stand-in graph with the dynamic partition strategy.
 
-Reproduces the paper's headline experiment shape: a web graph (uk-2007-05
-stand-in, Table 4-matched), K PIDs, uniform start, dynamic rebalancing; then
-reports the speed-up vs K=1 and the partition evolution.
+Reproduces the paper's headline experiment shape through the
+``repro.solve`` front door: a web graph (uk-2007-05 stand-in, Table
+4-matched), K PIDs on the ``simulator`` backend, uniform start, dynamic
+rebalancing; then reports the speed-up vs K=1 (the paper's
+``steps·PID_Speed/L`` wall-clock metric, kept in
+``report.extras["cost_steps_iterations"]``) and the partition
+evolution.
 
 Run:  PYTHONPATH=src python examples/solve_web.py [--n 50000] [--k 16]
 """
 import argparse
 import time
 
-import numpy as np
-
-from repro.core import (
-    DistributedSimulator,
-    SimulatorConfig,
-    pagerank_system,
-    webgraph_like,
-)
+import repro
+from repro.core import webgraph_like
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--n", type=int, default=50_000)
@@ -26,28 +24,26 @@ args = ap.parse_args()
 
 print(f"building web-like graph N={args.n} (uk-2007-05 stand-in) ...")
 g = webgraph_like(args.n, seed=1)
-p, b = pagerank_system(g)
+problem = repro.Problem.pagerank(g, target_error=1.0 / g.n)
 print(f"  L = {g.n_edges} (L/N = {g.n_edges / g.n:.1f})")
 
+opts = dict(mode="batch", record_every=100)
+
 t0 = time.time()
-base = DistributedSimulator(
-    p, b, SimulatorConfig(k=1, target_error=1.0 / g.n, eps=0.15,
-                          mode="batch", record_every=100)
-).run()
-print(f"[K=1 ]  cost = {base.cost_iterations:.2f}  "
-      f"({time.time() - t0:.1f}s wall)")
+base = repro.solve(problem, method="simulator", k=1, **opts)
+base_cost = base.extras["cost_steps_iterations"]
+print(f"[K=1 ]  cost = {base_cost:.2f}  ({time.time() - t0:.1f}s wall)")
 
 for dyn in (False, True):
     t0 = time.time()
-    res = DistributedSimulator(
-        p, b, SimulatorConfig(k=args.k, target_error=1.0 / g.n, eps=0.15,
-                              partition="uniform", dynamic=dyn,
-                              mode="batch", record_every=100)
-    ).run()
+    res = repro.solve(problem, method="simulator", k=args.k, dynamic=dyn,
+                      **opts)
+    cost = res.extras["cost_steps_iterations"]
     tag = "dyn " if dyn else "stat"
-    print(f"[K={args.k} {tag}] cost = {res.cost_iterations:.2f}  "
-          f"speedup = {base.cost_iterations / res.cost_iterations:.2f}x  "
-          f"moves = {res.n_moves}  ({time.time() - t0:.1f}s wall)")
-    if dyn and res.hist_sizes.size:
-        print(f"  partition sizes: start={res.hist_sizes[0].tolist()[:8]} "
-              f"-> end={res.hist_sizes[-1].tolist()[:8]}")
+    print(f"[K={args.k} {tag}] cost = {cost:.2f}  "
+          f"speedup = {base_cost / cost:.2f}x  "
+          f"moves = {len(res.move_log)}  ({time.time() - t0:.1f}s wall)")
+    sizes = res.extras["hist_sizes"]
+    if dyn and sizes.size:
+        print(f"  partition sizes: start={sizes[0].tolist()[:8]} "
+              f"-> end={sizes[-1].tolist()[:8]}")

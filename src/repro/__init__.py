@@ -1,0 +1,34 @@
+"""repro — D-iteration dynamic-partition system (see DESIGN.md).
+
+The public solver surface lives in :mod:`repro.api` and is re-exported
+lazily here so ``import repro`` stays lightweight:
+
+>>> import repro
+>>> report = repro.solve(repro.Problem.pagerank(g))
+"""
+_API_NAMES = (
+    "BackendCapabilities",
+    "Problem",
+    "RoundReport",
+    "SolveReport",
+    "SolverOptions",
+    "SolverSession",
+    "get_backend",
+    "list_backends",
+    "register_backend",
+    "solve",
+)
+
+__all__ = list(_API_NAMES)
+
+
+def __getattr__(name):
+    if name in _API_NAMES:
+        from repro import api
+
+        return getattr(api, name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_API_NAMES))

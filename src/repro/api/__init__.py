@@ -1,0 +1,46 @@
+"""The solver front door (DESIGN.md §4).
+
+One public surface spanning every tier of the three-tier architecture:
+
+>>> import repro
+>>> problem = repro.Problem.pagerank(g, damping=0.85)
+>>> report = repro.solve(problem)                      # method="auto"
+>>> report = repro.solve(problem, method="simulator", k=16, dynamic=True)
+>>> session = repro.SolverSession(problem, "frontier:segment_sum")
+>>> session.solve(); session.warm_start(b2); session.solve()
+
+The backend registry (``list_backends()``) maps stable string keys to
+solver tiers with capability records; ``solve(..., method="auto")``
+picks the fastest eligible backend.  Everything returns the unified
+:class:`SolveReport`; warm-start and multi-RHS serving live on
+:class:`SolverSession`.
+
+The historical entrypoints (``repro.core.diteration.solve_sequential``,
+``solve_frontier_jnp``) are deprecated shims over this registry;
+``DistributedSimulator`` / ``DistributedEngine`` remain the engine-room
+implementations behind the ``simulator`` / ``engine:*`` keys.
+"""
+from .options import SolverOptions
+from .problem import Problem
+from .registry import (
+    BackendCapabilities,
+    get_backend,
+    list_backends,
+    register_backend,
+    solve,
+)
+from .report import RoundReport, SolveReport
+from .session import SolverSession
+
+__all__ = [
+    "BackendCapabilities",
+    "Problem",
+    "RoundReport",
+    "SolveReport",
+    "SolverOptions",
+    "SolverSession",
+    "get_backend",
+    "list_backends",
+    "register_backend",
+    "solve",
+]

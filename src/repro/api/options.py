@@ -1,0 +1,115 @@
+"""One ``SolverOptions`` shape for every backend (DESIGN.md §4).
+
+Each registered backend historically grew its own config dataclass
+(``SimulatorConfig``, ``EngineConfig``, bare kwargs on the reference
+solvers).  ``SolverOptions`` is the single validated front-door config;
+backend adapters translate the relevant subset into their native config
+and *reject* — rather than silently ignore — flags the chosen backend
+cannot honor.  ``validated(caps)`` is the one choke point: the CLI, the
+examples, and ``repro.solve`` all pass through it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+__all__ = ["SolverOptions", "GAMMA"]
+
+GAMMA = 1.2  # paper default threshold decay
+
+_POLICIES = ("slope_ema", "cost_refresh", "hysteresis")
+_SIGNALS = ("residual", "edge-ops")
+_PARTITIONS = ("uniform", "cb")
+_MODES = ("sequential", "batch")
+
+
+@dataclasses.dataclass
+class SolverOptions:
+    """Backend-agnostic solver knobs.
+
+    Fields are grouped by which backends consume them; ``validated``
+    raises when a field is set inconsistently (e.g. ``dynamic`` with
+    ``k=1``) or targets a backend that cannot honor it (e.g. ``k`` on
+    the single-process reference solvers).
+    """
+
+    # ---- shared -----------------------------------------------------------
+    k: Optional[int] = None  # PIDs / devices (None = backend default)
+    dynamic: bool = False  # §2.5.2 dynamic partition controller
+    policy: Optional[str] = None  # balance policy name (implies dynamic)
+    signal: str = "residual"  # rebalancing signal
+    gamma: float = GAMMA
+    max_rounds: int = 1_000_000  # frontier rounds / sweeps cap
+    max_ops: int = 10**9  # sequential-backend op budget
+    verbose: bool = False
+    # ---- simulator --------------------------------------------------------
+    partition: str = "uniform"
+    mode: str = "batch"  # simulator schedule (sequential = paper-exact)
+    max_steps: int = 2_000_000
+    record_every: int = 1
+    # ---- frontier (jnp / pallas) ------------------------------------------
+    bs: int = 128  # BSR block size for frontier:pallas
+    interpret: bool = False  # force the Pallas interpreter off-TPU
+    trace_every: int = 32  # rounds per trace record (streaming grain)
+    # ---- engine -----------------------------------------------------------
+    buckets_per_dev: int = 8
+    headroom: int = 2
+    max_inner: int = 8
+    chunk_rounds: int = 4
+    max_chunks: int = 4096
+    dtype: Any = None  # engine compute dtype (None = engine default)
+    # ---- balance controller -----------------------------------------------
+    eta: float = 0.5
+    z: int = 10
+
+    def validated(self, caps=None, method: str = "?") -> "SolverOptions":
+        """Normalize + cross-check; returns a fresh validated copy.
+
+        ``caps`` is the target backend's
+        :class:`repro.api.registry.BackendCapabilities`; when given, the
+        check also rejects options the backend cannot honor (the
+        historical failure mode was *silently ignoring* them — e.g.
+        ``--k`` on the engine path of ``launch/solve.py``).
+        """
+        opt = dataclasses.replace(self)
+        if opt.policy is not None:
+            if opt.policy not in _POLICIES:
+                raise ValueError(
+                    f"unknown policy {opt.policy!r}; expected one of "
+                    f"{_POLICIES}"
+                )
+            # a policy is only meaningful with the dynamic controller on:
+            # the help text has always claimed --policy implies --dynamic
+            opt.dynamic = True
+        if opt.signal not in _SIGNALS:
+            raise ValueError(
+                f"unknown signal {opt.signal!r}; expected one of {_SIGNALS}"
+            )
+        if opt.partition not in _PARTITIONS:
+            raise ValueError(
+                f"unknown partition {opt.partition!r}; expected one of "
+                f"{_PARTITIONS}"
+            )
+        if opt.mode not in _MODES:
+            raise ValueError(
+                f"unknown mode {opt.mode!r}; expected one of {_MODES}"
+            )
+        if opt.k is not None and opt.k < 1:
+            raise ValueError(f"k must be >= 1, got {opt.k}")
+        if opt.dynamic and opt.k == 1:
+            raise ValueError(
+                "dynamic partition needs k >= 2 (one PID has nothing to "
+                "rebalance); drop --dynamic/--policy or raise k"
+            )
+        if caps is not None:
+            if opt.k is not None and opt.k > 1 and not caps.configurable_k:
+                raise ValueError(
+                    f"backend {method!r} is single-process; k={opt.k} "
+                    "cannot be honored (use 'simulator' or 'engine:*')"
+                )
+            if opt.dynamic and not caps.supports_dynamic_partition:
+                raise ValueError(
+                    f"backend {method!r} has no dynamic partition; drop "
+                    "--dynamic/--policy or pick 'simulator'/'engine:*'"
+                )
+        return opt

@@ -1,0 +1,170 @@
+"""String-keyed backend registry + the ``solve()`` front door.
+
+Every solver tier registers under a stable key with a capability
+record; ``solve(problem, method="auto")`` picks the fastest *eligible*
+backend for the problem/options/hardware at hand (DESIGN.md §4).
+
+Registered keys (see :mod:`repro.api.backends`):
+
+====================  =====================================================
+``sequential``        paper-exact numpy sweep (ground-truth schedule)
+``frontier:segment_sum``  frontier-batched jnp, per-edge segment-sum push
+``frontier:pallas``   frontier-batched over the fused BSR Pallas kernel
+``engine:chunk``      shard_map engine, per-edge diffusion backend
+``engine:bsr``        shard_map engine, BSR tile diffusion backend
+``simulator``         faithful time-stepped K-PID simulator (§2.2–2.5)
+====================  =====================================================
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+from .options import SolverOptions
+from .problem import Problem
+from .report import SolveReport
+
+__all__ = [
+    "BackendCapabilities",
+    "register_backend",
+    "get_backend",
+    "list_backends",
+    "solve",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendCapabilities:
+    """What a backend can honor — consulted by validation and auto-dispatch.
+
+    ``device_kinds`` lists the JAX platforms the backend is *at home*
+    on; it still runs elsewhere (all backends are portable) but auto
+    dispatch prefers native ground.  ``min_auto_n`` gates auto-dispatch
+    to sizes where the backend's fixed costs amortize.
+    """
+
+    supports_dynamic_partition: bool = False
+    supports_batch: bool = False  # multi-RHS solve_batch via vmap
+    supports_warm_start: bool = False  # SolverSession-resumable state
+    configurable_k: bool = False  # honors SolverOptions.k > 1
+    device_kinds: Tuple[str, ...] = ("cpu", "gpu", "tpu")
+    min_auto_n: int = 0
+    auto_priority: int = 0  # higher wins among eligible backends
+
+
+@dataclasses.dataclass(frozen=True)
+class _Backend:
+    name: str
+    fn: Callable[[Problem, SolverOptions], SolveReport]
+    caps: BackendCapabilities
+
+
+_REGISTRY: Dict[str, _Backend] = {}
+
+
+def register_backend(name: str, caps: BackendCapabilities):
+    """Decorator: register ``fn(problem, options) -> SolveReport``."""
+
+    def deco(fn):
+        if name in _REGISTRY:
+            raise ValueError(f"backend {name!r} already registered")
+        _REGISTRY[name] = _Backend(name=name, fn=fn, caps=caps)
+        return fn
+
+    return deco
+
+
+def _ensure_loaded() -> None:
+    if not _REGISTRY:  # adapters self-register on first import
+        from . import backends  # noqa: F401
+
+
+def get_backend(name: str) -> _Backend:
+    _ensure_loaded()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown solver backend {name!r}; registered: "
+            f"{sorted(_REGISTRY)}"
+        ) from None
+
+
+def list_backends() -> Dict[str, BackendCapabilities]:
+    """Registry snapshot: key -> capabilities (the capability matrix)."""
+    _ensure_loaded()
+    return {k: b.caps for k, b in sorted(_REGISTRY.items())}
+
+
+def _auto_select(problem: Problem, options: SolverOptions) -> str:
+    """Pick the fastest eligible backend (documented, deterministic).
+
+    Eligibility: honors the requested k/dynamic/batch; native to the
+    current JAX platform; problem size above the backend's auto floor.
+    Among eligible backends the highest ``auto_priority`` wins —
+    priorities encode the measured ordering of BENCH_kernels.json /
+    BENCH_engine.json (BSR paths win at scale, per-edge wins small).
+    """
+    import jax
+
+    platform = jax.default_backend()
+    _ensure_loaded()
+    want_k = options.k is not None and options.k > 1
+    if problem.is_batched and want_k:
+        raise ValueError(
+            "batched (multi-RHS) problems run on the single-process "
+            "vmapped frontier path; k>1 cannot be honored — drop k or "
+            "solve the columns as separate problems"
+        )
+    best: Optional[_Backend] = None
+    for be in _REGISTRY.values():
+        caps = be.caps
+        if platform not in caps.device_kinds:
+            continue
+        if problem.n < caps.min_auto_n:
+            continue
+        if problem.is_batched and not caps.supports_batch:
+            continue
+        if want_k and not caps.configurable_k:
+            continue
+        if (options.dynamic or options.policy) and (
+            not caps.supports_dynamic_partition
+        ):
+            continue
+        if want_k and caps.configurable_k:
+            # the engine needs k physical devices; fall back to the
+            # simulator when the host cannot provide them
+            if be.name.startswith("engine:") and (
+                options.k > len(jax.devices())
+            ):
+                continue
+        if best is None or caps.auto_priority > best.caps.auto_priority:
+            best = be
+    if best is None:  # want_k on a 1-device host with engines excluded
+        return "simulator" if want_k else "frontier:segment_sum"
+    return best.name
+
+
+def solve(
+    problem: Problem,
+    method: str = "auto",
+    options: Optional[SolverOptions] = None,
+    **kw,
+) -> SolveReport:
+    """The single solver front door: ``repro.solve(problem)``.
+
+    ``method`` is a registry key or ``"auto"``; extra keyword arguments
+    are folded into ``options`` (``solve(p, k=8, dynamic=True)``).
+    Options are validated against the chosen backend's capabilities —
+    inconsistent flags raise instead of being silently dropped.
+    """
+    opts = options if options is not None else SolverOptions()
+    if kw:
+        opts = dataclasses.replace(opts, **kw)
+    if method in ("auto", None):
+        # normalize first so auto-selection sees policy => dynamic
+        opts = opts.validated()
+        method = _auto_select(problem, opts)
+    be = get_backend(method)
+    opts = opts.validated(be.caps, method)
+    return be.fn(problem, opts)

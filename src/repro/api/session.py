@@ -1,0 +1,564 @@
+"""Stateful solving: :class:`SolverSession` + the resumable drivers.
+
+The paper's central object is the fluid pair ``(H, F)`` — the
+accumulated history and the residual fluid.  The asynchronous-scheme
+companion (arXiv:1202.6168) stresses that this *state* is what travels
+between machines; here it is what travels between *solves*:
+
+* ``run(until=...)`` — stream :class:`RoundReport`\\ s while draining F
+  (the serving loop's progress feed).
+* ``warm_start(b_new)`` — keep H, re-seed ``F = B' − (I−P)·H`` (the
+  §2.2 residual identity ``X_exact − H = (I−P)^{-1} F`` applied to the
+  new RHS).  A nearby B' leaves |F| tiny, so re-solving costs a small
+  fraction of a cold solve — measured in edge-push ops, tested in
+  tests/test_api.py.
+* ``solve_batch(B)`` — multi-RHS personalized PageRank via a vmapped
+  frontier loop (per-column thresholds and convergence masks) over the
+  shared edge list.
+
+Drivers adapt one warm-startable backend each behind a tiny protocol
+(``seed`` / ``advance`` / ``x`` / ``residual`` / ``ops`` / ``rounds``);
+:mod:`repro.api.backends` reuses them for the one-shot ``solve()``
+adapters so the streaming and batch paths are the *same* code the
+registry runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from .options import SolverOptions
+from .problem import Problem
+from .report import RoundReport, SolveReport
+
+__all__ = ["SolverSession"]
+
+
+# --------------------------------------------------------------------------- #
+# frontier drivers (single-process jnp / Pallas)
+# --------------------------------------------------------------------------- #
+class _SegmentSumDriver:
+    """frontier:segment_sum — per-edge gather→multiply→segment-sum rounds."""
+
+    native_round = "frontier round"
+
+    def __init__(self, problem: Problem, options: SolverOptions):
+        import jax.numpy as jnp
+
+        g = problem.p
+        src, dst, wgt = g.edge_list()
+        self.n = g.n
+        self.l = max(g.n_edges, 1)
+        self.src = jnp.asarray(src, dtype=jnp.int32)
+        self.dst = jnp.asarray(dst, dtype=jnp.int32)
+        self.wgt = jnp.asarray(wgt)
+        self.w = jnp.asarray(problem.node_weights())
+        self.dang = jnp.asarray(g.dangling_mask())
+        self.gamma = options.gamma
+        self._state = None
+
+    def seed(self, f_nodes: np.ndarray,
+             h_nodes: Optional[np.ndarray] = None) -> None:
+        import jax.numpy as jnp
+
+        f = jnp.asarray(f_nodes)
+        h = jnp.zeros_like(f) if h_nodes is None else jnp.asarray(
+            h_nodes, dtype=f.dtype)
+        t = jnp.abs(f * self.w).max() * 2.0
+        self._state = (f, h, t, jnp.zeros((), jnp.int32),
+                       jnp.zeros((), jnp.int32))
+
+    def advance(self, tol: float, round_limit: int) -> None:
+        """Run until |F|_1 <= tol or the *total* round count hits the
+        limit; resumable (identical round sequence to one long loop)."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.diteration import frontier_step
+
+        src, dst, wgt, w, dang, n, gamma = (
+            self.src, self.dst, self.wgt, self.w, self.dang, self.n,
+            self.gamma)
+
+        def cond(state):
+            f, h, t, ops, rounds = state
+            return (jnp.abs(f).sum() > tol) & (rounds < round_limit)
+
+        def body(state):
+            f, h, t, ops, rounds = state
+            f, h, t, dops = frontier_step(
+                f, h, t, src, dst, wgt, w, dang, n, gamma)
+            return f, h, t, ops + dops, rounds + 1
+
+        self._state = jax.lax.while_loop(cond, body, self._state)
+
+    def x(self) -> np.ndarray:
+        return np.asarray(self._state[1], dtype=np.float64)
+
+    def residual(self) -> float:
+        import jax.numpy as jnp
+
+        return float(jnp.abs(self._state[0]).sum())
+
+    def ops(self) -> int:
+        return int(self._state[3])
+
+    def rounds(self) -> int:
+        return int(self._state[4])
+
+    def exhausted(self) -> bool:
+        return False
+
+    def move_log(self) -> List[Tuple[int, int, int, int]]:
+        return []
+
+    # ---- batched multi-RHS loop (vmap over columns) -----------------------
+    def solve_batch(self, b_matrix: np.ndarray, tol: float,
+                    max_rounds: int):
+        """All columns at once: per-column thresholds + convergence masks.
+
+        Converged columns stop diffusing (their frontier is masked), so
+        ops accrue per column exactly as in the single-RHS loop.
+        Returns ``(x [N, C], ops [C], rounds)``.
+        """
+        import jax
+        import jax.numpy as jnp
+
+        src, dst, wgt, w, dang, n, gamma = (
+            self.src, self.dst, self.wgt, self.w, self.dang, self.n,
+            self.gamma)
+        f0 = jnp.asarray(np.ascontiguousarray(b_matrix.T))  # [C, N]
+        c = f0.shape[0]
+        h0 = jnp.zeros_like(f0)
+        t0 = jnp.abs(f0 * w[None, :]).max(axis=1) * 2.0  # [C]
+        seg = jax.vmap(
+            lambda m: jax.ops.segment_sum(m, dst, num_segments=n))
+
+        def cond(state):
+            f, h, t, ops, rounds = state
+            return (jnp.any(jnp.abs(f).sum(axis=1) > tol)
+                    & (rounds < max_rounds))
+
+        def body(state):
+            f, h, t, ops, rounds = state
+            active = jnp.abs(f).sum(axis=1) > tol  # [C]
+            sel = ((jnp.abs(f) * w[None, :]) > t[:, None]) & active[:, None]
+            sent = jnp.where(sel, f, 0.0)
+            h = h + sent
+            f = f - sent
+            msg = jnp.take(sent, src, axis=1) * wgt[None, :]  # [C, L]
+            f = f + seg(msg)
+            edge_active = jnp.take(sel, src, axis=1)  # [C, L]
+            dops = jnp.sum(edge_active, axis=1).astype(jnp.int32)
+            dops = dops + jnp.sum(
+                sel & dang[None, :], axis=1).astype(jnp.int32)
+            any_sel = jnp.any(sel, axis=1)
+            t = jnp.where(any_sel | ~active, t, t / gamma)
+            return f, h, t, ops + dops, rounds + 1
+
+        f, h, t, ops, rounds = jax.lax.while_loop(
+            cond, body,
+            (f0, h0, t0, jnp.zeros(c, jnp.int32), jnp.zeros((), jnp.int32)),
+        )
+        res_cols = np.asarray(jnp.abs(f).sum(axis=1), dtype=np.float64)
+        return (np.asarray(h.T, dtype=np.float64), np.asarray(ops),
+                int(rounds), res_cols)
+
+
+class _BsrFrontierDriver:
+    """frontier:pallas — fused BSR frontier rounds (jnp oracle off-TPU)."""
+
+    native_round = "frontier round"
+
+    def __init__(self, problem: Problem, options: SolverOptions):
+        import jax.numpy as jnp
+
+        from repro.kernels.diffusion import prepare_bsr
+
+        g = problem.p
+        self.n = g.n
+        self.l = max(g.n_edges, 1)
+        self.m = prepare_bsr(g.indptr, g.indices, g.weights, g.n,
+                             bs=options.bs)
+        n_pad = self.m.n_row_blocks * options.bs
+        dt = self.m.blocks.dtype
+        pad = lambda v, t: jnp.zeros(n_pad, dtype=t).at[: g.n].set(
+            jnp.asarray(v, dtype=t))
+        self.w = pad(problem.node_weights(), dt)
+        self.out_deg = pad(g.out_degree(), jnp.int32)
+        self.dang = pad(g.dangling_mask(), bool)
+        self.gamma = options.gamma
+        self.interpret = options.interpret
+        # interpret forces the real kernel; otherwise auto (pallas on
+        # TPU, jnp block oracle elsewhere) — same rule as the legacy path
+        self.op_backend = "pallas" if options.interpret else None
+        self._n_pad = n_pad
+        self._dt = dt
+        self._state = None
+
+    def seed(self, f_nodes: np.ndarray,
+             h_nodes: Optional[np.ndarray] = None) -> None:
+        import jax.numpy as jnp
+
+        f = jnp.zeros(self._n_pad, dtype=self._dt).at[: self.n].set(
+            jnp.asarray(f_nodes, dtype=self._dt))
+        h = jnp.zeros_like(f)
+        if h_nodes is not None:
+            h = h.at[: self.n].set(jnp.asarray(h_nodes, dtype=self._dt))
+        t = jnp.abs(f * self.w).max() * 2.0
+        self._state = (f, jnp.abs(f).sum(), h, t,
+                       jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+
+    def advance(self, tol: float, round_limit: int) -> None:
+        import jax
+        import jax.numpy as jnp
+
+        from repro.kernels.diffusion import frontier_round_bsr
+
+        m, w, out_deg, dang, gamma = (self.m, self.w, self.out_deg,
+                                      self.dang, self.gamma)
+        op_backend, interpret = self.op_backend, self.interpret
+
+        def cond(state):
+            f, res, h, t, ops, rounds = state
+            return (res > tol) & (rounds < round_limit)
+
+        def body(state):
+            f, _res, h, t, ops, rounds = state
+            f_new, sent, res = frontier_round_bsr(
+                m, f, w, t, backend=op_backend,
+                interpret=interpret or None)
+            # the op's threshold predicate is authoritative (the pallas
+            # backend folds t into the weights); sel follows the sent fluid
+            sel = sent != 0
+            dops = jnp.sum(jnp.where(sel, out_deg, 0))
+            dops = dops + jnp.sum((sel & dang).astype(jnp.int32))
+            any_sel = jnp.any(sel)
+            t_new = jnp.where(any_sel, t, t / gamma)
+            return f_new, res, h + sent, t_new, ops + dops, rounds + 1
+
+        self._state = jax.lax.while_loop(cond, body, self._state)
+
+    def x(self) -> np.ndarray:
+        return np.asarray(self._state[2][: self.n], dtype=np.float64)
+
+    def residual(self) -> float:
+        return float(self._state[1])
+
+    def ops(self) -> int:
+        return int(self._state[4])
+
+    def rounds(self) -> int:
+        return int(self._state[5])
+
+    def exhausted(self) -> bool:
+        return False
+
+    def move_log(self) -> List[Tuple[int, int, int, int]]:
+        return []
+
+
+# --------------------------------------------------------------------------- #
+# engine driver (shard_map production solver, chunk-granular)
+# --------------------------------------------------------------------------- #
+class _EngineDriver:
+    """engine:chunk / engine:bsr — the distributed engine, one jitted
+    chunk per advance, with the balance control plane between chunks."""
+
+    native_round = "engine round"
+
+    def __init__(self, problem: Problem, options: SolverOptions,
+                 diffusion_backend: str):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.distributed import (
+            DistributedEngine,
+            EngineConfig,
+            build_engine_arrays,
+        )
+
+        if problem.weights is not None or problem.weight_mode != "inv_out":
+            raise ValueError(
+                "engine backends run the default inv_out selection "
+                "weights; custom Problem.weights cannot be honored"
+            )
+        k = options.k or 1
+        n_dev = len(jax.devices())
+        if k > n_dev:
+            raise ValueError(
+                f"engine backends need k physical devices: k={k} > "
+                f"{n_dev} available (use method='simulator' for virtual "
+                "PIDs)"
+            )
+        buckets_per_dev = options.buckets_per_dev
+        if diffusion_backend == "bsr":
+            # BSR tiles are dense [S, S] blocks: cap the bucket size so
+            # the tile pool stays MXU-shaped instead of ballooning to
+            # [R, T, N/K, N/K] on big problems (auto-sizing only ever
+            # *raises* the bucket count the caller configured)
+            max_s = 512
+            real_needed = -(-problem.n // (k * max_s))  # ceil
+            buckets_per_dev = max(buckets_per_dev,
+                                  real_needed + options.headroom)
+        self.cfg = EngineConfig(
+            k=k,
+            target_error=problem.target_error,
+            eps=problem.eps,
+            buckets_per_dev=buckets_per_dev,
+            headroom=options.headroom,
+            max_inner=options.max_inner,
+            gamma=options.gamma,
+            dynamic=options.dynamic,
+            policy=options.policy,
+            signal=options.signal,
+            eta=options.eta,
+            z=options.z,
+            chunk_rounds=options.chunk_rounds,
+            max_chunks=options.max_chunks,
+            dtype=options.dtype or jnp.float32,
+            diffusion_backend=diffusion_backend,
+            pallas_interpret=options.interpret,
+        )
+        self.arrays = build_engine_arrays(problem.p, problem.b, self.cfg)
+        self.engine = DistributedEngine(self.arrays, self.cfg)
+        self.l = max(problem.n_edges, 1)
+        self._seeded = False
+
+    def seed(self, f_nodes: np.ndarray,
+             h_nodes: Optional[np.ndarray] = None) -> None:
+        from repro.balance.executors import BucketMoveExecutor
+        from repro.balance.policies import make_rebalancer
+
+        if self.engine.rebalancer is not None:
+            # fresh policy state per solve phase: a warm start is a new
+            # convergence trajectory, stale EMA slopes would misfire
+            self.engine.rebalancer = make_rebalancer(
+                self.cfg.policy or "slope_ema", k=self.cfg.k,
+                target_error=self.cfg.target_error, eta=self.cfg.eta,
+                z=self.cfg.z, unit="bucket",
+            )
+        self.ex = BucketMoveExecutor(
+            self.engine, self.engine.init_state(f_nodes, h_nodes))
+        self._resid = float(np.abs(np.asarray(f_nodes)).sum())
+        self._chunks = 0
+        self._moves: List[Tuple[int, int, int, int]] = []
+        self._prev_ops = np.zeros(self.cfg.k, dtype=np.int64)
+        self._seeded = True
+
+    def advance(self, tol: float, round_limit: int) -> None:
+        """One jitted chunk + one control-plane pass (engine grain)."""
+        eng, ex = self.engine, self.ex
+        ex.state, stats = eng._chunk(ex.state, *ex.chunk_operands())
+        r = np.asarray(stats["r"])
+        s_ = np.asarray(stats["s"])
+        self._resid = float(np.asarray(stats["residual"])) + float(s_.sum())
+        self._chunks += 1
+        if self._resid <= tol:
+            return
+        self._prev_ops = eng.apply_control_plane(
+            ex, r, s_, self._chunks, self._prev_ops, self._moves)
+
+    def x(self) -> np.ndarray:
+        return self.engine.extract_solution(self.ex.state,
+                                            self.ex.row_of_bucket)
+
+    def residual(self) -> float:
+        return self._resid
+
+    def ops(self) -> int:
+        return int(np.asarray(self.ex.state.ops).astype(np.int64).sum())
+
+    def rounds(self) -> int:
+        return int(np.asarray(self.ex.state.rounds))
+
+    def exhausted(self) -> bool:
+        return self._chunks >= self.cfg.max_chunks
+
+    def move_log(self) -> List[Tuple[int, int, int, int]]:
+        return list(self._moves)
+
+
+_DRIVERS = {
+    "frontier:segment_sum": lambda p, o: _SegmentSumDriver(p, o),
+    "frontier:pallas": lambda p, o: _BsrFrontierDriver(p, o),
+    "engine:chunk": lambda p, o: _EngineDriver(p, o, "segment_sum"),
+    "engine:bsr": lambda p, o: _EngineDriver(p, o, "bsr"),
+}
+
+
+# --------------------------------------------------------------------------- #
+# the session
+# --------------------------------------------------------------------------- #
+class SolverSession:
+    """A long-lived solver owning the (H, F) fluid state of one Problem.
+
+    ``method`` must be a warm-startable registry backend
+    (``frontier:segment_sum``, ``frontier:pallas``, ``engine:chunk``,
+    ``engine:bsr`` — see ``repro.api.list_backends()``).  The session
+    seeds ``F = B, H = 0`` on construction; ``warm_start`` re-seeds F
+    for a new RHS while keeping H, resetting the per-phase op/round
+    counters so reports measure the *current* solve.
+    """
+
+    def __init__(self, problem: Problem,
+                 method: str = "frontier:segment_sum",
+                 options: Optional[SolverOptions] = None, **kw):
+        from .registry import get_backend
+
+        be = get_backend(method)
+        if not be.caps.supports_warm_start:
+            raise ValueError(
+                f"backend {method!r} is one-shot; SolverSession needs a "
+                "warm-startable backend "
+                "(frontier:segment_sum | frontier:pallas | engine:chunk "
+                "| engine:bsr)"
+            )
+        opts = options if options is not None else SolverOptions()
+        if kw:
+            opts = dataclasses.replace(opts, **kw)
+        self.options = opts.validated(be.caps, method)
+        self.problem = problem
+        self.method = method
+        self._driver = _DRIVERS[method](problem, self.options)
+        self._driver.seed(problem.b)
+        self._b = np.asarray(problem.b, dtype=np.float64)
+        # cached once: warm_start re-derives P·H per serving request and
+        # must not pay the O(L) edge-list materialization every time
+        self._edges = problem.p.edge_list()
+
+    # ---- state views ------------------------------------------------------
+    @property
+    def x(self) -> np.ndarray:
+        """Current solution estimate H (node space, float64)."""
+        return self._driver.x()
+
+    @property
+    def residual(self) -> float:
+        return self._driver.residual()
+
+    @property
+    def n_ops(self) -> int:
+        """Edge pushes charged in the current solve phase (§2.3)."""
+        return self._driver.ops()
+
+    @property
+    def n_rounds(self) -> int:
+        return self._driver.rounds()
+
+    def _tol(self, until: Optional[float]) -> float:
+        te = until if until is not None else self.problem.target_error
+        return te * self.problem.eps
+
+    # ---- streaming solve --------------------------------------------------
+    def run(self, until: Optional[float] = None,
+            max_rounds: Optional[int] = None) -> Iterator[RoundReport]:
+        """Drain F toward ``until`` (a target_error), streaming one
+        :class:`RoundReport` per trace grain (``options.trace_every``
+        frontier rounds / one engine chunk).  The final yielded report
+        is the converged (or budget-exhausted) state."""
+        tol = self._tol(until)
+        cap = max_rounds if max_rounds is not None else (
+            self.options.max_rounds)
+        d = self._driver
+        while True:
+            if d.residual() <= tol or d.rounds() >= cap or d.exhausted():
+                yield RoundReport(d.rounds(), d.residual(), d.ops())
+                return
+            if isinstance(d, _EngineDriver):
+                d.advance(tol, cap)
+            else:
+                d.advance(tol, min(d.rounds() + self.options.trace_every,
+                                   cap))
+            yield RoundReport(d.rounds(), d.residual(), d.ops())
+
+    def solve(self, until: Optional[float] = None,
+              max_rounds: Optional[int] = None) -> SolveReport:
+        """Run to convergence and return the unified report."""
+        t0 = time.perf_counter()
+        trace = list(self.run(until=until, max_rounds=max_rounds))
+        d = self._driver
+        return SolveReport(
+            x=d.x(),
+            residual=d.residual(),
+            n_ops=d.ops(),
+            cost_iterations=d.ops() / d.l,
+            n_rounds=d.rounds(),
+            converged=d.residual() <= self._tol(until),
+            method=self.method,
+            trace=trace,
+            move_log=d.move_log(),
+            wall_time_s=time.perf_counter() - t0,
+            extras={"session": True},
+        )
+
+    # ---- warm start (§2.2 residual identity) ------------------------------
+    def warm_start(self, b_new: np.ndarray) -> float:
+        """Re-seed for a new RHS, reusing the accumulated history H.
+
+        ``F' = B' − (I−P)·H = B' − H + P·H`` — exactly the residual the
+        old H leaves against the new system, so |F'| (returned) is small
+        whenever B' is near the RHS H was built for, and the follow-up
+        ``run``/``solve`` charges correspondingly few edge pushes.
+        Phase counters (ops, rounds, trace) reset to zero.
+        """
+        b_new = np.asarray(b_new, dtype=np.float64)
+        if b_new.shape != (self.problem.n,):
+            raise ValueError(
+                f"b_new has shape {b_new.shape}, expected "
+                f"({self.problem.n},)"
+            )
+        h = self._driver.x()
+        src, dst, w = self._edges
+        ph = np.bincount(dst, weights=h[src] * w, minlength=self.problem.n)
+        f_new = b_new - h + ph
+        self._driver.seed(f_new, h)
+        self._b = b_new
+        self.problem = self.problem.with_b(b_new)
+        return float(np.abs(f_new).sum())
+
+    # ---- batched multi-RHS ------------------------------------------------
+    def solve_batch(self, b_matrix: np.ndarray,
+                    until: Optional[float] = None) -> SolveReport:
+        """Solve every column of ``b_matrix`` ([N, C]) over the shared P.
+
+        Runs the vmapped frontier loop (per-column thresholds and
+        convergence masks) regardless of the session's method — the
+        batch serving path is frontier-native by design (DESIGN.md §4).
+        The session's own (H, F) state is untouched.
+        """
+        b_matrix = np.asarray(b_matrix, dtype=np.float64)
+        if b_matrix.ndim != 2 or b_matrix.shape[0] != self.problem.n:
+            raise ValueError(
+                f"b_matrix must be [N, C] with N={self.problem.n}, got "
+                f"{b_matrix.shape}"
+            )
+        if isinstance(self._driver, _SegmentSumDriver):
+            batch_driver = self._driver
+        else:
+            batch_driver = getattr(self, "_batch_driver", None)
+            if batch_driver is None:
+                batch_driver = _SegmentSumDriver(self.problem, self.options)
+                self._batch_driver = batch_driver
+        t0 = time.perf_counter()
+        tol = self._tol(until)
+        x, ops, rounds, res_cols = batch_driver.solve_batch(
+            b_matrix, tol, self.options.max_rounds)
+        n_ops = int(ops.astype(np.int64).sum())
+        return SolveReport(
+            x=x,
+            residual=float(res_cols.max()),
+            n_ops=n_ops,
+            cost_iterations=n_ops / max(self.problem.n_edges, 1),
+            n_rounds=rounds,
+            converged=bool((res_cols <= tol).all()),
+            method="frontier:segment_sum",
+            trace=[RoundReport(rounds, float(res_cols.max()), n_ops)],
+            wall_time_s=time.perf_counter() - t0,
+            extras={"batch": b_matrix.shape[1],
+                    "ops_per_column": ops.tolist(),
+                    "residual_per_column": res_cols.tolist()},
+        )

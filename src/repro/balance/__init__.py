@@ -1,4 +1,4 @@
-"""Unified rebalancing control plane (DESIGN.md §4).
+"""Unified rebalancing control plane (DESIGN.md §5).
 
 The paper's claim is that one measurement-driven controller "equalizes
 the computation load between PIDs without any deep analysis of the

@@ -71,7 +71,7 @@ def lm_cells(
     ``long_500k`` lowers serve_step (decode with a 512k KV cache) — decode
     cost is LINEAR in cache length, so the cell runs for every arch; the
     full-attention *prefill* at 512k would be quadratic and is NOT claimed
-    (DESIGN.md §4 records this reading).
+    (DESIGN.md §5 records this reading).
     """
     v = cfg.vocab
     tok = jnp.int32

@@ -1,6 +1,6 @@
 """dimenet [gnn] — 6 interaction blocks, d_hidden=128, n_bilinear=8,
 n_spherical=7, n_radial=6; directional messages with triplet aggregation.
-Triplets capped at 8 per edge (cutoff neighborhoods, DESIGN.md §4).
+Triplets capped at 8 per edge (cutoff neighborhoods, DESIGN.md §5).
 [arXiv:2003.03123; unverified]
 """
 from repro.models.gnn import GNNConfig

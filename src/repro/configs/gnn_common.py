@@ -13,7 +13,7 @@ Shapes (assignment table):
   molecule        128 graphs x (30 nodes, 64 edges), batched block-diagonal
 
 DimeNet triplets are capped at 8 incoming edges per directed edge
-(cutoff-neighborhood semantics; DESIGN.md §4) -> T = 8·E padded.
+(cutoff-neighborhood semantics; DESIGN.md §5) -> T = 8·E padded.
 """
 from __future__ import annotations
 

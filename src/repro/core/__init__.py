@@ -9,7 +9,7 @@ Layers:
 
 Rebalancing decisions flow through the shared :mod:`repro.balance`
 control plane (policies, LoadSignals, MovePlans, per-granularity
-executors — DESIGN.md §4); the simulator and the engine are its node-
+executors — DESIGN.md §5); the simulator and the engine are its node-
 and bucket-granular consumers.
 """
 from .graph import (
@@ -28,6 +28,7 @@ from .diteration import (
     frontier_step,
     jacobi_solve,
     residual_l1,
+    run_sequential,
     solve_frontier_jnp,
     solve_sequential,
 )

@@ -374,12 +374,27 @@ class DistributedEngine:
     # ------------------------------------------------------------------ #
     # state init
     # ------------------------------------------------------------------ #
-    def init_state(self) -> EngineState:
+    def init_state(
+        self,
+        f_nodes: Optional[np.ndarray] = None,
+        h_nodes: Optional[np.ndarray] = None,
+    ) -> EngineState:
+        """Fresh sharded state in the *initial* bucket layout.
+
+        ``f_nodes``/``h_nodes`` optionally seed the fluid and history
+        from node-space vectors — the warm-start path
+        (``SolverSession.warm_start`` re-seeds ``F = B' − (I−P)H`` and
+        keeps the accumulated H, §2.2 residual identity).  Defaults
+        reproduce the cold start ``F = B, H = 0``.
+        """
         a, cfg = self.a, self.cfg
         dt = cfg.dtype
         put_row = lambda x: jax.device_put(x, self.row_sharding)
         put_rep = lambda x: jax.device_put(x, self.rep_sharding)
-        fw = np.abs(a.f0) * a.w
+        f0 = a.f0 if f_nodes is None else self._to_slots(f_nodes)
+        h0 = (np.zeros(a.f0.shape) if h_nodes is None
+              else self._to_slots(h_nodes))
+        fw = np.abs(f0) * a.w
         t0 = (fw.reshape(cfg.k, -1).max(axis=1) * 2.0 + 1e-30).astype(dt)
         self.w = put_row(a.w.astype(dt))
         self.src_slot = put_row(a.src_slot)
@@ -393,8 +408,8 @@ class DistributedEngine:
         else:
             self.tiles = self.tile_dst = self.slot_out_deg = None
         return EngineState(
-            f=put_row(a.f0.astype(dt)),
-            h=put_row(np.zeros(a.f0.shape, dtype=dt)),
+            f=put_row(f0.astype(dt)),
+            h=put_row(h0.astype(dt)),
             outbox=put_row(
                 np.zeros((cfg.k, a.n_rows * a.bucket_size), dtype=dt)
             ),
@@ -403,6 +418,16 @@ class DistributedEngine:
             ops=put_row(np.zeros(cfg.k, dtype=np.int32)),
             rounds=put_rep(np.zeros((), dtype=np.int32)),
         )
+
+    def _to_slots(self, v_nodes: np.ndarray) -> np.ndarray:
+        """Scatter a node-space [N] vector into the initial [R, S] layout."""
+        a = self.a
+        out = np.zeros(a.f0.shape, dtype=np.float64)
+        valid = a.node_of_slot >= 0
+        out[valid] = np.asarray(v_nodes, dtype=np.float64)[
+            a.node_of_slot[valid]
+        ]
+        return out
 
     # ------------------------------------------------------------------ #
     # the jitted chunk: cfg.chunk_rounds × (adaptive local rounds + exchange)
@@ -435,10 +460,14 @@ class DistributedEngine:
             return contrib_stable[inv].reshape(-1)
 
         def local_round(f, h, obox, t_d, ops_d, pos, operands, my_start,
-                        visits):
+                        visits, dang):
             """One frontier round on this device's [B_loc, S] rows.
 
-            ``obox`` is the device's full-length [R*S] outbox.
+            ``obox`` is the device's full-length [R*S] outbox; ``dang``
+            is the [B_loc, S] dangling-slot mask (real node, zero real
+            edges) charged one op per selected round — the §2.3
+            accounting every other tier uses (edge pushes plus one per
+            selected dangling node).
             """
             w, src_slot, dst_bucket, dst_slot, wgt = operands[:5]
             fw = jnp.abs(f) * w
@@ -477,6 +506,7 @@ class DistributedEngine:
                 row_idx = jnp.arange(f.shape[0])[:, None]
                 active_edges = sel[row_idx, src_slot] & (wgt != 0)
                 ops_d = ops_d + jnp.sum(active_edges).astype(jnp.int32)
+            ops_d = ops_d + jnp.sum(sel & dang).astype(jnp.int32)
             return f, h, obox, t_d, ops_d
 
         def chunk(f, h, outbox, t, pos, ops, rounds, *operands):
@@ -498,12 +528,26 @@ class DistributedEngine:
             # not be hoisted by XLA)
             visits = (_tile_visit_order(operands[6], r_total)
                       if use_bsr and pallas_path else None)
+            # dangling-slot mask: real node (w != 0) with zero real edges.
+            # Loop-invariant given the operands; the bsr path reads it off
+            # the prebuilt per-slot degrees, the per-edge path rebuilds
+            # them from the edge buffer (no operand-signature change).
+            if use_bsr:
+                slot_deg = operands[7]
+            else:
+                w_op, src_slot_op, wgt_op = (operands[0], operands[1],
+                                             operands[4])
+                row_idx = jnp.arange(w_op.shape[0])[:, None]
+                slot_deg = jnp.zeros(w_op.shape, jnp.int32).at[
+                    row_idx, src_slot_op
+                ].add((wgt_op != 0).astype(jnp.int32))
+            dang = (operands[0] != 0) & (slot_deg == 0)
 
             def body(carry):
                 f, h, obox, t_d, ops_d, i, fire = carry
                 f, h, obox, t_d, ops_d = local_round(
                     f, h, obox, t_d, ops_d, pos, operands, my_start,
-                    visits)
+                    visits, dang)
                 r_k = jnp.sum(jnp.abs(f))
                 s_k = jnp.sum(jnp.abs(obox))
                 fire_local = (s_k > r_k / 2.0).astype(jnp.int32)
@@ -631,37 +675,11 @@ class DistributedEngine:
                       f"rounds={int(np.asarray(ex.state.rounds))}")
             if resid <= tol:
                 break
-            if self.rebalancer is not None:
-                sizes = ex.sizes()
-                if cfg.signal == "edge-ops":
-                    ops = np.asarray(ex.state.ops).astype(np.int64)
-                    # the on-device counter is int32 and cumulative over
-                    # the whole solve; recover the true per-chunk delta
-                    # through wraparound (valid while one chunk stays
-                    # under 2^32 ops)
-                    delta = (ops - prev_ops) & 0xFFFFFFFF
-                    sig = LoadSignal.from_edge_ops(
-                        delta, sizes, step=chunk_i)
-                    prev_ops = ops
-                else:
-                    sig = LoadSignal.from_residuals(r + s_, sizes,
-                                                    step=chunk_i)
-                for plan in self.rebalancer.propose(sig):
-                    moved = ex.apply(plan)
-                    if moved:
-                        n_moves += 1
-                        move_log.append(
-                            (chunk_i, plan.src, plan.dst, moved))
-        # ---- gather solution: bucket id's H now lives at its current row --
-        h = np.asarray(ex.state.h).reshape(a.n_rows, a.bucket_size)
-        x = np.zeros(a.n, dtype=np.float64)
-        for bid in range(a.n_rows):
-            row0 = int(a.pos_of_bucket[bid])  # initial row (node map)
-            row1 = int(ex.row_of_bucket[bid])  # current row (data)
-            nodes = a.node_of_slot[row0]
-            valid = nodes >= 0
-            if valid.any():
-                x[nodes[valid]] = h[row1, valid]
+            prev_ops = self.apply_control_plane(
+                ex, r, s_, chunk_i, prev_ops, move_log)
+        n_moves = len(move_log)
+        x = self.extract_solution(ex.state, ex.row_of_bucket)
+        ops = np.asarray(ex.state.ops).copy()
         return x, {
             "residual": resid,
             "chunks": chunk_i + 1,
@@ -670,8 +688,53 @@ class DistributedEngine:
             "move_log": move_log,
             "history": history,
             "converged": resid <= tol,
-            "ops": np.asarray(ex.state.ops).copy(),
+            "ops": ops,
+            "n_edge_ops": int(ops.astype(np.int64).sum()),
         }
+
+    def apply_control_plane(self, ex, r: np.ndarray, s_: np.ndarray,
+                            step: int, prev_ops: np.ndarray,
+                            move_log: list) -> np.ndarray:
+        """One rebalancer pass on post-chunk stats (shared by ``solve``
+        and the API session driver so the decision logic cannot
+        diverge).  Builds the configured LoadSignal, applies every
+        proposed MovePlan through ``ex``, appends executed moves to
+        ``move_log`` as ``(step, src, dst, units)``, and returns the
+        updated cumulative-ops baseline."""
+        if self.rebalancer is None:
+            return prev_ops
+        sizes = ex.sizes()
+        if self.cfg.signal == "edge-ops":
+            ops = np.asarray(ex.state.ops).astype(np.int64)
+            # the on-device counter is int32 and cumulative over the
+            # whole solve; recover the true per-chunk delta through
+            # wraparound (valid while one chunk stays under 2^32 ops)
+            delta = (ops - prev_ops) & 0xFFFFFFFF
+            sig = LoadSignal.from_edge_ops(delta, sizes, step=step)
+            prev_ops = ops
+        else:
+            sig = LoadSignal.from_residuals(r + s_, sizes, step=step)
+        for plan in self.rebalancer.propose(sig):
+            moved = ex.apply(plan)
+            if moved:
+                move_log.append((step, plan.src, plan.dst, moved))
+        return prev_ops
+
+    def extract_solution(self, state: EngineState,
+                         row_of_bucket: np.ndarray) -> np.ndarray:
+        """Gather H back to node space: bucket id's data lives at its
+        *current* row while the node map indexes its *initial* row."""
+        a = self.a
+        h = np.asarray(state.h).reshape(a.n_rows, a.bucket_size)
+        x = np.zeros(a.n, dtype=np.float64)
+        for bid in range(a.n_rows):
+            row0 = int(a.pos_of_bucket[bid])  # initial row (node map)
+            row1 = int(row_of_bucket[bid])  # current row (data)
+            nodes = a.node_of_slot[row0]
+            valid = nodes >= 0
+            if valid.any():
+                x[nodes[valid]] = h[row1, valid]
+        return x
 
     def _plan_move(self, row_of_bucket: np.ndarray, src_dev: int,
                    dst_dev: int, n_move: int

@@ -2,15 +2,23 @@
 
 Three tiers, all solving ``X = P X + B`` with spectral radius(P) < 1:
 
-* :func:`solve_sequential` — numpy, paper-exact greedy/threshold schedule,
+* :func:`run_sequential` — numpy, paper-exact greedy/threshold schedule,
   one node per elementary step.  Ground truth for schedule semantics.
-* :func:`solve_frontier_jnp` — the TPU-native *frontier-batched* schedule in
-  pure jnp under ``lax.while_loop``: every node above the threshold diffuses
-  simultaneously (gather -> multiply -> segment-sum), threshold decays by
-  gamma when the frontier empties.  This is the computational pattern the
-  Pallas kernel and the distributed engine implement (DESIGN.md §3).
+* :func:`frontier_step` — one TPU-native *frontier-batched* round in pure
+  jnp: every node above the threshold diffuses simultaneously
+  (gather -> multiply -> segment-sum), threshold decays by gamma when the
+  frontier empties.  This is the computational pattern the Pallas kernel
+  and the distributed engine implement (DESIGN.md §3); the resumable
+  solve loops built on it live in :mod:`repro.api.session`.
 * :func:`jacobi_solve` / :func:`power_iteration_cost` — classical baselines
   the paper normalizes against (one unit = one matrix-vector product).
+
+The historical public entrypoints :func:`solve_sequential` and
+:func:`solve_frontier_jnp` are **deprecated shims** — they delegate to
+the :mod:`repro.api` backend registry (methods ``sequential``,
+``frontier:segment_sum`` and ``frontier:pallas``) and re-wrap the
+unified :class:`repro.api.SolveReport` into the legacy
+:class:`DiterationResult`.  New code should call :func:`repro.solve`.
 
 Convergence/stopping: ``|F|_1 / eps <= target_error`` where
 ``eps = 1 - damping`` for PageRank systems and ``eps = 1 - rho`` in general —
@@ -19,8 +27,9 @@ the residual-to-error bound used throughout the paper (§2.2, §3).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +39,7 @@ from .graph import CSRGraph
 
 __all__ = [
     "DiterationResult",
+    "run_sequential",
     "solve_sequential",
     "solve_frontier_jnp",
     "frontier_step",
@@ -75,7 +85,7 @@ def residual_l1(f: np.ndarray) -> float:
 # ------------------------------------------------------------------------------
 # Paper-exact sequential schedule (numpy)
 # ------------------------------------------------------------------------------
-def solve_sequential(
+def run_sequential(
     g: CSRGraph,
     b: np.ndarray,
     target_error: float,
@@ -83,11 +93,14 @@ def solve_sequential(
     weights: Optional[np.ndarray] = None,
     gamma: float = GAMMA,
     max_ops: int = 10**9,
+    trace: Optional[List[Tuple[int, float, int]]] = None,
 ) -> DiterationResult:
     """Single-PID D-iteration with the paper's cyclic threshold sweep.
 
     Elementary op = one edge push (cost model §2.3); dangling diffusions are
-    charged one op.  Stops when |F|_1 <= target_error * eps.
+    charged one op.  Stops when |F|_1 <= target_error * eps.  ``trace``,
+    when given, collects one ``(sweep, |F|_1, cumulative_ops)`` record per
+    threshold sweep (the registry's per-round trace).
     """
     if weights is None:
         weights = default_weights(g)
@@ -119,6 +132,8 @@ def solve_sequential(
             else:
                 n_ops += 1  # dangling: absorb, charge one op
             n_diff += 1
+        if trace is not None:
+            trace.append((n_sweeps, residual_l1(f), n_ops))
     return DiterationResult(
         x=h,
         residual=residual_l1(f),
@@ -126,6 +141,44 @@ def solve_sequential(
         n_diffusions=n_diff,
         n_sweeps=n_sweeps,
         cost_iterations=n_ops / max(g.n_edges, 1),
+    )
+
+
+def solve_sequential(
+    g: CSRGraph,
+    b: np.ndarray,
+    target_error: float,
+    eps: float,
+    weights: Optional[np.ndarray] = None,
+    gamma: float = GAMMA,
+    max_ops: int = 10**9,
+) -> DiterationResult:
+    """Deprecated shim — use ``repro.solve(problem, method="sequential")``.
+
+    Delegates to the :mod:`repro.api` registry and re-wraps the unified
+    :class:`SolveReport` into the legacy :class:`DiterationResult`.
+    """
+    warnings.warn(
+        "solve_sequential is deprecated; use repro.solve(Problem.linear(...),"
+        " method='sequential')",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro.api import Problem, SolverOptions, solve
+
+    report = solve(
+        Problem.linear(g, b, eps=eps, target_error=target_error,
+                       weights=weights),
+        method="sequential",
+        options=SolverOptions(gamma=gamma, max_ops=max_ops),
+    )
+    return DiterationResult(
+        x=report.x,
+        residual=report.residual,
+        n_ops=report.n_ops,
+        n_diffusions=report.extras["n_diffusions"],
+        n_sweeps=report.n_rounds,
+        cost_iterations=report.cost_iterations,
     )
 
 
@@ -181,127 +234,39 @@ def solve_frontier_jnp(
     bs: int = 128,
     interpret: bool = False,
 ) -> DiterationResult:
-    """Frontier-batched D-iteration under ``lax.while_loop``.
+    """Deprecated shim — use ``repro.solve(problem, method="frontier:...")``.
 
-    ``backend`` selects the diffusion hot path (DESIGN.md §3 "kernel path"):
-
-    * ``"segment_sum"`` — per-edge gather → multiply → ``segment_sum`` over
-      the full edge list every round.  O(L) work per round regardless of the
-      frontier; the right backend for tiny N and for CPU.
-    * ``"pallas"`` — the fused BSR frontier round
-      (:func:`repro.kernels.diffusion.frontier_round_bsr`): P is pre-tiled
-      into ``bs``-sized dense blocks once, then every round runs threshold
-      masking + tile matmuls + the per-row residual reduction inside one
-      kernel sweep, skipping block columns with no fluid above the
-      threshold.  Off-TPU it runs the jnp block oracle unless
-      ``interpret=True`` forces the real kernel through the Pallas
-      interpreter (tests).
+    ``backend="segment_sum"`` maps to the registry key
+    ``frontier:segment_sum`` (per-edge gather → multiply → segment-sum
+    every round), ``backend="pallas"`` to ``frontier:pallas`` (the fused
+    BSR kernel round; jnp block oracle off-TPU unless ``interpret``).
+    The solve loops themselves live in :mod:`repro.api.session`.
     """
-    if weights is None:
-        weights = default_weights(g)
-    tol = target_error * eps
-    if backend == "pallas":
-        return _solve_frontier_bsr(
-            g, b, tol, weights, gamma, max_rounds, bs, interpret
-        )
-    if backend != "segment_sum":
+    warnings.warn(
+        "solve_frontier_jnp is deprecated; use "
+        "repro.solve(Problem.linear(...), method='frontier:segment_sum' or "
+        "'frontier:pallas')",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    if backend not in ("segment_sum", "pallas"):
         raise ValueError(f"unknown frontier backend {backend!r}")
-    src, dst, wgt = g.edge_list()
-    src = jnp.asarray(src, dtype=jnp.int32)
-    dst = jnp.asarray(dst, dtype=jnp.int32)
-    wgt = jnp.asarray(wgt)
-    wts = jnp.asarray(weights)
-    dang = jnp.asarray(g.dangling_mask())
-    f0 = jnp.asarray(b)
-    h0 = jnp.zeros_like(f0)
-    t0 = jnp.abs(f0 * wts).max() * 2.0
-    n = g.n
+    from repro.api import Problem, SolverOptions, solve
 
-    def cond(state):
-        f, h, t, ops, rounds = state
-        return (jnp.abs(f).sum() > tol) & (rounds < max_rounds)
-
-    def body(state):
-        f, h, t, ops, rounds = state
-        f, h, t, dops = frontier_step(
-            f, h, t, src, dst, wgt, wts, dang, n, gamma
-        )
-        return f, h, t, ops + dops, rounds + 1
-
-    f, h, t, ops, rounds = jax.lax.while_loop(
-        cond, body, (f0, h0, t0, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+    report = solve(
+        Problem.linear(g, b, eps=eps, target_error=target_error,
+                       weights=weights),
+        method=f"frontier:{backend}",
+        options=SolverOptions(gamma=gamma, max_rounds=max_rounds, bs=bs,
+                              interpret=interpret),
     )
     return DiterationResult(
-        x=np.asarray(h),
-        residual=float(jnp.abs(f).sum()),
-        n_ops=int(ops),
+        x=report.x,
+        residual=report.residual,
+        n_ops=report.n_ops,
         n_diffusions=-1,
-        n_sweeps=int(rounds),
-        cost_iterations=float(ops) / max(g.n_edges, 1),
-    )
-
-
-def _solve_frontier_bsr(
-    g: CSRGraph,
-    b: np.ndarray,
-    tol: float,
-    weights: np.ndarray,
-    gamma: float,
-    max_rounds: int,
-    bs: int,
-    interpret: bool,
-) -> DiterationResult:
-    """BSR-kernel frontier solve: pre-tile P once, fused rounds after."""
-    from repro.kernels.diffusion import frontier_round_bsr, prepare_bsr
-
-    m = prepare_bsr(g.indptr, g.indices, g.weights, g.n, bs=bs)
-    n_pad = m.n_row_blocks * bs
-    f0 = jnp.zeros(n_pad, dtype=m.blocks.dtype).at[: g.n].set(
-        jnp.asarray(b, dtype=m.blocks.dtype)
-    )
-    w = jnp.zeros(n_pad, dtype=m.blocks.dtype).at[: g.n].set(
-        jnp.asarray(weights, dtype=m.blocks.dtype)
-    )  # padding slots keep w = 0 and are never selected
-    out_deg = jnp.zeros(n_pad, dtype=jnp.int32).at[: g.n].set(
-        jnp.asarray(g.out_degree(), dtype=jnp.int32)
-    )
-    dang = jnp.zeros(n_pad, dtype=bool).at[: g.n].set(
-        jnp.asarray(g.dangling_mask())
-    )
-    h0 = jnp.zeros_like(f0)
-    t0 = jnp.abs(f0 * w).max() * 2.0
-    op_backend = "pallas" if interpret else None  # None = auto
-
-    def cond(state):
-        f, res, h, t, ops, rounds = state
-        return (res > tol) & (rounds < max_rounds)
-
-    def body(state):
-        f, _res, h, t, ops, rounds = state
-        f_new, sent, res = frontier_round_bsr(
-            m, f, w, t, backend=op_backend, interpret=interpret or None
-        )
-        # the op's threshold predicate is authoritative (the pallas backend
-        # folds t into the weights); sel follows from the sent fluid
-        sel = sent != 0
-        dops = jnp.sum(jnp.where(sel, out_deg, 0))
-        dops = dops + jnp.sum((sel & dang).astype(jnp.int32))
-        any_sel = jnp.any(sel)
-        t_new = jnp.where(any_sel, t, t / gamma)
-        return f_new, res, h + sent, t_new, ops + dops, rounds + 1
-
-    f, res, h, t, ops, rounds = jax.lax.while_loop(
-        cond, body,
-        (f0, jnp.abs(f0).sum(), h0, t0,
-         jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32)),
-    )
-    return DiterationResult(
-        x=np.asarray(h[: g.n], dtype=np.float64),
-        residual=float(res),
-        n_ops=int(ops),
-        n_diffusions=-1,
-        n_sweeps=int(rounds),
-        cost_iterations=float(ops) / max(g.n_edges, 1),
+        n_sweeps=report.n_rounds,
+        cost_iterations=report.cost_iterations,
     )
 
 

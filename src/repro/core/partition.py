@@ -14,7 +14,7 @@ Three strategies:
   *observed* residual decay rates alone.
 
 The controller is reused at three levels of the system through the
-:mod:`repro.balance` control plane (DESIGN.md §4/§5), where it is wrapped
+:mod:`repro.balance` control plane (DESIGN.md §5/§6), where it is wrapped
 as ``SlopeEMAPolicy`` and its decisions travel as granularity-agnostic
 ``MovePlan``\\ s:
 

@@ -106,6 +106,14 @@ class SimResult:
     move_log: List[Tuple[int, int, int, int]] = dataclasses.field(
         default_factory=list
     )
+    # unified §2.3 edge-push accounting (``max(out_degree, 1)`` per
+    # diffusion, locality- and exchange-blind) — the cross-backend
+    # ``SolveReport.n_ops`` field; ``count_active`` keeps the full
+    # simulator cost model (exchange + reassignment charges) on top
+    n_edge_ops: int = 0
+    hist_edge_ops: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, dtype=np.int64)
+    )
 
     @property
     def cost_per_pid(self) -> np.ndarray:
@@ -181,6 +189,7 @@ class DistributedSimulator:
         # --- counters ---------------------------------------------------------
         self.count_active = np.zeros(k, dtype=np.int64)
         self.count_idle = np.zeros(k, dtype=np.int64)
+        self.n_edge_ops = 0  # locality-blind §2.3 edge pushes (SolveReport)
         self.n_exchanges = 0
         self.n_moves = 0
 
@@ -228,6 +237,7 @@ class DistributedSimulator:
         self.h[i] += sent
         f[i] = 0.0
         lo, hi = g.indptr[i], g.indptr[i + 1]
+        self.n_edge_ops += max(int(hi - lo), 1)
         ops = 0
         if hi > lo:
             dst = g.indices[lo:hi]
@@ -287,6 +297,7 @@ class DistributedSimulator:
         lens_all = (g.indptr[sel + 1] - g.indptr[sel]).astype(np.int64)
         dangling_like = int((lens_all == 0).sum())
         ops += dangling_like
+        self.n_edge_ops += int(np.maximum(lens_all, 1).sum())
         self.dirty[sel] = True
         return max(ops, sel.size)  # each diffusion costs at least one op
 
@@ -407,6 +418,7 @@ class DistributedSimulator:
         hist_rs: List[np.ndarray] = []
         hist_sizes: List[np.ndarray] = []
         hist_res: List[float] = []
+        hist_eops: List[int] = []
         step = 0
         converged = False
         while step < cfg.max_steps:
@@ -430,6 +442,7 @@ class DistributedSimulator:
                     np.array([s.size for s in self.sets], dtype=np.int64)
                 )
                 hist_res.append(self.global_residual())
+                hist_eops.append(self.n_edge_ops)
             if self.global_residual() <= self.tol:
                 converged = True
                 break
@@ -450,6 +463,8 @@ class DistributedSimulator:
             ),
             hist_residual=np.array(hist_res, dtype=np.float64),
             move_log=list(self.move_log),
+            n_edge_ops=self.n_edge_ops,
+            hist_edge_ops=np.array(hist_eops, dtype=np.int64),
         )
 
 

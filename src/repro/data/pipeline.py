@@ -49,7 +49,7 @@ def build_triplets(src: np.ndarray, dst: np.ndarray, n_nodes: int,
     """DimeNet triplets: for edge e=(j->i), incoming edges f=(k->j), k != i.
 
     Capped at ``max_per_edge`` incoming edges per target edge (cutoff
-    neighborhoods; DESIGN.md §4 records the cap).  Returns (trip_e, trip_f).
+    neighborhoods; DESIGN.md §5 records the cap).  Returns (trip_e, trip_f).
     """
     rng = np.random.default_rng(seed)
     e_count = src.shape[0]

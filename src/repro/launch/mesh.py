@@ -1,4 +1,4 @@
-"""Production mesh definitions (DESIGN.md §5).
+"""Production mesh definitions (DESIGN.md §6).
 
 Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
 Multi-pod:  (pod=2, data=16, model=16) = 512 chips; ``pod`` is an outer

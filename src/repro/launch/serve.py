@@ -1,29 +1,45 @@
-"""Serving driver: batched prefill + decode for any LM arch (reduced config
-on CPU; production shardings proven by the decode/prefill dry-run cells).
+"""Serving drivers.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --gen 16
+Two modes:
+
+* ``lm`` (default, legacy invocation) — batched prefill + decode for
+  any LM arch (reduced config on CPU; production shardings proven by
+  the decode/prefill dry-run cells).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --gen 16
+
+* ``rank`` — warm-start multi-RHS PageRank serving on a
+  :class:`repro.SolverSession` (DESIGN.md §4): one cold solve builds
+  the (H, F) fluid state, then a stream of perturbed teleport vectors
+  is served via ``warm_start`` (re-seed ``F = B' − (I−P)H``, §2.2) and
+  a personalization batch via the vmapped ``solve_batch`` path.  Prints
+  the edge-push ops each warm request saved vs a cold solve.
+
+    PYTHONPATH=src python -m repro.launch.serve rank --n 20000 --requests 8
 """
 import argparse
+import sys
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 
-def main():
+def lm_main(argv):
+    import jax
+    import jax.numpy as jnp
+
     from repro.configs import ARCH_IDS, get_arch
     from repro.configs.smoke import smoke_setup
     from repro.data import lm_token_batch
     from repro.models import transformer as lm
 
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(prog="serve [lm]")
     ap.add_argument("--arch", required=True,
                     choices=[a for a in ARCH_IDS])
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     spec = get_arch(args.arch)
     assert spec.family == "lm", "serving applies to the LM archs"
@@ -55,6 +71,76 @@ def main():
           f"({args.batch*(args.gen-1)/dt:.0f} tok/s)")
     print("generated ids:",
           np.stack([np.asarray(t) for t in outs], 1)[0][:12].tolist())
+
+
+def rank_main(argv):
+    import repro
+    from repro.core import webgraph_like
+
+    ap = argparse.ArgumentParser(prog="serve rank")
+    ap.add_argument("--n", type=int, default=20_000)
+    ap.add_argument("--method", default="frontier:segment_sum",
+                    help="warm-startable registry key")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="warm-start requests to serve after the cold "
+                    "solve")
+    ap.add_argument("--batch", type=int, default=8,
+                    help="personalization columns for the solve_batch "
+                    "demo")
+    ap.add_argument("--drift", type=float, default=0.02,
+                    help="per-request fractional perturbation of B")
+    ap.add_argument("--target-error", type=float, default=None)
+    args = ap.parse_args(argv)
+
+    rng = np.random.default_rng(0)
+    g = webgraph_like(args.n, seed=1)
+    problem = repro.Problem.pagerank(g, target_error=args.target_error)
+    print(f"N={g.n} L={g.n_edges} method={args.method} "
+          f"target_error={problem.target_error:.2e}")
+
+    session = repro.SolverSession(problem, method=args.method)
+    t0 = time.time()
+    cold = session.solve()
+    print(f"[cold ] {cold.n_ops} edge pushes, {cold.n_rounds} rounds, "
+          f"{time.time()-t0:.2f}s — the serving baseline")
+
+    b = problem.b
+    for req in range(args.requests):
+        # a drifting teleport vector: what a freshness-weighted or
+        # user-conditioned ranking update looks like between requests
+        b = b * (1.0 + args.drift * rng.standard_normal(g.n))
+        b = np.abs(b)
+        t0 = time.time()
+        resid0 = session.warm_start(b)
+        rep = session.solve()
+        saved = 1.0 - rep.n_ops / max(cold.n_ops, 1)
+        print(f"[warm {req}] |F0|={resid0:.2e} {rep.n_ops} ops "
+              f"({saved:.0%} saved vs cold), {rep.n_rounds} rounds, "
+              f"{time.time()-t0:.2f}s")
+
+    # personalized batch: C independent teleport columns, one vmapped run
+    hot = rng.choice(g.n, size=args.batch, replace=False)
+    pref = np.zeros((g.n, args.batch))
+    pref[hot, np.arange(args.batch)] = 1.0
+    t0 = time.time()
+    batch = session.solve_batch((1.0 - problem.damping) * pref)
+    dt = time.time() - t0
+    print(f"[batch] {args.batch} personalized columns in one vmapped "
+          f"solve: {batch.n_ops} ops, {batch.n_rounds} rounds, {dt:.2f}s "
+          f"({args.batch/max(dt, 1e-9):.1f} rankings/s), "
+          f"converged={batch.converged}")
+    for c in range(min(3, args.batch)):
+        top = np.argsort(-batch.x[:, c])[:3]
+        print(f"  persona {c} (seed node {hot[c]}): top-3 {top.tolist()}")
+
+
+def main():
+    argv = sys.argv[1:]
+    if argv and argv[0] == "rank":
+        return rank_main(argv[1:])
+    if argv and argv[0] == "lm":
+        argv = argv[1:]
+    return lm_main(argv)
 
 
 if __name__ == "__main__":

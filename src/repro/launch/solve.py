@@ -1,77 +1,104 @@
-"""Distributed D-iteration solve driver.
+"""Distributed D-iteration solve driver — the CLI over ``repro.solve``.
 
-Runs the production shard_map engine over all visible JAX devices on a
-synthetic PageRank instance (or the faithful simulator with --simulate for
-paper-protocol runs).
+Every run goes through the :mod:`repro.api` front door: a
+:class:`Problem` + :class:`SolverOptions` + a registry ``--method``
+key (or ``auto``).  Flag combinations are validated — ``--k`` is
+honored (or rejected) on every path and ``--policy`` implies
+``--dynamic`` everywhere, instead of the historical behavior where the
+engine path silently ignored both.
 
-  PYTHONPATH=src python -m repro.launch.solve --n 20000 --dynamic
-  PYTHONPATH=src python -m repro.launch.solve --simulate --k 16
-  PYTHONPATH=src python -m repro.launch.solve --policy hysteresis
+  PYTHONPATH=src python -m repro.launch.solve --n 20000 --dynamic --k 8
+  PYTHONPATH=src python -m repro.launch.solve --method simulator --k 16
+  PYTHONPATH=src python -m repro.launch.solve --method engine:bsr
+  PYTHONPATH=src python -m repro.launch.solve --policy hysteresis --k 8
 """
 import argparse
 
 import numpy as np
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        description="Solve a synthetic PageRank instance through the "
+        "repro.api backend registry."
+    )
     ap.add_argument("--n", type=int, default=20_000)
     ap.add_argument("--graph", choices=["powerlaw", "web"], default="web")
-    ap.add_argument("--target-error", type=float, default=None)
-    ap.add_argument("--dynamic", action="store_true")
+    ap.add_argument("--target-error", type=float, default=None,
+                    help="stopping target (default 1/N, paper §3.1)")
+    ap.add_argument("--method", default="auto",
+                    help="registry key (see repro.list_backends()) or "
+                    "'auto'")
+    ap.add_argument("--simulate", action="store_true",
+                    help="alias for --method simulator")
+    ap.add_argument("--k", type=int, default=None,
+                    help="PID/device count; validated against the chosen "
+                    "backend (raises instead of being silently ignored)")
+    ap.add_argument("--dynamic", action="store_true",
+                    help="enable the §2.5.2 dynamic partition controller")
     ap.add_argument("--policy", default=None,
                     choices=["slope_ema", "cost_refresh", "hysteresis"],
-                    help="rebalancing policy (implies dynamic)")
-    ap.add_argument("--simulate", action="store_true",
-                    help="faithful K-PID simulator instead of the engine")
-    ap.add_argument("--k", type=int, default=None,
-                    help="PID count (simulator) — engine uses all devices")
+                    help="rebalancing policy (implies --dynamic)")
+    ap.add_argument("--signal", default="residual",
+                    choices=["residual", "edge-ops"])
+    ap.add_argument("--partition", default="uniform",
+                    choices=["uniform", "cb"])
     ap.add_argument("--buckets-per-dev", type=int, default=8)
-    args = ap.parse_args()
+    ap.add_argument("--verbose", action="store_true")
+    return ap
 
-    from repro.core import (
-        DistributedSimulator,
-        SimulatorConfig,
-        pagerank_system,
-        power_law_graph,
-        webgraph_like,
-    )
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
+    if args.simulate:
+        if args.method not in ("auto", "simulator"):
+            raise SystemExit(
+                f"--simulate conflicts with --method {args.method!r}"
+            )
+        args.method = "simulator"
+
+    import repro
+    from repro.core import power_law_graph, webgraph_like
 
     g = (power_law_graph(args.n, seed=0) if args.graph == "powerlaw"
          else webgraph_like(args.n, seed=1))
-    p, b = pagerank_system(g)
-    te = args.target_error or 1.0 / args.n
-    print(f"N={g.n} L={g.n_edges} target_error={te:.2e}")
+    problem = repro.Problem.pagerank(g, target_error=args.target_error)
+    print(f"N={g.n} L={g.n_edges} target_error={problem.target_error:.2e}")
 
-    if args.simulate:
-        k = args.k or 8
-        cfg = SimulatorConfig(k=k, target_error=te, eps=0.15,
-                              dynamic=args.dynamic, policy=args.policy,
-                              mode="batch", record_every=100)
-        res = DistributedSimulator(p, b, cfg).run()
-        print(f"simulator K={k}: converged={res.converged} "
-              f"cost={res.cost_iterations:.2f} moves={res.n_moves}")
-        return
+    k = args.k
+    if k is None and args.method.startswith("engine:"):
+        # the engine's historical CLI default: one PID per visible device
+        import jax
 
-    import jax
-
-    from repro.core.distributed import (
-        DistributedEngine,
-        EngineConfig,
-        build_engine_arrays,
+        k = len(jax.devices())
+    options = repro.SolverOptions(
+        k=k,
+        dynamic=args.dynamic,
+        policy=args.policy,
+        signal=args.signal,
+        partition=args.partition,
+        buckets_per_dev=args.buckets_per_dev,
+        mode="batch",
+        record_every=100,
+        verbose=args.verbose,
     )
-
-    k = len(jax.devices())
-    cfg = EngineConfig(k=k, target_error=te, eps=0.15,
-                       buckets_per_dev=args.buckets_per_dev, headroom=2,
-                       dynamic=args.dynamic and k > 1,
-                       policy=args.policy if k > 1 else None)
-    eng = DistributedEngine(build_engine_arrays(p, b, cfg), cfg)
-    x, info = eng.solve(verbose=True)
-    print(f"engine K={k}: converged={info['converged']} "
-          f"rounds={info['rounds']} moves={info['moves']} "
-          f"residual={info['residual']:.2e}")
-    print("top-5:", np.argsort(-x)[:5].tolist())
+    # validate the flag set up front so a rejected combination exits
+    # cleanly, while genuine solver failures keep their tracebacks
+    try:
+        if args.method == "auto":
+            options.validated()
+        else:
+            options.validated(repro.get_backend(args.method).caps,
+                              args.method)
+    except (KeyError, ValueError) as e:
+        raise SystemExit(f"inconsistent flags: {e}")
+    report = repro.solve(problem, method=args.method, options=options)
+    print(report.summary())
+    if report.move_log:
+        print(f"moves: {report.move_log[:8]}"
+              f"{' ...' if len(report.move_log) > 8 else ''}")
+    print("top-5:", np.argsort(-report.x)[:5].tolist())
+    return report
 
 
 if __name__ == "__main__":

@@ -26,7 +26,7 @@ Batch convention (static shapes, padded):
 
 Distribution: edges are sharded over the whole mesh ("edges" logical axis),
 node states over ("pod","data") — the aggregation's cross-shard scatter-add
-is the same collective pattern as the solver's fluid exchange (DESIGN.md §4).
+is the same collective pattern as the solver's fluid exchange (DESIGN.md §5).
 """
 from __future__ import annotations
 

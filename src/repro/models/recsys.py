@@ -13,7 +13,7 @@ Implementation notes (kernel_taxonomy §RecSys):
 * Tables are row-sharded over the ``model`` axis ("rows" logical axis);
   lookups from data-parallel batches become all-to-all-ish gathers under
   SPMD — exactly the skewed-access pattern the paper's dynamic partition
-  controller rebalances (DESIGN.md §4: Ω = table rows).
+  controller rebalances (DESIGN.md §5: Ω = table rows).
 * ``retrieval_score``: one query against N candidate vectors as a batched
   dot — FM's interaction with a candidate item factorises into
   ⟨u_sum, v_c⟩ + const(c), so retrieval is a single [N, D] matvec.

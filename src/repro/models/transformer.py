@@ -17,7 +17,7 @@ Scale features:
 * **logical sharding hints** (repro.parallel.axes) — batch/heads/mlp/vocab
   annotations that the production mesh maps to (pod, data, model).
 * decode path with a static KV cache, sequence-sharded for the long-context
-  cells (distributed-softmax attention; DESIGN.md §5).
+  cells (distributed-softmax attention; DESIGN.md §6).
 
 Attention uses the XLA einsum formulation by default (what the dry-run
 lowers and the roofline measures); the Pallas flash kernel

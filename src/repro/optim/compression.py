@@ -1,7 +1,7 @@
 """Gradient compression for cross-pod data parallelism.
 
 Two composable schemes (distributed-optimization tricks for the DCN hop,
-DESIGN.md §5):
+DESIGN.md §6):
 
 * **int8 quantized all-reduce** — per-tensor symmetric int8 with an fp32
   scale; 4× less DCN traffic for the pod-level gradient reduction.

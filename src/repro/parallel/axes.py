@@ -6,7 +6,7 @@ mapping from logical names to physical mesh axes.  Outside any mapping the
 hint is a no-op, so the same model code runs in single-device tests and in
 the 512-chip dry-run unchanged.
 
-Default production mapping (DESIGN.md §5):
+Default production mapping (DESIGN.md §6):
 
     batch  -> ("pod", "data")   (outer DP over pods, inner DP in-pod)
     embed  -> "data"            (FSDP shard of the hidden dim where useful)
