@@ -1,0 +1,124 @@
+"""Delta-vs-cold sweep: what an evolving graph costs with GraphStore.
+
+For each (N, churn fraction, method) cell a converged session absorbs a
+link-rotation delta through ``SolverSession.update_graph`` (GraphStore
+patches its views in place, ``F' = F + (P'−P)·H`` re-seeds the fluid)
+and the warm re-solve's edge pushes are compared against a cold solve
+of the *same patched problem*.  Also times the incremental view patch
+against a from-scratch store rebuild + re-materialization of the same
+views — the structural half of the win.  Emits ``BENCH_graph.json``
+(schema-guarded by ``python -m benchmarks.run --smoke`` and folded into
+the consolidated ``BENCH.json`` trajectory).
+
+  PYTHONPATH=src python -m benchmarks.graph_bench           # N=2^12, 2^13
+  PYTHONPATH=src python -m benchmarks.graph_bench --smoke   # tiny CI run
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+
+def run_cell(n: int, churn_frac: float, method: str, seed: int = 7) -> dict:
+    import repro
+    from repro.core import webgraph_like
+    from repro.graph import GraphStore, rotation_churn
+
+    g = webgraph_like(n, seed=1)
+    problem = repro.Problem.pagerank(g)
+    session = repro.SolverSession(problem, method=method)
+    cold_pre = session.solve()
+    rank = cold_pre.x
+
+    store = session.problem.graph
+    n_rot = max(1, int(churn_frac * problem.n_edges) // 2)
+    delta = rotation_churn(store, n_rot, seed=seed, rank=rank,
+                           exclude_top=0.2)
+
+    # structural cost: incremental patch vs from-scratch rebuild of the
+    # same view set, measured on a twin store so the timing isolates
+    # apply_delta (the session's own update_graph also rebuilds its
+    # driver, which is re-upload/jit cost, not view maintenance)
+    def materialize(s: GraphStore) -> GraphStore:
+        for key in store.materialized_views():
+            if key[0] == "bsr":
+                s.bsr(key[1])
+            elif key[0] == "bucket":
+                s.bucketed(key[1])
+            elif key[0] == "engine":
+                s.engine_layout(key[1], key[2], key[3], tiled=key[4],
+                                dtype=key[5])
+        return s
+
+    twin = materialize(GraphStore.from_csr(store.csr()))
+    t0 = time.perf_counter()
+    twin.apply_delta(delta)
+    patch_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    materialize(GraphStore.from_csr(twin.csr()))
+    rebuild_s = time.perf_counter() - t0
+
+    resid0 = session.update_graph(delta)
+    warm = session.solve()
+    cold = repro.SolverSession(session.problem, method=method).solve()
+    return {
+        "n": n,
+        "method": method,
+        "n_edges": int(problem.n_edges),
+        "churn_frac": churn_frac,
+        "changed_edges": int(delta.n_changes),
+        "f0_resid": float(resid0),
+        "warm_ops": int(warm.n_ops),
+        "cold_ops": int(cold.n_ops),
+        "ops_ratio": round(cold.n_ops / max(warm.n_ops, 1), 2),
+        "patch_s": round(patch_s, 4),
+        "rebuild_s": round(rebuild_s, 4),
+        "patch_speedup": round(rebuild_s / max(patch_s, 1e-9), 2),
+        "converged": bool(warm.converged and cold.converged),
+    }
+
+
+def main(smoke: bool = False, out_path: str = "BENCH_graph.json") -> dict:
+    import jax
+
+    ns = (2**10,) if smoke else (2**12, 2**13)
+    churns = (0.01,) if smoke else (0.002, 0.01, 0.05)
+    methods = (("frontier:segment_sum",) if smoke
+               else ("frontier:segment_sum", "engine:bsr"))
+    rows = []
+    for n in ns:
+        for churn in churns:
+            for method in methods:
+                try:
+                    row = run_cell(n, churn, method)
+                except Exception as e:  # device constraints etc.
+                    row = {"n": n, "method": method, "churn_frac": churn,
+                           "skipped": str(e)}
+                rows.append(row)
+                if "skipped" in row:
+                    print(f"  N=2^{n.bit_length()-1} churn={churn} "
+                          f"{method}: skipped: {row['skipped']}")
+                else:
+                    print(f"  N=2^{n.bit_length()-1} churn={churn:5.3f} "
+                          f"{method:22s} warm={row['warm_ops']:>9d} "
+                          f"cold={row['cold_ops']:>9d} "
+                          f"({row['ops_ratio']:4.1f}x fewer pushes, "
+                          f"patch {row['patch_speedup']:5.1f}x faster "
+                          f"than rebuild)")
+    payload = {
+        "meta": {
+            "bench": "graph_delta_vs_cold",
+            "graph": "webgraph_like + rotation_churn(exclude_top=0.2)",
+            "platform": jax.default_backend(),
+        },
+        "rows": rows,
+    }
+    with open(out_path, "w") as fh:
+        json.dump(payload, fh, indent=1)
+    print(f"[graph bench] wrote {out_path} ({len(rows)} rows)")
+    return payload
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv)

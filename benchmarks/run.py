@@ -8,6 +8,12 @@ regenerated data and prints CSV-ish lines throughout.
 tiny frontier sweep + engine bench end-to-end, validates the JSON schema
 they emit, and validates any committed ``BENCH_*.json`` against the same
 schema — so a schema break is caught before it lands.
+
+``--consolidate`` (also run at the end of ``--smoke``) folds the
+per-suite artifacts (``BENCH_kernels.json`` / ``BENCH_engine.json`` /
+``BENCH_api.json`` / ``BENCH_graph.json``) into ONE schema-guarded
+``BENCH.json`` trajectory, so perf history is machine-readable in one
+place: ``{"meta": ..., "sections": {name: {meta, rows}}}``.
 """
 from __future__ import annotations
 
@@ -29,6 +35,19 @@ API_ROW_KEYS = {
     "method", "resolved", "n", "n_edges", "wall_s", "n_ops",
     "cost_iterations", "residual", "converged",
 }
+GRAPH_ROW_KEYS = {
+    "n", "method", "n_edges", "churn_frac", "changed_edges", "f0_resid",
+    "warm_ops", "cold_ops", "ops_ratio", "patch_s", "rebuild_s",
+    "patch_speedup", "converged",
+}
+
+# one registry drives per-suite validation AND the BENCH.json merge
+BENCH_SECTIONS = {
+    "kernels": ("BENCH_kernels.json", KERNEL_ROW_KEYS),
+    "engine": ("BENCH_engine.json", ENGINE_ROW_KEYS),
+    "api": ("BENCH_api.json", API_ROW_KEYS),
+    "graph": ("BENCH_graph.json", GRAPH_ROW_KEYS),
+}
 
 
 def _validate_bench(payload: dict, required: set, name: str) -> None:
@@ -43,9 +62,50 @@ def _validate_bench(payload: dict, required: set, name: str) -> None:
     print(f"  {name}: {len(real)} measured rows, schema OK")
 
 
+def consolidate(out_path: str = "BENCH.json") -> dict:
+    """Merge the per-suite BENCH_*.json into one validated trajectory."""
+    sections = {}
+    for name, (path, keys) in BENCH_SECTIONS.items():
+        if not os.path.exists(path):
+            print(f"  {name}: {path} not present, section omitted")
+            continue
+        with open(path) as fh:
+            payload = json.load(fh)
+        _validate_bench(payload, keys, path)
+        sections[name] = payload
+    payload = {
+        "meta": {
+            "bench": "consolidated_perf_trajectory",
+            "sections_present": sorted(sections),
+            "section_files": {n: BENCH_SECTIONS[n][0] for n in sections},
+        },
+        "sections": sections,
+    }
+    if sections:
+        with open(out_path, "w") as fh:
+            json.dump(payload, fh, indent=1)
+        print(f"  wrote {out_path} ({len(sections)} sections)")
+    return payload
+
+
+def _validate_consolidated(path: str = "BENCH.json") -> None:
+    if not os.path.exists(path):
+        print(f"  {path} not present (perf trajectory not seeded yet)")
+        return
+    with open(path) as fh:
+        payload = json.load(fh)
+    assert isinstance(payload.get("meta"), dict), f"{path}: missing meta"
+    sections = payload.get("sections")
+    assert isinstance(sections, dict) and sections, (
+        f"{path}: missing sections")
+    for name, sec in sections.items():
+        assert name in BENCH_SECTIONS, f"{path}: unknown section {name!r}"
+        _validate_bench(sec, BENCH_SECTIONS[name][1], f"{path}:{name}")
+
+
 def smoke() -> int:
     """Fast end-to-end bench smoke + BENCH_*.json schema validation."""
-    from benchmarks import api_bench, engine_bench, kernel_bench
+    from benchmarks import api_bench, engine_bench, graph_bench, kernel_bench
 
     print("[smoke] frontier kernel sweep (tiny)")
     kp = kernel_bench.frontier_sweep(
@@ -62,18 +122,21 @@ def smoke() -> int:
                  if r.get("method") == "auto" and "skipped" not in r]
     assert auto_rows and auto_rows[0]["resolved"] != "auto", (
         "auto dispatch did not resolve to a concrete backend")
+    print("[smoke] graph delta-vs-cold bench (tiny)")
+    gp = graph_bench.main(smoke=True, out_path="BENCH_graph.smoke.json")
+    _validate_bench(gp, GRAPH_ROW_KEYS, "graph bench (smoke)")
+    warm_rows = [r for r in gp["rows"] if "skipped" not in r]
+    assert warm_rows and all(r["ops_ratio"] > 1.0 for r in warm_rows), (
+        "delta re-solve did not beat the cold solve")
     for tmp in ("BENCH_kernels.smoke.json", "BENCH_engine.smoke.json",
-                "BENCH_api.smoke.json"):
+                "BENCH_api.smoke.json", "BENCH_graph.smoke.json"):
         if os.path.exists(tmp):
             os.remove(tmp)
-    for path, keys in (("BENCH_kernels.json", KERNEL_ROW_KEYS),
-                       ("BENCH_engine.json", ENGINE_ROW_KEYS),
-                       ("BENCH_api.json", API_ROW_KEYS)):
-        if os.path.exists(path):
-            with open(path) as fh:
-                _validate_bench(json.load(fh), keys, path)
-        else:
-            print(f"  {path} not present (perf trajectory not seeded yet)")
+    # consolidate() validates each committed per-suite artifact as it
+    # merges them, then the merged BENCH.json is re-checked on disk
+    print("[smoke] committed artifacts -> consolidated trajectory")
+    consolidate()
+    _validate_consolidated()
     print("[smoke] OK")
     return 0
 
@@ -83,6 +146,10 @@ def main():
     full = "--full" in sys.argv
     if "--smoke" in sys.argv:
         return smoke()
+    if "--consolidate" in sys.argv:
+        consolidate()
+        _validate_consolidated()
+        return 0
     t0 = time.time()
     print("=" * 70)
     print("D-iteration dynamic-partition benchmark suite")

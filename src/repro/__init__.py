@@ -8,6 +8,8 @@ lazily here so ``import repro`` stays lightweight:
 """
 _API_NAMES = (
     "BackendCapabilities",
+    "GraphDelta",
+    "GraphStore",
     "Problem",
     "RoundReport",
     "SolveReport",

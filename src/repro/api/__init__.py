@@ -20,6 +20,8 @@ The historical entrypoints (``repro.core.diteration.solve_sequential``,
 ``DistributedSimulator`` / ``DistributedEngine`` remain the engine-room
 implementations behind the ``simulator`` / ``engine:*`` keys.
 """
+from repro.graph import GraphDelta, GraphStore
+
 from .options import SolverOptions
 from .problem import Problem
 from .registry import (
@@ -34,6 +36,8 @@ from .session import SolverSession
 
 __all__ = [
     "BackendCapabilities",
+    "GraphDelta",
+    "GraphStore",
     "Problem",
     "RoundReport",
     "SolveReport",

@@ -15,18 +15,32 @@ Constructors:
   with damping δ, optionally with a ``[N, C]`` personalization batch.
 * :meth:`Problem.linear` — wraps an arbitrary spectral-radius<1 system
   (the paper's general signed case, §2).
+
+Since the GraphStore refactor (DESIGN.md §7) a Problem *holds* the
+mutable substrate: ``problem.graph`` is the :class:`repro.graph.
+GraphStore` owning P, ``problem.p`` its (snapshot) CSR view.  Graph
+churn flows through :meth:`with_graph` /
+:meth:`repro.api.SolverSession.update_graph`.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Union
 
 import numpy as np
 
 from repro.core.diteration import default_weights
 from repro.core.graph import CSRGraph, pagerank_system
+from repro.graph import GraphStore
 
 __all__ = ["Problem"]
+
+
+def _as_store_and_csr(g) -> tuple:
+    """Normalize a GraphStore | CSRGraph into (store, csr_view)."""
+    if isinstance(g, GraphStore):
+        return g, g.csr()
+    return None, g  # store created lazily by Problem.graph
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,6 +64,8 @@ class Problem:
     b_batch: Optional[np.ndarray] = None  # [N, C] extra personalization RHS
     kind: str = "linear"  # "pagerank" | "linear" (provenance tag)
     damping: Optional[float] = None  # set for pagerank problems
+    store: Optional[GraphStore] = None  # the mutable substrate owning p
+    store_version: Optional[int] = None  # store.version this p snapshots
 
     def __post_init__(self):
         if self.b.shape != (self.p.n,):
@@ -74,8 +90,35 @@ class Problem:
                 f"b_batch must be [N, C] with N={self.p.n}, "
                 f"got {self.b_batch.shape}"
             )
+        if self.store is not None and self.store_version is None:
+            object.__setattr__(self, "store_version", self.store.version)
 
     # ---- derived ----------------------------------------------------------
+    @property
+    def graph(self) -> GraphStore:
+        """The mutable :class:`GraphStore` behind ``p`` (created lazily).
+
+        ``p`` stays the immutable CSR *snapshot* this Problem was
+        stated over; the store is where deltas apply
+        (:meth:`with_graph`, ``SolverSession.update_graph``).  A
+        Problem whose store was mutated WITHOUT re-snapshotting is
+        stale — its ``p``/``b`` no longer describe the store's matrix —
+        and raises here rather than silently solving a mixed system.
+        """
+        if self.store is None:
+            store = GraphStore.from_csr(self.p)
+            object.__setattr__(self, "store", store)
+            object.__setattr__(self, "store_version", store.version)
+        elif self.store.version != self.store_version:
+            raise ValueError(
+                f"stale Problem snapshot: its GraphStore advanced to "
+                f"version {self.store.version} but this Problem captured "
+                f"version {self.store_version}; re-snapshot with "
+                "problem.with_graph(store) (SolverSession.update_graph "
+                "does this for you)"
+            )
+        return self.store
+
     @property
     def n(self) -> int:
         return self.p.n
@@ -102,7 +145,7 @@ class Problem:
     # ---- constructors -----------------------------------------------------
     @staticmethod
     def pagerank(
-        g: CSRGraph,
+        g: Union[CSRGraph, GraphStore],
         damping: float = 0.85,
         target_error: Optional[float] = None,
         personalization: Optional[np.ndarray] = None,
@@ -115,7 +158,14 @@ class Problem:
         ``1/N`` (§3.1).  ``personalization`` is an optional ``[N, C]``
         matrix of preference distributions (columns); each becomes an
         extra RHS ``(1-damping) * pref_c`` for multi-RHS serving.
+
+        ``g`` is the raw *link* graph — a :class:`CSRGraph` or a
+        :class:`repro.graph.GraphStore` (e.g. from
+        ``GraphStore.from_edge_file``); the Problem's own ``store``
+        holds the derived diffusion matrix P.
         """
+        if isinstance(g, GraphStore):
+            g = g.csr()
         p, b = pagerank_system(g, damping=damping)
         te = target_error if target_error is not None else 1.0 / g.n
         b_batch = None
@@ -135,7 +185,7 @@ class Problem:
 
     @staticmethod
     def linear(
-        p: CSRGraph,
+        p: Union[CSRGraph, GraphStore],
         b: np.ndarray,
         eps: Optional[float] = None,
         rho: Optional[float] = None,
@@ -153,10 +203,12 @@ class Problem:
             raise ValueError("provide eps or rho (eps = 1 - rho)")
         if eps is None:
             eps = 1.0 - rho
+        store, p = _as_store_and_csr(p)
         return Problem(
             p=p, b=np.asarray(b, dtype=np.float64), eps=float(eps),
             target_error=float(target_error), weights=weights,
             weight_mode=weight_mode, b_batch=b_batch, kind="linear",
+            store=store,
         )
 
     def with_b(self, b_new: np.ndarray) -> "Problem":
@@ -164,3 +216,22 @@ class Problem:
         return dataclasses.replace(
             self, b=np.asarray(b_new, dtype=np.float64)
         )
+
+    def with_graph(self, graph: Union[GraphStore, CSRGraph]) -> "Problem":
+        """Same RHS/targets, new (or mutated) diffusion matrix.
+
+        The delta-re-solve twin of :meth:`with_b`: after
+        ``store.apply_delta(delta)``, ``problem.with_graph(store)``
+        re-snapshots ``p`` from the store's patched CSR view while
+        *sharing* the store (and all its incrementally patched backend
+        views).  ``SolverSession.update_graph`` routes through here.
+        """
+        store, p = _as_store_and_csr(graph)
+        if p.n != self.p.n:
+            raise ValueError(
+                f"with_graph cannot change N ({self.p.n} -> {p.n}); "
+                "state vectors B/H/F are node-indexed"
+            )
+        return dataclasses.replace(
+            self, p=p, store=store,
+            store_version=store.version if store is not None else None)

@@ -15,6 +15,10 @@ between machines; here it is what travels between *solves*:
 * ``solve_batch(B)`` — multi-RHS personalized PageRank via a vmapped
   frontier loop (per-column thresholds and convergence masks) over the
   shared edge list.
+* ``update_graph(delta)`` — keep (H, F), mutate P: the GraphStore
+  patches its views incrementally and the fluid re-seeds via
+  ``F' = F + (P'−P)·H`` (arXiv:1202.3108), so a churned graph
+  re-solves warm rather than cold (DESIGN.md §7).
 
 Drivers adapt one warm-startable backend each behind a tiny protocol
 (``seed`` / ``advance`` / ``x`` / ``residual`` / ``ops`` / ``rounds``);
@@ -176,13 +180,12 @@ class _BsrFrontierDriver:
     def __init__(self, problem: Problem, options: SolverOptions):
         import jax.numpy as jnp
 
-        from repro.kernels.diffusion import prepare_bsr
-
         g = problem.p
         self.n = g.n
         self.l = max(g.n_edges, 1)
-        self.m = prepare_bsr(g.indptr, g.indices, g.weights, g.n,
-                             bs=options.bs)
+        # the store's cached BSR view: graph deltas patch dirty tiles
+        # in place, so a post-update rebuild re-uploads — not re-tiles
+        self.m = problem.graph.bsr(bs=options.bs).to_device()
         n_pad = self.m.n_row_blocks * options.bs
         dt = self.m.blocks.dtype
         pad = lambda v, t: jnp.zeros(n_pad, dtype=t).at[: g.n].set(
@@ -323,7 +326,10 @@ class _EngineDriver:
             diffusion_backend=diffusion_backend,
             pallas_interpret=options.interpret,
         )
-        self.arrays = build_engine_arrays(problem.p, problem.b, self.cfg)
+        # the store's cached engine-layout view: graph deltas patch
+        # dirty bucket rows / tiles in place before we land here
+        self.arrays = build_engine_arrays(problem.graph, problem.b,
+                                          self.cfg)
         self.engine = DistributedEngine(self.arrays, self.cfg)
         self.l = max(problem.n_edges, 1)
         self._seeded = False
@@ -380,6 +386,44 @@ class _EngineDriver:
 
     def move_log(self) -> List[Tuple[int, int, int, int]]:
         return list(self._moves)
+
+    def note_graph_churn(self, churn_per_node: np.ndarray) -> None:
+        """Feed edge churn to the balance control plane.
+
+        The paper's thesis applied to graph drift: the controller needs
+        only a per-PID load magnitude, never the structure.  Per-node
+        changed-edge counts are mapped onto owning devices through the
+        current bucket layout and run through one rebalancer pass as a
+        ``graph-churn`` :class:`LoadSignal`, so a device absorbing the
+        churn can shed buckets *before* the delta re-solve starts.
+        """
+        from repro.balance.signals import LoadSignal
+
+        eng = self.engine
+        if eng.rebalancer is None:
+            return
+        a = eng.a
+        churn = np.asarray(churn_per_node, dtype=np.int64)
+        valid = a.node_of_slot >= 0
+        row_churn = np.zeros(a.n_rows, dtype=np.int64)
+        rows = np.broadcast_to(
+            np.arange(a.n_rows)[:, None], a.node_of_slot.shape)
+        np.add.at(row_churn, rows[valid], churn[a.node_of_slot[valid]])
+        b_loc = self.cfg.buckets_per_dev
+        dev_churn = np.zeros(self.cfg.k, dtype=np.float64)
+        for bid in range(a.n_rows):
+            home = int(a.pos_of_bucket[bid])  # node map lives at home row
+            cur = int(self.ex.row_of_bucket[bid])  # data owner now
+            dev_churn[cur // b_loc] += row_churn[home]
+        if dev_churn.sum() == 0:
+            return
+        sig = LoadSignal.from_graph_churn(dev_churn, self.ex.sizes(),
+                                          step=self._chunks)
+        for plan in eng.rebalancer.propose(sig):
+            moved = self.ex.apply(plan)
+            if moved:
+                self._moves.append((self._chunks, plan.src, plan.dst,
+                                    moved))
 
 
 _DRIVERS = {
@@ -453,6 +497,19 @@ class SolverSession:
         te = until if until is not None else self.problem.target_error
         return te * self.problem.eps
 
+    def _check_fresh(self) -> None:
+        """Refuse to run over a stale graph snapshot.
+
+        Views are patched IN PLACE by ``GraphStore.apply_delta``, so a
+        second session sharing the store would otherwise mix patched
+        device arrays with its pre-delta (P, B, H) state.  Touching
+        ``problem.graph`` raises the store-version mismatch; sessions
+        that never materialized a store skip the check (nothing
+        shared, nothing to go stale).
+        """
+        if self.problem.store is not None:
+            self.problem.graph
+
     # ---- streaming solve --------------------------------------------------
     def run(self, until: Optional[float] = None,
             max_rounds: Optional[int] = None) -> Iterator[RoundReport]:
@@ -460,6 +517,7 @@ class SolverSession:
         :class:`RoundReport` per trace grain (``options.trace_every``
         frontier rounds / one engine chunk).  The final yielded report
         is the converged (or budget-exhausted) state."""
+        self._check_fresh()
         tol = self._tol(until)
         cap = max_rounds if max_rounds is not None else (
             self.options.max_rounds)
@@ -505,6 +563,7 @@ class SolverSession:
         ``run``/``solve`` charges correspondingly few edge pushes.
         Phase counters (ops, rounds, trace) reset to zero.
         """
+        self._check_fresh()
         b_new = np.asarray(b_new, dtype=np.float64)
         if b_new.shape != (self.problem.n,):
             raise ValueError(
@@ -520,6 +579,49 @@ class SolverSession:
         self.problem = self.problem.with_b(b_new)
         return float(np.abs(f_new).sum())
 
+    # ---- graph delta (the F' = F + (P'−P)·H update) -----------------------
+    def update_graph(self, delta) -> float:
+        """Apply edge churn to the Problem's GraphStore and re-seed warm.
+
+        The asynchronous-scheme companions (arXiv:1202.3108,
+        arXiv:1301.3007) show the fluid pair survives matrix drift:
+        ``F' = F + (P'−P)·H``.  We evaluate it through the invariant
+        ``F = B − (I−P)·H`` — i.e. ``F' = B − H + P'·H`` over the
+        *patched* matrix — so the cost is the store's dirty-view patch
+        plus one O(L) product, and the follow-up ``run``/``solve``
+        drains only the churn-injected fluid instead of restarting
+        cold.  Routed through :meth:`Problem.with_graph`; on engine
+        backends the churn also feeds the balance control plane as a
+        ``graph-churn`` LoadSignal.  Phase counters reset; returns
+        ``|F'|_1``.
+        """
+        from repro.graph import GraphDelta
+
+        if not isinstance(delta, GraphDelta):
+            raise TypeError(
+                f"update_graph wants a GraphDelta, got "
+                f"{type(delta).__name__}"
+            )
+        h = self._driver.x()
+        if delta.is_empty:
+            return self._driver.residual()
+        store = self.problem.graph
+        store.apply_delta(delta)  # patches every materialized view
+        self.problem = self.problem.with_graph(store)
+        src, dst, w = self.problem.p.edge_list()
+        self._edges = (src, dst, w)
+        ph = np.bincount(dst, weights=h[src] * w, minlength=self.problem.n)
+        f_new = self._b - h + ph
+        # fresh driver over the PATCHED views (cache hits inside the
+        # store: tiles/buckets/rows were spliced, not rebuilt)
+        self._driver = _DRIVERS[self.method](self.problem, self.options)
+        self._driver.seed(f_new, h)
+        if isinstance(self._driver, _EngineDriver):
+            self._driver.note_graph_churn(
+                delta.churn_per_node(self.problem.n))
+        self._batch_driver = None  # edge list went stale
+        return float(np.abs(f_new).sum())
+
     # ---- batched multi-RHS ------------------------------------------------
     def solve_batch(self, b_matrix: np.ndarray,
                     until: Optional[float] = None) -> SolveReport:
@@ -530,6 +632,7 @@ class SolverSession:
         batch serving path is frontier-native by design (DESIGN.md §4).
         The session's own (H, F) state is untouched.
         """
+        self._check_fresh()
         b_matrix = np.asarray(b_matrix, dtype=np.float64)
         if b_matrix.ndim != 2 or b_matrix.shape[0] != self.problem.n:
             raise ValueError(

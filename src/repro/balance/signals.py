@@ -12,6 +12,7 @@ residual        r_k + s_k (fluid left + in flight)     node / bucket
 edge-ops        edge operations charged this window    node / bucket
 step-time       wall-clock seconds of worker k's step  device
 expert-tokens   tokens routed to expert shard k        expert-shard
+graph-churn     changed edges owned by worker k        node / bucket
 ==============  =====================================  ==============
 
 The convention throughout: **larger value = slower / more loaded
@@ -28,7 +29,8 @@ import numpy as np
 
 __all__ = ["LoadSignal", "SIGNAL_KINDS"]
 
-SIGNAL_KINDS = ("residual", "edge-ops", "step-time", "expert-tokens")
+SIGNAL_KINDS = ("residual", "edge-ops", "step-time", "expert-tokens",
+                "graph-churn")
 
 
 @dataclasses.dataclass
@@ -97,6 +99,23 @@ class LoadSignal:
             load_units = np.full(seconds.shape[0], 1 << 20)
         return cls(values=seconds / seconds.sum(), sizes=load_units,
                    kind="step-time", step=step)
+
+    @classmethod
+    def from_graph_churn(cls, churn_counts: np.ndarray,
+                         sizes: np.ndarray, step: int = 0) -> "LoadSignal":
+        """Changed-edge counts per worker after a graph delta.
+
+        A worker whose nodes absorb the churn pays the view-patch work
+        *and* re-diffuses the injected fluid ``(P'−P)·H`` — the paper's
+        thesis applied to graph drift: the controller needs only this
+        magnitude, no structural analysis.  Counts are normalized to
+        fractions (see :meth:`from_step_times` for why).
+        """
+        churn = np.maximum(np.asarray(churn_counts, np.float64), 0.0)
+        total = churn.sum()
+        if total > 0:
+            churn = churn / total
+        return cls(values=churn, sizes=sizes, kind="graph-churn", step=step)
 
     @classmethod
     def from_expert_counts(cls, token_counts: np.ndarray,

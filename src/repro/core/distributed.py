@@ -6,7 +6,8 @@ mapped onto JAX-native constructs:
 
 * **shard_map over a ``pid`` device axis** — each device plays one PID.
 * **Bucket-granular state** — nodes are packed into fixed-size buckets
-  (:func:`repro.core.graph.bucketize`); every device owns a *fixed* number of
+  (the ``GraphStore`` engine-layout view, DESIGN.md §7, which graph
+  deltas patch row-by-row); every device owns a *fixed* number of
   bucket rows (static shapes), some of which are inert headroom.  The
   :mod:`repro.balance` control plane moves whole buckets between devices
   (``MovePlan`` kind ``bucket`` executed by ``BucketMoveExecutor``) by
@@ -46,8 +47,7 @@ from repro.balance.policies import Rebalancer, make_rebalancer
 from repro.balance.signals import LoadSignal
 from repro.parallel.compat import shard_map
 
-from .graph import BucketedGraph, CSRGraph, bucketize
-from .diteration import default_weights
+from .graph import CSRGraph  # noqa: F401  (public signature type)
 
 __all__ = [
     "EngineConfig",
@@ -132,79 +132,47 @@ class EngineArrays:
 
 
 def build_engine_arrays(
-    g: CSRGraph,
+    g,
     b: np.ndarray,
     cfg: EngineConfig,
     order: Optional[np.ndarray] = None,
 ) -> EngineArrays:
     """Bucketize (P, B) into the engine's fixed-shape layout.
 
+    ``g`` is a :class:`repro.graph.GraphStore` or a :class:`CSRGraph`
+    (wrapped into a throwaway store).  The graph-derived half comes
+    from the store's cached **engine-layout view** — so after
+    ``store.apply_delta`` only dirty rows/tiles were recomputed — and
+    only the RHS-dependent ``f0`` is materialized here.
+
     Real buckets fill ``buckets_per_dev - headroom`` rows per device; the
     remaining rows are inert landing slots for dynamic bucket moves.
     """
-    real_per_dev = cfg.buckets_per_dev - cfg.headroom
-    assert real_per_dev >= 1, "headroom must leave >=1 real bucket per device"
-    n_real = cfg.k * real_per_dev
-    bg: BucketedGraph = bucketize(g, n_real, order=order)
-    s = bg.bucket_size
-    e = bg.edge_cap
-    r = cfg.k * cfg.buckets_per_dev
+    from repro.graph import GraphStore
 
-    f0 = np.zeros((r, s), dtype=np.float64)
-    w = np.zeros((r, s), dtype=np.float64)
-    node_of_slot = np.full((r, s), -1, dtype=np.int32)
-    src_slot = np.zeros((r, e), dtype=np.int32)
-    dst_bucket = np.zeros((r, e), dtype=np.int32)
-    dst_slot = np.zeros((r, e), dtype=np.int32)
-    wgt = np.zeros((r, e), dtype=np.float64)
-    pos_of_bucket = np.zeros(r, dtype=np.int32)
-
-    wnode = default_weights(g)
-    for d in range(cfg.k):
-        for j in range(real_per_dev):
-            bid = d * real_per_dev + j  # stable bucket id
-            row = d * cfg.buckets_per_dev + j  # initial row position
-            pos_of_bucket[bid] = row
-            nos = bg.node_of_slot[bid]
-            node_of_slot[row] = nos
-            valid = nos >= 0
-            f0[row, valid] = b[nos[valid]]
-            w[row, valid] = wnode[nos[valid]]
-            src_slot[row] = bg.src_slot[bid]
-            dst_bucket[row] = bg.dst[bid] // s  # stable id (identity layout)
-            dst_slot[row] = bg.dst[bid] % s
-            wgt[row] = bg.wgt[bid]
-    # inert bucket ids n_real..r-1 occupy the headroom rows, in order
-    inert_rows = [
-        d * cfg.buckets_per_dev + j
-        for d in range(cfg.k)
-        for j in range(real_per_dev, cfg.buckets_per_dev)
-    ]
-    for bid, row in zip(range(n_real, r), inert_rows):
-        pos_of_bucket[bid] = row
-    tiles = tile_dst = slot_out_deg = None
-    if cfg.diffusion_backend != "segment_sum":
-        tiles, tile_dst = _tile_engine_edges(
-            src_slot, dst_bucket, dst_slot, wgt, s, np.dtype(cfg.dtype)
-        )
-        slot_out_deg = np.zeros((r, s), dtype=np.int32)
-        rows_e = np.broadcast_to(np.arange(r)[:, None], src_slot.shape)
-        real = wgt != 0
-        np.add.at(slot_out_deg, (rows_e[real], src_slot[real]), 1)
+    store = g if isinstance(g, GraphStore) else GraphStore.from_csr(g)
+    lay = store.engine_layout(
+        cfg.k, cfg.buckets_per_dev, cfg.headroom,
+        tiled=cfg.diffusion_backend != "segment_sum",
+        dtype=np.dtype(cfg.dtype), order=order,
+    )
+    f0 = np.zeros((lay.n_rows, lay.bucket_size), dtype=np.float64)
+    valid = lay.node_of_slot >= 0
+    f0[valid] = np.asarray(b, dtype=np.float64)[lay.node_of_slot[valid]]
     return EngineArrays(
-        tiles=tiles,
-        tile_dst=tile_dst,
-        slot_out_deg=slot_out_deg,
+        tiles=lay.tiles,
+        tile_dst=lay.tile_dst,
+        slot_out_deg=lay.slot_out_deg,
         f0=f0,
-        w=w,
-        src_slot=src_slot,
-        dst_bucket=dst_bucket,
-        dst_slot=dst_slot,
-        wgt=wgt,
-        pos_of_bucket=pos_of_bucket,
-        node_of_slot=node_of_slot,
-        n=g.n,
-        n_edges=g.n_edges,
+        w=lay.w,
+        src_slot=lay.src_slot,
+        dst_bucket=lay.dst_bucket,
+        dst_slot=lay.dst_slot,
+        wgt=lay.wgt,
+        pos_of_bucket=lay.pos_of_bucket,
+        node_of_slot=lay.node_of_slot,
+        n=lay.n,
+        n_edges=lay.n_edges,
     )
 
 

@@ -14,6 +14,15 @@ Two layouts:
   production distributed engine and the Pallas diffusion kernel (static
   shapes, bucket-granular dynamic repartition).
 
+Since the GraphStore refactor (DESIGN.md §7) both are *views* of
+:class:`repro.graph.GraphStore`, the one mutable substrate every
+backend derives its representation from: ``store.csr()`` returns a
+:class:`CSRGraph`; :func:`bucketize` delegates to the store's bucketed
+view builder.  The dataclasses stay as the stable container types (and
+as the deprecated direct-construction path for code that never needs
+``apply_delta``); new code should build a ``GraphStore`` and ask it for
+views so graph churn patches them incrementally.
+
 Generators reproduce the paper's synthetic data (§3.1: power-law 1/k^alpha for
 in- and out-degree, alpha = 1.5) and a web-graph stand-in matched to Table 4
 (L/N ratio, dangling-node fraction) for the offline uk-2007-05 substitution.
@@ -72,11 +81,16 @@ class CSRGraph:
 
     # ---- conversions ---------------------------------------------------------
     def to_dense(self) -> np.ndarray:
-        """Dense P with P[j, i] = weight of edge i -> j.  Small graphs only."""
+        """Dense P with P[j, i] = weight of edge i -> j.  Small graphs only.
+
+        Parallel edges accumulate (np.add.at — the same summation every
+        solver's scatter applies; fancy ``+=`` would silently drop
+        duplicates).
+        """
         p = np.zeros((self.n, self.n), dtype=np.float64)
         for i in range(self.n):
             js, ws = self.out_neighbors(i)
-            p[js, i] += ws
+            np.add.at(p, (js, np.full(js.size, i)), ws)
         return p
 
     def edge_list(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -178,55 +192,15 @@ def bucketize(
     buckets have roughly equal edge counts).  Edge buffers are sized to the
     max per-bucket edge count (padded elsewhere) — per-bucket skew is exactly
     what the dynamic controller then balances at runtime.
+
+    Deprecated alias over the GraphStore bucketed-view builder
+    (:func:`repro.graph.views.build_bucketed`); prefer
+    ``GraphStore.bucketed(n_buckets)`` which additionally keeps the
+    view patched under :meth:`~repro.graph.GraphStore.apply_delta`.
     """
-    if order is None:
-        order = np.arange(g.n, dtype=np.int64)
-    bucket_size = -(-g.n // n_buckets)  # ceil
-    n_slots = n_buckets * bucket_size
+    from repro.graph.views import build_bucketed
 
-    node_of_slot = np.full(n_slots, -1, dtype=np.int32)
-    node_of_slot[: g.n] = order
-    node_of_slot = node_of_slot.reshape(n_buckets, bucket_size)
-
-    slot_of_node = np.empty(g.n, dtype=np.int32)
-    slot_of_node[order] = np.arange(g.n, dtype=np.int32)
-
-    out_deg_per_node = g.out_degree()
-    out_deg = np.zeros((n_buckets, bucket_size), dtype=np.int32)
-    flat_nodes = node_of_slot.reshape(-1)
-    valid = flat_nodes >= 0
-    out_deg.reshape(-1)[valid] = out_deg_per_node[flat_nodes[valid]]
-
-    # per-bucket edge buffers
-    per_bucket_edges = out_deg.sum(axis=1)
-    edge_cap = max(1, int(per_bucket_edges.max()))
-    src_slot = np.zeros((n_buckets, edge_cap), dtype=np.int32)
-    dst = np.zeros((n_buckets, edge_cap), dtype=np.int32)
-    wgt = np.zeros((n_buckets, edge_cap), dtype=np.float32)
-    for b in range(n_buckets):
-        cursor = 0
-        for s in range(bucket_size):
-            node = node_of_slot[b, s]
-            if node < 0:
-                continue
-            js, ws = g.out_neighbors(int(node))
-            m = len(js)
-            if m == 0:
-                continue
-            src_slot[b, cursor : cursor + m] = s
-            dst[b, cursor : cursor + m] = slot_of_node[js]
-            wgt[b, cursor : cursor + m] = ws
-            cursor += m
-    return BucketedGraph(
-        node_of_slot=node_of_slot,
-        slot_of_node=slot_of_node,
-        src_slot=src_slot,
-        dst=dst,
-        wgt=wgt,
-        out_deg=out_deg,
-        n=g.n,
-        n_edges=g.n_edges,
-    )
+    return build_bucketed(g, n_buckets, order=order)
 
 
 # ------------------------------------------------------------------------------

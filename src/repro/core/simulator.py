@@ -141,8 +141,12 @@ class DistributedSimulator:
     ``cfg.dynamic`` flag, which means the paper-exact ``slope_ema``).
     """
 
-    def __init__(self, g: CSRGraph, b: np.ndarray, cfg: SimulatorConfig,
+    def __init__(self, g, b: np.ndarray, cfg: SimulatorConfig,
                  rebalancer: Optional[Rebalancer] = None):
+        # the simulator reads the CSR view of the shared substrate; a
+        # GraphStore (DESIGN.md §7) is accepted directly
+        if not isinstance(g, CSRGraph):
+            g = g.csr()
         if cfg.signal not in ("residual", "edge-ops"):
             raise ValueError(
                 f"unknown rebalancing signal {cfg.signal!r}; expected "

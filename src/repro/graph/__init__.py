@@ -1,0 +1,21 @@
+"""One mutable, partition-aware sparse substrate behind every backend.
+
+:class:`GraphStore` owns the canonical out-adjacency CSR and derives
+each backend's representation as a cached view (CSR, frontier BSR tile
+pool + occupancy map, bucketed/slotted layout, engine layout with
+stable-id tiles); :class:`GraphDelta` describes edge churn and
+:meth:`GraphStore.apply_delta` patches every materialized view
+incrementally (dirty tiles / buckets / rows only).  See DESIGN.md §7.
+"""
+from .delta import GraphDelta, pagerank_edge_churn, rotation_churn
+from .store import GraphStore
+from .views import BsrTiles, EngineLayout
+
+__all__ = [
+    "BsrTiles",
+    "EngineLayout",
+    "GraphDelta",
+    "GraphStore",
+    "pagerank_edge_churn",
+    "rotation_churn",
+]

@@ -1,0 +1,575 @@
+"""View builders + incremental patchers over the canonical CSR.
+
+Every backend representation the solvers consume is derived here from
+one canonical out-adjacency CSR (edges sorted by ``(src, dst)``,
+deduplicated) and can be *patched* under a :class:`~repro.graph.delta.
+GraphDelta` instead of rebuilt:
+
+* **CSR splice** (:func:`splice_csr`) — remove/insert/reweight rows of
+  the canonical arrays keeping the ``(src, dst)`` order, so the result
+  is bit-identical to a from-scratch build over the mutated edge list.
+* **BSR tile pool** (:class:`BsrTiles`) — the frontier kernel's operand;
+  the patcher rewrites only *dirty tiles* (block keys containing a
+  changed edge), drops tiles that empty out, inserts new ones in key
+  order, and refreshes the block-row occupancy map.
+* **Bucketed layout** (:func:`build_bucketed` / :func:`patch_bucketed`)
+  — the engine's slotted layout; only buckets owning a changed source
+  node are rewritten (edge capacity re-derived; a capacity change
+  re-pads but still only dirty buckets are recomputed).
+* **Engine layout** (:class:`EngineLayout`) — the graph-derived half of
+  ``EngineArrays`` (everything but the RHS-dependent ``f0``), including
+  the stable-id BSR tile pool of ``diffusion_backend="bsr"``; dirty
+  rows follow dirty buckets.
+
+Each patcher is bit-identical to its from-scratch builder by
+construction — enforced by the tier-2 ``graph-update-parity`` CI job
+(tests/test_graph_store.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from .delta import GraphDelta, edge_keys as _edge_keys
+
+__all__ = [
+    "BsrTiles",
+    "EngineLayout",
+    "build_canonical_csr",
+    "splice_csr",
+    "build_bsr",
+    "patch_bsr",
+    "build_bucketed",
+    "patch_bucketed",
+    "build_engine_layout",
+    "patch_engine_layout",
+]
+
+
+# --------------------------------------------------------------------------- #
+# canonical CSR
+# --------------------------------------------------------------------------- #
+def build_canonical_csr(
+    src: np.ndarray, dst: np.ndarray, w: np.ndarray, n: int
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(indptr, indices, weights) sorted by (src, dst).
+
+    Parallel (src, dst) entries are merged by summing their weights —
+    the same multigraph semantics as ``CSRGraph.to_dense`` — so any
+    legacy multigraph CSR canonicalizes to an equivalent simple graph.
+    """
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    w = np.asarray(w, dtype=np.float64)
+    order = np.lexsort((dst, src))
+    src, dst, w = src[order], dst[order], w[order]
+    keys = _edge_keys(src, dst)
+    if keys.size:
+        first = np.ones(keys.size, dtype=bool)
+        first[1:] = keys[1:] != keys[:-1]
+        if not first.all():
+            w = np.add.reduceat(w, np.nonzero(first)[0])
+            src, dst = src[first], dst[first]
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.add.at(indptr, src + 1, 1)
+    np.cumsum(indptr, out=indptr)
+    return indptr, dst.astype(np.int32), w
+
+
+def splice_csr(
+    indptr: np.ndarray,
+    indices: np.ndarray,
+    weights: np.ndarray,
+    n: int,
+    delta: GraphDelta,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Apply ``delta`` to canonical CSR arrays; returns fresh arrays.
+
+    Keeps the (src, dst) sort order, so the result is bit-identical to
+    :func:`build_canonical_csr` over the mutated edge list.  Raises
+    when an added edge already exists or a removed/reweighted one
+    does not.
+    """
+    edge_src = np.repeat(np.arange(n, dtype=np.int64), np.diff(indptr))
+    keys = _edge_keys(edge_src, indices.astype(np.int64))
+    weights = weights.copy()
+
+    def locate(pairs: np.ndarray, what: str) -> np.ndarray:
+        pk = _edge_keys(pairs[:, 0], pairs[:, 1])
+        pos = np.searchsorted(keys, pk)
+        ok = (pos < keys.size) if keys.size else np.zeros(pk.size, bool)
+        if keys.size:
+            ok &= keys[np.minimum(pos, keys.size - 1)] == pk
+        if not ok.all():
+            bad = pairs[~ok][0]
+            raise ValueError(
+                f"{what} edge ({bad[0]}, {bad[1]}) does not exist")
+        return pos
+
+    if delta.reweighted.shape[0]:
+        weights[locate(delta.reweighted, "reweighted")] = delta.reweighted_w
+    keep = np.ones(keys.size, dtype=bool)
+    if delta.removed.shape[0]:
+        keep[locate(delta.removed, "removed")] = False
+    kept_keys = keys[keep]
+    kept_idx = indices[keep]
+    kept_w = weights[keep]
+    kept_src = edge_src[keep]
+    if delta.added.shape[0]:
+        if (delta.added >= n).any() or (delta.added < 0).any():
+            raise ValueError("added edge endpoint out of range")
+        aorder = np.lexsort((delta.added[:, 1], delta.added[:, 0]))
+        apairs = delta.added[aorder]
+        aw = delta.added_w[aorder]
+        ak = _edge_keys(apairs[:, 0], apairs[:, 1])
+        pos = np.searchsorted(keys, ak)
+        exists = ((pos < keys.size)
+                  & (keys[np.minimum(pos, keys.size - 1)] == ak)
+                  if keys.size else np.zeros(ak.size, bool))
+        if exists.any():
+            bad = apairs[exists][0]
+            raise ValueError(
+                f"added edge ({bad[0]}, {bad[1]}) already exists "
+                "(use reweighted)")
+        ins = np.searchsorted(kept_keys, ak)
+        new_idx = np.insert(kept_idx, ins, apairs[:, 1].astype(np.int32))
+        new_w = np.insert(kept_w, ins, aw)
+        new_src = np.insert(kept_src, ins, apairs[:, 0])
+    else:
+        new_idx, new_w, new_src = kept_idx, kept_w, kept_src
+    new_indptr = np.zeros(n + 1, dtype=np.int64)
+    np.add.at(new_indptr, new_src + 1, 1)
+    np.cumsum(new_indptr, out=new_indptr)
+    return new_indptr, new_idx, new_w
+
+
+# --------------------------------------------------------------------------- #
+# BSR tile view (frontier kernel operand)
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class BsrTiles:
+    """Host-side BSR of P: sorted block keys + the occupancy map.
+
+    ``blocks[t]`` is the dense ``[bs, bs]`` tile of block row
+    ``block_row[t]`` / block column ``block_col[t]`` with tiles sorted
+    by ``block_row * nb + block_col`` (the :func:`repro.kernels.
+    diffusion.ref.csr_to_bsr` layout).  ``row_occupied`` is the
+    frontier path's block-row occupancy map (rows owning no tile skip
+    the kernel's output epilogue).
+    """
+
+    blocks: np.ndarray  # [n_blocks, bs, bs] float32
+    block_row: np.ndarray  # [n_blocks] int32
+    block_col: np.ndarray  # [n_blocks] int32
+    n_row_blocks: int
+    bs: int
+
+    @property
+    def n_blocks(self) -> int:
+        return int(self.blocks.shape[0])
+
+    @property
+    def row_occupied(self) -> np.ndarray:
+        occ = np.zeros(self.n_row_blocks, dtype=bool)
+        occ[self.block_row] = True
+        return occ
+
+    def keys(self) -> np.ndarray:
+        return (self.block_row.astype(np.int64) * self.n_row_blocks
+                + self.block_col.astype(np.int64))
+
+    def to_device(self):
+        """Wrap as the kernel-facing :class:`BsrMatrix` (device arrays)."""
+        from repro.kernels.diffusion import BsrMatrix
+
+        return BsrMatrix(self.blocks, self.block_row, self.block_col,
+                         self.n_row_blocks, self.bs)
+
+
+def build_bsr(indptr, indices, weights, n: int, bs: int) -> BsrTiles:
+    from repro.kernels.diffusion.ref import csr_to_bsr
+
+    blocks, br, bc, nrb = csr_to_bsr(
+        np.asarray(indptr), np.asarray(indices), np.asarray(weights), n, bs)
+    return BsrTiles(blocks=blocks, block_row=br, block_col=bc,
+                    n_row_blocks=nrb, bs=bs)
+
+
+def _bsr_tile_from_csr(indptr, indices, weights, n, bs, br, bc):
+    """Rebuild one [bs, bs] tile (block row br, block col bc) from CSR."""
+    lo_node = bc * bs
+    hi_node = min((bc + 1) * bs, n)
+    lo, hi = indptr[lo_node], indptr[hi_node]
+    dst = indices[lo:hi].astype(np.int64)
+    m = (dst // bs) == br
+    tile = np.zeros((bs, bs), dtype=np.float32)
+    if m.any():
+        src = np.repeat(
+            np.arange(lo_node, hi_node, dtype=np.int64),
+            np.diff(indptr[lo_node:hi_node + 1]))
+        # identical accumulate-into-f32 op as csr_to_bsr (bit parity)
+        tile[dst[m] % bs, src[m] % bs] += weights[lo:hi][m]
+    return tile
+
+
+def patch_bsr(view: BsrTiles, indptr, indices, weights, n: int,
+              delta: GraphDelta) -> BsrTiles:
+    """Rewrite only the dirty tiles of ``view`` for the PATCHED csr.
+
+    Dirty tiles = block keys containing any changed edge.  Tiles that
+    become all-zero are dropped (matching a from-scratch build); new
+    nonzero tiles are inserted in key order.
+    """
+    bs, nb = view.bs, view.n_row_blocks
+    src, dst = delta.touched_edges()
+    if src.size == 0:
+        return view
+    dirty = np.unique((dst // bs) * nb + (src // bs))
+    old_keys = view.keys()
+    clean = ~np.isin(old_keys, dirty)
+    # a view built over ZERO edges is one all-zero placeholder tile
+    # (csr_to_bsr's degenerate form), not a real tile — never carry it
+    # into a merge.  Detected exactly via the pre-patch edge count (a
+    # genuine zero-weight edge's tile is indistinguishable by bytes).
+    n_pre = int(indptr[-1]) - delta.added.shape[0] + delta.removed.shape[0]
+    if n_pre == 0:
+        clean[:] = False
+    new_blocks = [view.blocks[clean]]
+    new_keys = [old_keys[clean]]
+    for key in dirty:
+        br, bc = int(key // nb), int(key % nb)
+        tile = _bsr_tile_from_csr(indptr, indices, weights, n, bs, br, bc)
+        if np.any(tile):
+            new_blocks.append(tile[None])
+            new_keys.append(np.array([key], dtype=np.int64))
+    blocks = np.concatenate(new_blocks, axis=0)
+    keys = np.concatenate(new_keys)
+    order = np.argsort(keys)
+    blocks, keys = blocks[order], keys[order]
+    if keys.size == 0:  # degenerate all-zero matrix, csr_to_bsr's form
+        blocks = np.zeros((1, bs, bs), dtype=np.float32)
+        keys = np.zeros(1, dtype=np.int64)
+    return BsrTiles(
+        blocks=blocks,
+        block_row=(keys // nb).astype(np.int32),
+        block_col=(keys % nb).astype(np.int32),
+        n_row_blocks=nb, bs=bs,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# bucketed view (engine slotted layout)
+# --------------------------------------------------------------------------- #
+def _fill_bucket_row(bg, b: int, indptr, indices, weights) -> None:
+    """Rewrite bucket ``b``'s edge buffer + out_deg from (patched) CSR."""
+    bg.src_slot[b] = 0
+    bg.dst[b] = 0
+    bg.wgt[b] = 0.0
+    cursor = 0
+    for s in range(bg.bucket_size):
+        node = bg.node_of_slot[b, s]
+        if node < 0:
+            bg.out_deg[b, s] = 0
+            continue
+        lo, hi = indptr[node], indptr[node + 1]
+        m = int(hi - lo)
+        bg.out_deg[b, s] = m
+        if m == 0:
+            continue
+        bg.src_slot[b, cursor:cursor + m] = s
+        bg.dst[b, cursor:cursor + m] = bg.slot_of_node[indices[lo:hi]]
+        bg.wgt[b, cursor:cursor + m] = weights[lo:hi]
+        cursor += m
+
+
+def build_bucketed(csr_graph, n_buckets: int,
+                   order: Optional[np.ndarray] = None):
+    """The historical :func:`repro.core.graph.bucketize`, housed here."""
+    from repro.core.graph import BucketedGraph
+
+    g = csr_graph
+    if order is None:
+        order = np.arange(g.n, dtype=np.int64)
+    bucket_size = -(-g.n // n_buckets)  # ceil
+    n_slots = n_buckets * bucket_size
+
+    node_of_slot = np.full(n_slots, -1, dtype=np.int32)
+    node_of_slot[: g.n] = order
+    node_of_slot = node_of_slot.reshape(n_buckets, bucket_size)
+
+    slot_of_node = np.empty(g.n, dtype=np.int32)
+    slot_of_node[order] = np.arange(g.n, dtype=np.int32)
+
+    out_deg_per_node = g.out_degree()
+    out_deg = np.zeros((n_buckets, bucket_size), dtype=np.int32)
+    flat_nodes = node_of_slot.reshape(-1)
+    valid = flat_nodes >= 0
+    out_deg.reshape(-1)[valid] = out_deg_per_node[flat_nodes[valid]]
+
+    per_bucket_edges = out_deg.sum(axis=1)
+    edge_cap = max(1, int(per_bucket_edges.max()))
+    bg = BucketedGraph(
+        node_of_slot=node_of_slot,
+        slot_of_node=slot_of_node,
+        src_slot=np.zeros((n_buckets, edge_cap), dtype=np.int32),
+        dst=np.zeros((n_buckets, edge_cap), dtype=np.int32),
+        wgt=np.zeros((n_buckets, edge_cap), dtype=np.float32),
+        out_deg=out_deg,
+        n=g.n,
+        n_edges=g.n_edges,
+    )
+    for b in range(n_buckets):
+        _fill_bucket_row(bg, b, g.indptr, g.indices, g.weights)
+    return bg
+
+
+def patch_bucketed(bg, indptr, indices, weights, n_edges: int,
+                   delta: GraphDelta):
+    """Rewrite only the buckets owning a changed source node.
+
+    Edge capacity is re-derived from the patched out-degrees; if it
+    changes, buffers are re-padded (clean buckets copied, dirty ones
+    rebuilt) — the result is always bit-identical to
+    :func:`build_bucketed` on the patched graph.
+    """
+    changed = delta.touched_sources()
+    if changed.size == 0:
+        return bg
+    s = bg.bucket_size
+    dirty_buckets = np.unique(bg.slot_of_node[changed] // s)
+    # patched out-degrees for changed nodes
+    new_deg = (indptr[changed + 1] - indptr[changed]).astype(np.int32)
+    flat = bg.out_deg.reshape(-1)
+    flat[bg.slot_of_node[changed]] = new_deg
+    per_bucket = bg.out_deg.sum(axis=1)
+    new_cap = max(1, int(per_bucket.max()))
+    if new_cap != bg.edge_cap:
+        keep = min(new_cap, bg.edge_cap)
+        for name in ("src_slot", "dst", "wgt"):
+            old = getattr(bg, name)
+            fresh = np.zeros((bg.n_buckets, new_cap), dtype=old.dtype)
+            fresh[:, :keep] = old[:, :keep]
+            setattr(bg, name, fresh)
+    for b in dirty_buckets:
+        _fill_bucket_row(bg, int(b), indptr, indices, weights)
+    bg.n_edges = n_edges
+    return bg
+
+
+# --------------------------------------------------------------------------- #
+# engine layout view (EngineArrays minus the RHS-dependent f0)
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class EngineLayout:
+    """Graph-derived half of ``EngineArrays`` (DESIGN.md §3/§7).
+
+    Rows are *initial* bucket positions (``pos_of_bucket`` maps stable
+    bucket id -> home row); ``tiles``/``tile_dst`` is the stable-id BSR
+    tile pool of the ``bsr`` diffusion backend.  ``b_of_row`` maps each
+    real row back to its stable bucket id for the patcher.
+    """
+
+    w: np.ndarray  # [R, S] float64 selection weights (0 = inert slot)
+    src_slot: np.ndarray  # [R, E] int32
+    dst_bucket: np.ndarray  # [R, E] int32 stable bucket id
+    dst_slot: np.ndarray  # [R, E] int32
+    wgt: np.ndarray  # [R, E] float64 (0 = padding edge)
+    pos_of_bucket: np.ndarray  # [R] int32
+    node_of_slot: np.ndarray  # [R, S] int32
+    n: int
+    n_edges: int
+    k: int
+    buckets_per_dev: int
+    headroom: int
+    tiles: Optional[np.ndarray] = None  # [R, T, S, S] compute dtype
+    tile_dst: Optional[np.ndarray] = None  # [R, T] int32
+    slot_out_deg: Optional[np.ndarray] = None  # [R, S] int32
+    t_counts: Optional[np.ndarray] = None  # [R] int32 distinct dst buckets
+    # per row — cached so a patch re-derives the tile capacity T from
+    # dirty rows only instead of re-scanning the whole pool
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.w.shape[0])
+
+    @property
+    def bucket_size(self) -> int:
+        return int(self.w.shape[1])
+
+    @property
+    def n_real(self) -> int:
+        return self.k * (self.buckets_per_dev - self.headroom)
+
+    def row_of_bucket(self, bid: int) -> int:
+        return int(self.pos_of_bucket[bid])
+
+
+def _retile_rows(layout: EngineLayout, rows: np.ndarray) -> None:
+    """Rebuild ``tiles``/``tile_dst`` for ``rows`` in place (zero first).
+
+    Uses the exact accumulate of
+    :func:`repro.core.distributed._tile_engine_edges` for bit parity.
+    """
+    s = layout.bucket_size
+    for row in rows:
+        layout.tiles[row] = 0.0
+        layout.tile_dst[row] = 0
+        mask = layout.wgt[row] != 0
+        db = layout.dst_bucket[row][mask]
+        ds = layout.dst_slot[row][mask]
+        ss = layout.src_slot[row][mask]
+        wv = layout.wgt[row][mask]
+        uniq = np.unique(db)
+        layout.tile_dst[row, : uniq.shape[0]] = uniq
+        t_of_edge = np.searchsorted(uniq, db)
+        np.add.at(layout.tiles, (row, t_of_edge, ds, ss), wv)
+
+
+def build_engine_layout(
+    store,
+    k: int,
+    buckets_per_dev: int,
+    headroom: int,
+    tiled: bool,
+    dtype: np.dtype,
+    order: Optional[np.ndarray] = None,
+) -> EngineLayout:
+    """Bucketize the store's graph into the engine's fixed-shape layout.
+
+    Real buckets fill ``buckets_per_dev - headroom`` rows per device;
+    the rest are inert landing rows for dynamic bucket moves.  Derives
+    from the store's bucketed view (shared substrate), so a later
+    ``apply_delta`` patches both coherently.
+    """
+    from repro.core.diteration import default_weights
+
+    real_per_dev = buckets_per_dev - headroom
+    assert real_per_dev >= 1, "headroom must leave >=1 real bucket per device"
+    n_real = k * real_per_dev
+    bg = store.bucketed(n_real, order=order)
+    g = store.csr()
+    s = bg.bucket_size
+    e = bg.edge_cap
+    r = k * buckets_per_dev
+
+    layout = EngineLayout(
+        w=np.zeros((r, s), dtype=np.float64),
+        src_slot=np.zeros((r, e), dtype=np.int32),
+        dst_bucket=np.zeros((r, e), dtype=np.int32),
+        dst_slot=np.zeros((r, e), dtype=np.int32),
+        wgt=np.zeros((r, e), dtype=np.float64),
+        pos_of_bucket=np.zeros(r, dtype=np.int32),
+        node_of_slot=np.full((r, s), -1, dtype=np.int32),
+        n=g.n,
+        n_edges=g.n_edges,
+        k=k,
+        buckets_per_dev=buckets_per_dev,
+        headroom=headroom,
+    )
+    wnode = default_weights(g)
+    for d in range(k):
+        for j in range(real_per_dev):
+            bid = d * real_per_dev + j  # stable bucket id
+            row = d * buckets_per_dev + j  # home row
+            layout.pos_of_bucket[bid] = row
+            nos = bg.node_of_slot[bid]
+            layout.node_of_slot[row] = nos
+            valid = nos >= 0
+            layout.w[row, valid] = wnode[nos[valid]]
+            layout.src_slot[row] = bg.src_slot[bid]
+            layout.dst_bucket[row] = bg.dst[bid] // s  # stable id
+            layout.dst_slot[row] = bg.dst[bid] % s
+            layout.wgt[row] = bg.wgt[bid]
+    inert_rows = [
+        d * buckets_per_dev + j
+        for d in range(k)
+        for j in range(real_per_dev, buckets_per_dev)
+    ]
+    for bid, row in zip(range(n_real, r), inert_rows):
+        layout.pos_of_bucket[bid] = row
+    if tiled:
+        from repro.core.distributed import _tile_engine_edges
+
+        layout.tiles, layout.tile_dst = _tile_engine_edges(
+            layout.src_slot, layout.dst_bucket, layout.dst_slot,
+            layout.wgt, s, np.dtype(dtype),
+        )
+        layout.t_counts = np.array(
+            [np.unique(layout.dst_bucket[row][layout.wgt[row] != 0]).size
+             for row in range(r)], dtype=np.int32)
+        layout.slot_out_deg = np.zeros((r, s), dtype=np.int32)
+        rows_e = np.broadcast_to(
+            np.arange(r)[:, None], layout.src_slot.shape)
+        real = layout.wgt != 0
+        np.add.at(layout.slot_out_deg,
+                  (rows_e[real], layout.src_slot[real]), 1)
+    return layout
+
+
+def patch_engine_layout(layout: EngineLayout, store, delta: GraphDelta,
+                        order: Optional[np.ndarray] = None) -> EngineLayout:
+    """Refresh dirty rows of ``layout`` from the store's PATCHED views.
+
+    Dirty rows = home rows of buckets owning a changed source node.
+    Selection weights (1/out-degree) refresh for those rows too; the
+    tile pool is retiled per dirty row unless its capacity ``T`` (max
+    distinct destination buckets of any row) changes, in which case the
+    whole pool is rebuilt (shapes are static under shard_map).
+    ``order`` must be the node order the layout was BUILT with (the
+    store's cache remembers it) — its bucketed view carries the
+    matching slot assignment.
+    """
+    changed = delta.touched_sources()
+    if changed.size == 0:
+        return layout
+    from repro.core.diteration import default_weights
+
+    bg = store.bucketed(layout.n_real, order=order)
+    g = store.csr()
+    s = layout.bucket_size
+    dirty_buckets = np.unique(bg.slot_of_node[changed] // s)
+    dirty_rows = np.array(
+        [layout.row_of_bucket(int(b)) for b in dirty_buckets])
+    if bg.edge_cap != layout.wgt.shape[1]:
+        e = bg.edge_cap
+        keep = min(e, layout.wgt.shape[1])
+        for name in ("src_slot", "dst_bucket", "dst_slot", "wgt"):
+            old = getattr(layout, name)
+            fresh = np.zeros((layout.n_rows, e), dtype=old.dtype)
+            fresh[:, :keep] = old[:, :keep]
+            setattr(layout, name, fresh)
+    wnode = default_weights(g)
+    for bid, row in zip(dirty_buckets, dirty_rows):
+        nos = layout.node_of_slot[row]
+        valid = nos >= 0
+        layout.w[row] = 0.0
+        layout.w[row, valid] = wnode[nos[valid]]
+        layout.src_slot[row] = bg.src_slot[bid]
+        layout.dst_bucket[row] = bg.dst[bid] // s
+        layout.dst_slot[row] = bg.dst[bid] % s
+        layout.wgt[row] = bg.wgt[bid]
+    layout.n_edges = g.n_edges
+    if layout.tiles is not None:
+        dtype = layout.tiles.dtype
+        # T capacity = max distinct destination buckets over rows;
+        # only dirty rows can have changed their count
+        for row in dirty_rows:
+            mask = layout.wgt[row] != 0
+            layout.t_counts[row] = np.unique(
+                layout.dst_bucket[row][mask]).size
+        t_needed = max(1, int(layout.t_counts.max()))
+        if t_needed != layout.tiles.shape[1]:
+            from repro.core.distributed import _tile_engine_edges
+
+            layout.tiles, layout.tile_dst = _tile_engine_edges(
+                layout.src_slot, layout.dst_bucket, layout.dst_slot,
+                layout.wgt, s, np.dtype(dtype))
+        else:
+            _retile_rows(layout, dirty_rows)
+        for row in dirty_rows:
+            layout.slot_out_deg[row] = 0
+            mask = layout.wgt[row] != 0
+            np.add.at(layout.slot_out_deg[row], layout.src_slot[row][mask], 1)
+    return layout

@@ -15,7 +15,16 @@ Two modes:
   a personalization batch via the vmapped ``solve_batch`` path.  Prints
   the edge-push ops each warm request saved vs a cold solve.
 
+  The request stream also carries **graph updates** (DESIGN.md §7):
+  every ``--churn-every`` requests a link-rotation delta of
+  ``--churn`` × L edges flows through ``session.update_graph`` — the
+  GraphStore patches its views in place and the fluid re-seeds via
+  ``F' = F + (P'−P)·H``, so the evolving graph re-solves warm instead
+  of cold.
+
     PYTHONPATH=src python -m repro.launch.serve rank --n 20000 --requests 8
+    PYTHONPATH=src python -m repro.launch.serve rank --churn 0.01 \\
+        --churn-every 3
 """
 import argparse
 import sys
@@ -89,8 +98,16 @@ def rank_main(argv):
                     "demo")
     ap.add_argument("--drift", type=float, default=0.02,
                     help="per-request fractional perturbation of B")
+    ap.add_argument("--churn", type=float, default=0.0,
+                    help="graph-update request: fraction of edges "
+                    "link-rotated per update (0 disables)")
+    ap.add_argument("--churn-every", type=int, default=3,
+                    help="serve a graph-update request every this many "
+                    "warm requests")
     ap.add_argument("--target-error", type=float, default=None)
     args = ap.parse_args(argv)
+    if args.churn > 0 and args.churn_every < 1:
+        ap.error("--churn-every must be >= 1 when --churn is set")
 
     rng = np.random.default_rng(0)
     g = webgraph_like(args.n, seed=1)
@@ -104,8 +121,23 @@ def rank_main(argv):
     print(f"[cold ] {cold.n_ops} edge pushes, {cold.n_rounds} rounds, "
           f"{time.time()-t0:.2f}s — the serving baseline")
 
+    from repro.graph import rotation_churn
+
     b = problem.b
     for req in range(args.requests):
+        if args.churn > 0 and req % args.churn_every == args.churn_every - 1:
+            # a graph-update request: the crawl delivered link churn
+            n_rot = max(1, int(args.churn * session.problem.n_edges) // 2)
+            delta = rotation_churn(session.problem.graph, n_rot,
+                                   seed=1000 + req)
+            t0 = time.time()
+            resid0 = session.update_graph(delta)
+            rep = session.solve()
+            saved = 1.0 - rep.n_ops / max(cold.n_ops, 1)
+            print(f"[update {req}] {delta.n_changes} changed edges "
+                  f"|F0|={resid0:.2e} {rep.n_ops} ops ({saved:.0%} saved "
+                  f"vs cold), {rep.n_rounds} rounds, {time.time()-t0:.2f}s")
+            continue
         # a drifting teleport vector: what a freshness-weighted or
         # user-conditioned ranking update looks like between requests
         b = b * (1.0 + args.drift * rng.standard_normal(g.n))

@@ -11,6 +11,12 @@ engine path silently ignored both.
   PYTHONPATH=src python -m repro.launch.solve --method simulator --k 16
   PYTHONPATH=src python -m repro.launch.solve --method engine:bsr
   PYTHONPATH=src python -m repro.launch.solve --policy hysteresis --k 8
+  PYTHONPATH=src python -m repro.launch.solve --graph-file web.txt
+
+``--graph-file`` loads a SNAP-style edge-list text file (``src dst``
+per line, ``#`` comments) through :meth:`repro.GraphStore.
+from_edge_file` — real-graph workloads beyond the synthetic
+generators.
 """
 import argparse
 
@@ -24,6 +30,12 @@ def build_parser() -> argparse.ArgumentParser:
     )
     ap.add_argument("--n", type=int, default=20_000)
     ap.add_argument("--graph", choices=["powerlaw", "web"], default="web")
+    ap.add_argument("--graph-file", default=None,
+                    help="SNAP-style edge-list file ('src dst' lines, "
+                    "'#' comments) loaded via GraphStore.from_edge_file; "
+                    "overrides --n/--graph")
+    ap.add_argument("--weighted", action="store_true",
+                    help="--graph-file has a third weight column")
     ap.add_argument("--target-error", type=float, default=None,
                     help="stopping target (default 1/N, paper §3.1)")
     ap.add_argument("--method", default="auto",
@@ -60,8 +72,14 @@ def main(argv=None):
     import repro
     from repro.core import power_law_graph, webgraph_like
 
-    g = (power_law_graph(args.n, seed=0) if args.graph == "powerlaw"
-         else webgraph_like(args.n, seed=1))
+    if args.graph_file is not None:
+        store = repro.GraphStore.from_edge_file(args.graph_file,
+                                                weighted=args.weighted)
+        g = store.csr()
+        print(f"loaded {args.graph_file}: N={g.n} L={g.n_edges}")
+    else:
+        g = (power_law_graph(args.n, seed=0) if args.graph == "powerlaw"
+             else webgraph_like(args.n, seed=1))
     problem = repro.Problem.pagerank(g, target_error=args.target_error)
     print(f"N={g.n} L={g.n_edges} target_error={problem.target_error:.2e}")
 

@@ -25,8 +25,11 @@ ALL_BACKENDS = (
 )
 
 # frozen public surface — extend deliberately, never by accident
+# (PR 4 deliberately added GraphStore/GraphDelta: the delta layer)
 API_SURFACE = [
     "BackendCapabilities",
+    "GraphDelta",
+    "GraphStore",
     "Problem",
     "RoundReport",
     "SolveReport",
@@ -127,20 +130,32 @@ def test_backend_parity_report_fields(web4096_reports):
 # --------------------------------------------------------------------------- #
 # SolverSession: warm start + streaming + batch
 # --------------------------------------------------------------------------- #
-@pytest.mark.parametrize("method", ["frontier:segment_sum", "engine:bsr"])
-def test_warm_start_strictly_fewer_ops(method):
+# every warm-startable backend must beat its own cold solve after an
+# RHS drift; frontier:pallas runs the real kernel in interpret mode on
+# a smaller instance (emulation speed), with a looser x tolerance to
+# absorb its f32 round-trip at the default 1/N target
+@pytest.mark.parametrize("method,n,target_error,opts,x_atol", [
+    ("frontier:segment_sum", 2000, 1e-6, {}, 1e-5),
+    ("engine:bsr", 2000, 1e-6, {}, 1e-5),
+    ("engine:chunk", 2000, 1e-6, {}, 1e-5),
+    ("frontier:pallas", 512, None, {"interpret": True, "bs": 64}, 1e-3),
+])
+def test_warm_start_strictly_fewer_ops(method, n, target_error, opts,
+                                       x_atol):
     """After perturbing B, the warm-started solve reaches target_error
     with strictly fewer edge-push ops than a cold solve (satellite)."""
-    g = webgraph_like(2000, seed=1)
-    problem = Problem.pagerank(g, target_error=1e-6)
-    session = SolverSession(problem, method=method)
+    g = webgraph_like(n, seed=1)
+    problem = Problem.pagerank(g, target_error=target_error)
+    options = SolverOptions(**opts)
+    session = SolverSession(problem, method=method, options=options)
     session.solve()
 
     rng = np.random.default_rng(7)
     b_new = problem.b * (1.0 + 0.05 * rng.standard_normal(g.n))
     b_new = np.abs(b_new)
 
-    cold = SolverSession(problem.with_b(b_new), method=method).solve()
+    cold = SolverSession(problem.with_b(b_new), method=method,
+                         options=options).solve()
     assert cold.converged
 
     resid0 = session.warm_start(b_new)
@@ -148,7 +163,7 @@ def test_warm_start_strictly_fewer_ops(method):
     assert warm.converged
     assert resid0 < np.abs(b_new).sum()  # H absorbed most of the fluid
     assert warm.n_ops < cold.n_ops, (method, warm.n_ops, cold.n_ops)
-    np.testing.assert_allclose(warm.x, cold.x, atol=1e-5)
+    np.testing.assert_allclose(warm.x, cold.x, atol=x_atol)
 
 
 def test_warm_start_identity_exact(small_pagerank):

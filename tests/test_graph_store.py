@@ -1,0 +1,548 @@
+"""GraphStore: view parity under deltas + the warm delta re-solve.
+
+Acceptance (ISSUE 4):
+
+* delta-patched views (CSR splice, dirty BSR tiles, dirty buckets,
+  dirty engine rows) are **bit-identical** to a from-scratch rebuild —
+  the tier-2 ``graph-update-parity`` CI contract;
+* 1% edge churn on the N=4096 webgraph re-solves through
+  ``SolverSession.update_graph`` with ≥ 5× fewer edge pushes than a
+  cold solve, on both a frontier and an engine backend;
+* the warm delta re-solve matches the cold solve to |Δx|₁ ≤ 1e-6 at a
+  tight target;
+* ``Problem.with_graph`` shares the store; ``GraphStore.from_edge_file``
+  opens SNAP-style real-graph workloads.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core import pagerank_system, power_law_graph, webgraph_like
+from repro.core.graph import bucketize
+from repro.graph import (
+    GraphDelta,
+    GraphStore,
+    pagerank_edge_churn,
+    rotation_churn,
+)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _mixed_delta(store, seed=0, n_rm=7, n_add=7, n_rew=5):
+    """Hand-rolled add/remove/reweight batch touching random edges."""
+    rng = np.random.default_rng(seed)
+    csr = store.csr()
+    src_e, dst_e, w_e = csr.edge_list()
+    keys = set((int(s) << 32) | int(d) for s, d in zip(src_e, dst_e))
+    pick = rng.choice(src_e.shape[0], size=n_rm + n_rew, replace=False)
+    removed = np.stack([src_e[pick[:n_rm]], dst_e[pick[:n_rm]]],
+                       axis=1).astype(np.int64)
+    rew_idx = pick[n_rm:]
+    rew = (src_e[rew_idx].astype(np.int64), dst_e[rew_idx].astype(np.int64),
+           w_e[rew_idx] * 1.5)
+    added = []
+    while len(added) < n_add:
+        s, d = int(rng.integers(0, csr.n)), int(rng.integers(0, csr.n))
+        k = (s << 32) | d
+        if s != d and k not in keys:
+            added.append((s, d, 0.01 * (len(added) + 1)))
+            keys.add(k)
+    return GraphDelta.make(
+        added_edges=np.array(added),
+        removed_edges=removed,
+        reweighted=rew,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# canonical store + constructors
+# --------------------------------------------------------------------------- #
+def test_store_csr_roundtrip():
+    g = power_law_graph(300, seed=3)
+    p, _ = pagerank_system(g)
+    store = GraphStore.from_csr(p)
+    csr = store.csr()
+    assert store.n == p.n and store.n_edges == p.n_edges
+    # same matrix (canonical order may differ from the input order)
+    np.testing.assert_array_equal(csr.indptr, p.indptr)
+    np.testing.assert_allclose(csr.to_dense(), p.to_dense(), atol=0)
+    np.testing.assert_array_equal(store.out_degree(), p.out_degree())
+    np.testing.assert_array_equal(store.dangling_mask(), p.dangling_mask())
+
+
+def test_multigraph_csr_merges_parallel_edges():
+    """Legacy multigraph CSRGraphs (parallel edges) canonicalize by
+    weight summation — the same semantics as CSRGraph.to_dense — so
+    store-backed backends solve the identical matrix."""
+    from repro.core.graph import CSRGraph
+
+    p = CSRGraph.from_edges(np.array([0, 0, 1], dtype=np.int32),
+                            np.array([1, 1, 0], dtype=np.int32),
+                            np.array([0.3, 0.2, 0.4]), 2)
+    store = GraphStore.from_csr(p)
+    assert store.n_edges == 2
+    np.testing.assert_allclose(store.csr().to_dense(), p.to_dense())
+    b = np.array([1.0, 0.5])
+    problem = repro.Problem.linear(p, b, rho=0.9, target_error=1e-10)
+    x_dense = np.linalg.solve(np.eye(2) - p.to_dense(), b)
+    rep = repro.solve(problem, method="engine:chunk")
+    np.testing.assert_allclose(rep.x, x_dense, atol=1e-6)
+
+
+def test_bucketize_is_store_view():
+    """The legacy bucketize() alias and the store view are identical."""
+    g = power_law_graph(200, seed=1)
+    store = GraphStore.from_csr(g)
+    bg_legacy = bucketize(store.csr(), 5)
+    bg_view = store.bucketed(5)
+    for name in ("node_of_slot", "slot_of_node", "src_slot", "dst", "wgt",
+                 "out_deg"):
+        np.testing.assert_array_equal(getattr(bg_legacy, name),
+                                      getattr(bg_view, name))
+    # the view is cached, the alias is not
+    assert store.bucketed(5) is bg_view
+
+
+# --------------------------------------------------------------------------- #
+# bit-identical delta patching (the tier-2 graph-update-parity contract)
+# --------------------------------------------------------------------------- #
+def _assert_views_bit_identical(patched: GraphStore, fresh: GraphStore,
+                                bs: int, n_buckets: int, engine_key):
+    a, b = patched.csr(), fresh.csr()
+    np.testing.assert_array_equal(a.indptr, b.indptr)
+    np.testing.assert_array_equal(a.indices, b.indices)
+    np.testing.assert_array_equal(a.weights, b.weights)
+
+    ta, tb = patched.bsr(bs), fresh.bsr(bs)
+    np.testing.assert_array_equal(ta.block_row, tb.block_row)
+    np.testing.assert_array_equal(ta.block_col, tb.block_col)
+    np.testing.assert_array_equal(ta.blocks, tb.blocks)
+    np.testing.assert_array_equal(ta.row_occupied, tb.row_occupied)
+
+    ga, gb = patched.bucketed(n_buckets), fresh.bucketed(n_buckets)
+    for name in ("node_of_slot", "slot_of_node", "src_slot", "dst", "wgt",
+                 "out_deg"):
+        np.testing.assert_array_equal(getattr(ga, name), getattr(gb, name))
+    assert ga.n_edges == gb.n_edges
+
+    la = patched.engine_layout(*engine_key)
+    lb = fresh.engine_layout(*engine_key)
+    for name in ("w", "src_slot", "dst_bucket", "dst_slot", "wgt",
+                 "pos_of_bucket", "node_of_slot", "tiles", "tile_dst",
+                 "slot_out_deg"):
+        va, vb = getattr(la, name), getattr(lb, name)
+        if va is None:
+            assert vb is None, name
+        else:
+            np.testing.assert_array_equal(va, vb, err_msg=name)
+    assert la.n_edges == lb.n_edges
+
+
+@pytest.mark.parametrize("churn", ["pagerank", "mixed", "rotation"])
+def test_apply_delta_views_bit_identical(churn):
+    """Patched views == from-scratch rebuild, bit for bit, across the
+    CSR splice, dirty BSR tiles, dirty buckets and dirty engine rows."""
+    g = webgraph_like(1024, seed=1)
+    p, _ = pagerank_system(g)
+    store = GraphStore.from_csr(p)
+    bs, n_buckets = 64, 6
+    engine_key = (2, 5, 2, True, np.float32)
+    # materialize every view BEFORE the delta so all patchers exercise
+    store.bsr(bs)
+    store.bucketed(n_buckets)
+    store.engine_layout(*engine_key)
+
+    if churn == "pagerank":
+        rng = np.random.default_rng(0)
+        csr = store.csr()
+        src_e, dst_e, _ = csr.edge_list()
+        deg = csr.out_degree()
+        cand = np.nonzero(deg[src_e] > 1)[0]
+        rm = rng.choice(cand, size=12, replace=False)
+        removed = np.stack([src_e[rm], dst_e[rm]], axis=1).astype(np.int64)
+        keys = set((int(s) << 32) | int(d)
+                   for s, d in zip(src_e, dst_e))
+        added = []
+        while len(added) < 12:
+            s, d = int(rng.integers(0, 1024)), int(rng.integers(0, 1024))
+            if s != d and ((s << 32) | d) not in keys and deg[s] > 0:
+                added.append((s, d))
+                keys.add((s << 32) | d)
+        delta = pagerank_edge_churn(
+            store, added_links=np.array(added, dtype=np.int64),
+            removed_links=removed)
+    elif churn == "mixed":
+        delta = _mixed_delta(store, seed=3)
+    else:
+        delta = rotation_churn(store, 25, seed=5)
+
+    store.apply_delta(delta)
+    assert store.version == 1
+    fresh = GraphStore.from_csr(store.csr())
+    _assert_views_bit_identical(store, fresh, bs, n_buckets, engine_key)
+
+
+def test_apply_delta_ordered_engine_layout_parity():
+    """A layout built with a custom node order (e.g. CB packing) must
+    patch against its OWN ordered bucketed view, not the default one."""
+    g = webgraph_like(512, seed=4)
+    store = GraphStore.from_csr(g)
+    rng = np.random.default_rng(9)
+    order = rng.permutation(512).astype(np.int64)
+    key = (2, 4, 1, True, np.float32)
+    store.engine_layout(*key, order=order)
+    delta = rotation_churn(store, 20, seed=6)
+    store.apply_delta(delta)
+    fresh = GraphStore.from_csr(store.csr())
+    la = store.engine_layout(*key, order=order)
+    lb = fresh.engine_layout(*key, order=order)
+    for name in ("w", "src_slot", "dst_bucket", "dst_slot", "wgt",
+                 "node_of_slot", "tiles", "tile_dst", "slot_out_deg"):
+        np.testing.assert_array_equal(getattr(la, name), getattr(lb, name),
+                                      err_msg=name)
+
+
+def test_apply_delta_on_empty_store():
+    """Adding the first edges to an edgeless store works; removing from
+    one raises the intended ValueError (not IndexError)."""
+    store = GraphStore.from_edges(np.zeros(0, np.int64),
+                                  np.zeros(0, np.int64),
+                                  np.zeros(0, np.float64), 8)
+    assert store.n_edges == 0
+    with pytest.raises(ValueError, match="does not exist"):
+        store.apply_delta(GraphDelta.make(removed_edges=np.array([[0, 1]])))
+    store.apply_delta(GraphDelta.make(
+        added_edges=np.array([[0, 1, 0.5], [3, 2, 0.25]])))
+    assert store.n_edges == 2
+    np.testing.assert_array_equal(store.out_degree(),
+                                  [1, 0, 0, 1, 0, 0, 0, 0])
+
+
+def test_patch_bsr_from_empty_drops_placeholder():
+    """A BSR view materialized over ZERO edges holds csr_to_bsr's
+    all-zero placeholder tile; the first real delta must not carry it
+    into the merge (bit parity with a fresh build, clean occupancy)."""
+    store = GraphStore.from_edges(np.zeros(0, np.int64),
+                                  np.zeros(0, np.int64),
+                                  np.zeros(0, np.float64), 64)
+    t0 = store.bsr(bs=16)
+    assert t0.n_blocks == 1 and not np.any(t0.blocks)
+    # the added edge lands OUTSIDE block key 0, so the placeholder is
+    # not in the dirty set and would survive a naive clean-mask merge
+    store.apply_delta(GraphDelta.make(added_edges=np.array([[40, 33, .5]])))
+    patched = store.bsr(bs=16)
+    fresh = GraphStore.from_csr(store.csr()).bsr(bs=16)
+    np.testing.assert_array_equal(patched.block_row, fresh.block_row)
+    np.testing.assert_array_equal(patched.block_col, fresh.block_col)
+    np.testing.assert_array_equal(patched.blocks, fresh.blocks)
+    np.testing.assert_array_equal(patched.row_occupied, fresh.row_occupied)
+    assert patched.n_blocks == 1 and not patched.row_occupied[0]
+
+
+def test_stale_session_refuses_to_run():
+    """A second session sharing the store must fail loudly after the
+    first one applies a delta (views are patched in place)."""
+    g = webgraph_like(512, seed=1)
+    problem = repro.Problem.pagerank(g)
+    _ = problem.graph  # materialize the shared store
+    a = repro.SolverSession(problem, method="frontier:segment_sum")
+    b = repro.SolverSession(problem, method="frontier:segment_sum")
+    a.solve()
+    b.solve()
+    a.update_graph(rotation_churn(a.problem.graph, 5, seed=0))
+    with pytest.raises(ValueError, match="stale Problem snapshot"):
+        b.warm_start(problem.b)
+    with pytest.raises(ValueError, match="stale Problem snapshot"):
+        b.solve()
+    a.solve()  # the updating session itself stays healthy
+
+
+def test_apply_delta_capacity_growth_parity():
+    """A delta that outgrows the bucket edge capacity (one node gains
+    many edges) re-pads and still matches the from-scratch build."""
+    g = power_law_graph(256, seed=2)
+    store = GraphStore.from_csr(g)
+    store.bucketed(4)
+    store.bsr(32)
+    store.engine_layout(1, 6, 2, True, np.float32)
+    csr = store.csr()
+    keys = set()
+    src_e, dst_e, _ = csr.edge_list()
+    for s, d in zip(src_e, dst_e):
+        keys.add((int(s) << 32) | int(d))
+    added = [(5, d, 1.0) for d in range(256)
+             if d != 5 and ((5 << 32) | d) not in keys]
+    delta = GraphDelta.make(added_edges=np.array(added))
+    store.apply_delta(delta)
+    fresh = GraphStore.from_csr(store.csr())
+    _assert_views_bit_identical(store, fresh, 32, 4,
+                                (1, 6, 2, True, np.float32))
+
+
+def test_apply_delta_tile_drop_and_insert():
+    """Removing a block's only edge drops the tile; adding an edge in a
+    fresh block inserts one — matching csr_to_bsr's structure."""
+    # two isolated edges in distinct blocks
+    src = np.array([0, 40])
+    dst = np.array([33, 2])
+    w = np.array([0.5, 0.25])
+    store = GraphStore.from_edges(src, dst, w, 64)
+    t = store.bsr(bs=16)
+    assert t.n_blocks == 2
+    delta = GraphDelta.make(
+        added_edges=np.array([[50, 60, 0.3]]),
+        removed_edges=np.array([[0, 33]]),
+    )
+    store.apply_delta(delta)
+    t2 = store.bsr(bs=16)
+    fresh = GraphStore.from_csr(store.csr()).bsr(bs=16)
+    np.testing.assert_array_equal(t2.block_row, fresh.block_row)
+    np.testing.assert_array_equal(t2.block_col, fresh.block_col)
+    np.testing.assert_array_equal(t2.blocks, fresh.blocks)
+    assert t2.n_blocks == 2  # one dropped, one inserted
+    assert t2.row_occupied[60 // 16] and not t2.row_occupied[33 // 16]
+
+
+def test_delta_validation():
+    g = power_law_graph(100, seed=0)
+    store = GraphStore.from_csr(g)
+    csr = store.csr()
+    s0 = int(np.nonzero(csr.out_degree() > 0)[0][0])
+    d0 = int(csr.out_neighbors(s0)[0][0])
+    with pytest.raises(ValueError, match="already exists"):
+        store.apply_delta(GraphDelta.make(
+            added_edges=np.array([[s0, d0, 1.0]])))
+    nbrs = set(csr.out_neighbors(s0)[0].tolist())
+    d_missing = next(d for d in range(100) if d not in nbrs and d != s0)
+    with pytest.raises(ValueError, match="does not exist"):
+        store.apply_delta(GraphDelta.make(
+            removed_edges=np.array([[s0, d_missing]])))
+    with pytest.raises(ValueError, match="duplicate"):
+        GraphDelta.make(added_edges=np.array([[1, 2, 0.5]]),
+                        removed_edges=np.array([[1, 2]]))
+    with pytest.raises(TypeError):
+        store.apply_delta("not a delta")
+    v = store.version
+    store.apply_delta(GraphDelta.make())  # empty = no-op
+    assert store.version == v
+
+
+def test_from_edge_file(tmp_path):
+    path = tmp_path / "snap.txt"
+    path.write_text(textwrap.dedent("""\
+        # SNAP-style comment header
+        # src dst
+        0 1
+        1 2
+        2 0
+        2 2
+        0 1
+        3 1
+        """))
+    store = GraphStore.from_edge_file(str(path))
+    assert store.n == 4
+    assert store.n_edges == 4  # self-loop dropped, duplicate deduped
+    csr = store.csr()
+    np.testing.assert_array_equal(csr.out_degree(), [1, 1, 1, 1])
+
+    wpath = tmp_path / "weighted.txt"
+    wpath.write_text("0 1 0.5\n1 0 0.25\n")
+    ws = GraphStore.from_edge_file(str(wpath), weighted=True)
+    np.testing.assert_allclose(np.sort(ws.csr().weights), [0.25, 0.5])
+
+    with pytest.raises(ValueError, match="ids >= n"):
+        GraphStore.from_edge_file(str(path), n=2)
+    # solves end-to-end through the front door
+    rep = repro.solve(repro.Problem.pagerank(store),
+                      method="frontier:segment_sum")
+    assert rep.converged and rep.x.shape == (4,)
+
+
+# --------------------------------------------------------------------------- #
+# Problem integration (the with_graph satellite)
+# --------------------------------------------------------------------------- #
+def test_problem_with_graph_shares_store():
+    g = webgraph_like(512, seed=1)
+    problem = repro.Problem.pagerank(g)
+    store = problem.graph  # lazily created, then pinned
+    assert problem.graph is store
+    delta = rotation_churn(store, 5, seed=0)
+    store.apply_delta(delta)
+    p2 = problem.with_graph(store)
+    assert p2.graph is store
+    assert p2.b is problem.b and p2.target_error == problem.target_error
+    # the new snapshot reflects the patched matrix
+    assert p2.p.n_edges == store.n_edges
+    with pytest.raises(ValueError, match="cannot change N"):
+        problem.with_graph(GraphStore.from_csr(webgraph_like(256, seed=2)))
+    # the ORIGINAL problem is now a stale snapshot (its store advanced
+    # past the version it captured) — using it must fail loudly instead
+    # of silently solving a mixed system
+    with pytest.raises(ValueError, match="stale Problem snapshot"):
+        problem.graph
+
+
+def test_graph_churn_load_signal():
+    from repro.balance.signals import LoadSignal
+
+    sig = LoadSignal.from_graph_churn(
+        np.array([30, 10, 0, 0]), sizes=np.array([4, 4, 4, 4]), step=3)
+    assert sig.kind == "graph-churn"
+    np.testing.assert_allclose(sig.values, [0.75, 0.25, 0.0, 0.0])
+    g = power_law_graph(64, seed=0)
+    store = GraphStore.from_csr(g)
+    delta = rotation_churn(store, 4, seed=1)
+    churn = delta.churn_per_node(64)
+    assert churn.sum() == delta.n_changes
+    assert churn.shape == (64,)
+
+
+# --------------------------------------------------------------------------- #
+# the delta re-solve acceptance scenario (1% churn, N=4096 webgraph)
+# --------------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def web4096_graph():
+    return webgraph_like(4096, seed=1)
+
+
+@pytest.mark.parametrize("method", ["frontier:segment_sum", "engine:bsr"])
+def test_update_graph_5x_fewer_ops_than_cold(web4096_graph, method):
+    """1% edge churn (link rotations in the non-hub tail) re-solves
+    with >= 5x fewer edge pushes than a cold solve of the same patched
+    problem — on a frontier AND an engine backend (acceptance)."""
+    # each test owns its Problem: update_graph mutates the shared store
+    problem = repro.Problem.pagerank(web4096_graph)
+    session = repro.SolverSession(problem, method=method)
+    cold_pre = session.solve()
+    assert cold_pre.converged
+
+    n_rot = int(0.01 * problem.n_edges) // 2  # 2 changed edges / rotation
+    delta = rotation_churn(session.problem.graph, n_rot, seed=7,
+                           rank=cold_pre.x, exclude_top=0.2)
+    assert delta.n_changes >= int(0.009 * problem.n_edges)
+
+    resid0 = session.update_graph(delta)
+    assert 0 < resid0 < np.abs(problem.b).sum()
+    warm = session.solve()
+    assert warm.converged
+
+    cold = repro.SolverSession(session.problem, method=method).solve()
+    assert cold.converged
+    assert cold.n_ops >= 5 * warm.n_ops, (method, cold.n_ops, warm.n_ops)
+    # both drained to the same target: solutions within 2*target_error
+    assert np.abs(warm.x - cold.x).sum() <= 2 * problem.target_error
+
+
+def test_update_graph_matches_cold_tight():
+    """At a tight target the warm delta re-solve lands within
+    |Δx|₁ <= 1e-6 of the cold solve of the patched problem (the
+    graph-update-parity CI tolerance)."""
+    g = webgraph_like(4096, seed=1)
+    for method in ("frontier:segment_sum", "engine:bsr"):
+        problem = repro.Problem.pagerank(g, target_error=2.5e-7)
+        session = repro.SolverSession(problem, method=method)
+        session.solve()
+        delta = rotation_churn(session.problem.graph, 40, seed=3)
+        session.update_graph(delta)
+        warm = session.solve()
+        cold = repro.SolverSession(session.problem, method=method).solve()
+        assert warm.converged and cold.converged
+        l1 = np.abs(warm.x - cold.x).sum()
+        assert l1 <= 1e-6, (method, l1)
+
+
+def test_update_graph_identity_noop_is_cheap(web4096_graph):
+    """Reweighting edges to their CURRENT weights injects only f32
+    re-derivation noise: the follow-up solve is (near) free."""
+    problem = repro.Problem.pagerank(web4096_graph)
+    session = repro.SolverSession(problem, method="frontier:segment_sum")
+    first = session.solve()
+    csr = session.problem.graph.csr()
+    src_e, dst_e, w_e = csr.edge_list()
+    rng = np.random.default_rng(11)
+    pick = rng.choice(src_e.shape[0], size=64, replace=False)
+    delta = GraphDelta.make(reweighted=(
+        src_e[pick].astype(np.int64), dst_e[pick].astype(np.int64),
+        w_e[pick]))
+    resid0 = session.update_graph(delta)
+    assert resid0 == pytest.approx(first.residual, rel=0.05)
+    again = session.solve()
+    assert again.n_ops <= max(64, first.n_ops // 100)
+
+
+# --------------------------------------------------------------------------- #
+# engine churn signal -> balance control plane (multi-device subprocess)
+# --------------------------------------------------------------------------- #
+CHURN_SIGNAL_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, {src!r})
+    import numpy as np
+    import repro
+    from repro.api.session import _DRIVERS
+    from repro.balance.plan import MovePlan
+    from repro.core import webgraph_like
+    from repro.graph import rotation_churn
+
+    g = webgraph_like(2048, seed=1)
+    problem = repro.Problem.pagerank(g)
+    options = repro.SolverOptions(k=4).validated()
+    driver = _DRIVERS["engine:chunk"](problem, options)
+    driver.seed(problem.b)
+
+    class Recorder:
+        def __init__(self):
+            self.signals = []
+        def propose(self, sig):
+            self.signals.append(sig)
+            return [MovePlan(src=0, dst=1, units=1, kind="bucket")]
+        def reset_worker(self, k):
+            pass
+
+    rec = Recorder()
+    driver.engine.rebalancer = rec
+    delta = rotation_churn(problem.graph, 50, seed=2)
+    driver.note_graph_churn(delta.churn_per_node(problem.n))
+    assert len(rec.signals) == 1, rec.signals
+    sig = rec.signals[0]
+    assert sig.kind == "graph-churn"
+    assert sig.values.shape == (4,)
+    assert abs(sig.values.sum() - 1.0) < 1e-12
+    # the proposed move executed and was logged
+    assert driver.move_log(), "churn-driven MovePlan was not executed"
+
+    # the session-level path end-to-end: engine with a real policy
+    session = repro.SolverSession(problem, method="engine:chunk",
+                                  options=repro.SolverOptions(
+                                      k=4, policy="hysteresis"))
+    session.solve()
+    d2 = rotation_churn(session.problem.graph, 50, seed=3)
+    session.update_graph(d2)
+    warm = session.solve()
+    cold = repro.SolverSession(session.problem, method="engine:chunk",
+                               options=repro.SolverOptions(
+                                   k=4, policy="hysteresis")).solve()
+    assert warm.converged and cold.converged
+    assert np.abs(warm.x - cold.x).sum() <= 2 * session.problem.target_error
+    print("CHURN-SIGNAL-OK")
+    """
+)
+
+
+def test_engine_churn_signal_feeds_rebalancer():
+    """Graph churn maps onto owning devices, reaches the rebalancer as
+    a graph-churn LoadSignal, and its MovePlans execute (subprocess
+    with 8 fake host devices)."""
+    script = CHURN_SIGNAL_SCRIPT.format(src=os.path.abspath(SRC))
+    res = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, res.stderr[-4000:]
+    assert "CHURN-SIGNAL-OK" in res.stdout
