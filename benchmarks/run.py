@@ -40,6 +40,11 @@ GRAPH_ROW_KEYS = {
     "warm_ops", "cold_ops", "ops_ratio", "patch_s", "rebuild_s",
     "patch_speedup", "converged",
 }
+CHAOS_ROW_KEYS = {
+    "scenario", "method", "n", "k", "n_edges", "undisturbed_ops",
+    "disturbed_ops", "overhead_ops", "overhead_frac", "x_err_l1",
+    "converged",
+}
 
 # one registry drives per-suite validation AND the BENCH.json merge
 BENCH_SECTIONS = {
@@ -47,6 +52,7 @@ BENCH_SECTIONS = {
     "engine": ("BENCH_engine.json", ENGINE_ROW_KEYS),
     "api": ("BENCH_api.json", API_ROW_KEYS),
     "graph": ("BENCH_graph.json", GRAPH_ROW_KEYS),
+    "chaos": ("BENCH_chaos.json", CHAOS_ROW_KEYS),
 }
 
 
@@ -128,8 +134,17 @@ def smoke() -> int:
     warm_rows = [r for r in gp["rows"] if "skipped" not in r]
     assert warm_rows and all(r["ops_ratio"] > 1.0 for r in warm_rows), (
         "delta re-solve did not beat the cold solve")
+    print("[smoke] chaos recovery-overhead bench (tiny)")
+    from benchmarks import chaos_bench
+
+    cp = chaos_bench.main(smoke=True, out_path="BENCH_chaos.smoke.json")
+    _validate_bench(cp, CHAOS_ROW_KEYS, "chaos bench (smoke)")
+    chaos_rows = [r for r in cp["rows"] if "skipped" not in r]
+    assert chaos_rows and all(r["converged"] for r in chaos_rows), (
+        "a chaos scenario failed to converge after recovery")
     for tmp in ("BENCH_kernels.smoke.json", "BENCH_engine.smoke.json",
-                "BENCH_api.smoke.json", "BENCH_graph.smoke.json"):
+                "BENCH_api.smoke.json", "BENCH_graph.smoke.json",
+                "BENCH_chaos.smoke.json"):
         if os.path.exists(tmp):
             os.remove(tmp)
     # consolidate() validates each committed per-suite artifact as it

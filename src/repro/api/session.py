@@ -119,6 +119,27 @@ class _SegmentSumDriver:
     def move_log(self) -> List[Tuple[int, int, int, int]]:
         return []
 
+    # ---- checkpointable state (node space) --------------------------------
+    def fluid(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(F, H) as float64 node-space vectors."""
+        return (np.asarray(self._state[0], dtype=np.float64),
+                np.asarray(self._state[1], dtype=np.float64))
+
+    def threshold(self) -> np.ndarray:
+        return np.asarray(self._state[2], dtype=np.float64)
+
+    def set_threshold(self, t: np.ndarray) -> None:
+        import jax.numpy as jnp
+
+        t = np.asarray(t, dtype=np.float64).reshape(-1)
+        if t.shape != (1,):
+            return  # checkpointed at a different width (per-device T):
+            # keep the re-derived threshold — any schedule is valid
+        f, h, t_old, ops, rounds = self._state
+        self._state = (f, h,
+                       jnp.asarray(t[0], dtype=t_old.dtype).reshape(()),
+                       ops, rounds)
+
     # ---- batched multi-RHS loop (vmap over columns) -----------------------
     def solve_batch(self, b_matrix: np.ndarray, tol: float,
                     max_rounds: int):
@@ -263,10 +284,41 @@ class _BsrFrontierDriver:
     def move_log(self) -> List[Tuple[int, int, int, int]]:
         return []
 
+    # ---- checkpointable state (node space) --------------------------------
+    def fluid(self) -> Tuple[np.ndarray, np.ndarray]:
+        return (np.asarray(self._state[0][: self.n], dtype=np.float64),
+                np.asarray(self._state[2][: self.n], dtype=np.float64))
+
+    def threshold(self) -> np.ndarray:
+        return np.asarray(self._state[3], dtype=np.float64)
+
+    def set_threshold(self, t: np.ndarray) -> None:
+        import jax.numpy as jnp
+
+        t = np.asarray(t, dtype=np.float64).reshape(-1)
+        if t.shape != (1,):
+            return  # cross-width checkpoint: keep the re-derived T
+        f, res, h, t_old, ops, rounds = self._state
+        self._state = (f, res, h,
+                       jnp.asarray(t[0], dtype=t_old.dtype).reshape(()),
+                       ops, rounds)
+
 
 # --------------------------------------------------------------------------- #
 # engine driver (shard_map production solver, chunk-granular)
 # --------------------------------------------------------------------------- #
+def _bsr_buckets_per_dev(n: int, k: int, options: SolverOptions) -> int:
+    """BSR tiles are dense [S, S] blocks: cap the bucket size (≤ 512)
+    so the tile pool stays MXU-shaped instead of ballooning to
+    [R, T, N/K, N/K] on big problems.  Auto-sizing only ever *raises*
+    the bucket count the caller configured.  One rule shared by driver
+    construction and mid-solve rescale, so a rescaled engine's layout
+    always matches what a cold start at the same k would build."""
+    max_s = 512
+    real_needed = -(-n // (k * max_s))  # ceil
+    return max(options.buckets_per_dev, real_needed + options.headroom)
+
+
 class _EngineDriver:
     """engine:chunk / engine:bsr — the distributed engine, one jitted
     chunk per advance, with the balance control plane between chunks."""
@@ -297,16 +349,9 @@ class _EngineDriver:
                 f"{n_dev} available (use method='simulator' for virtual "
                 "PIDs)"
             )
-        buckets_per_dev = options.buckets_per_dev
-        if diffusion_backend == "bsr":
-            # BSR tiles are dense [S, S] blocks: cap the bucket size so
-            # the tile pool stays MXU-shaped instead of ballooning to
-            # [R, T, N/K, N/K] on big problems (auto-sizing only ever
-            # *raises* the bucket count the caller configured)
-            max_s = 512
-            real_needed = -(-problem.n // (k * max_s))  # ceil
-            buckets_per_dev = max(buckets_per_dev,
-                                  real_needed + options.headroom)
+        buckets_per_dev = (_bsr_buckets_per_dev(problem.n, k, options)
+                           if diffusion_backend == "bsr"
+                           else options.buckets_per_dev)
         self.cfg = EngineConfig(
             k=k,
             target_error=problem.target_error,
@@ -331,6 +376,8 @@ class _EngineDriver:
         self.arrays = build_engine_arrays(problem.graph, problem.b,
                                           self.cfg)
         self.engine = DistributedEngine(self.arrays, self.cfg)
+        self.problem = problem
+        self.options = options
         self.l = max(problem.n_edges, 1)
         self._seeded = False
 
@@ -353,6 +400,10 @@ class _EngineDriver:
         self._chunks = 0
         self._moves: List[Tuple[int, int, int, int]] = []
         self._prev_ops = np.zeros(self.cfg.k, dtype=np.int64)
+        # rescale carry-over: a rescale re-inits the sharded counters at
+        # the new width, so phase totals accumulate into host offsets
+        self._ops_offset = 0
+        self._rounds_offset = 0
         self._seeded = True
 
     def advance(self, tol: float, round_limit: int) -> None:
@@ -376,16 +427,84 @@ class _EngineDriver:
         return self._resid
 
     def ops(self) -> int:
-        return int(np.asarray(self.ex.state.ops).astype(np.int64).sum())
+        return self._ops_offset + int(
+            np.asarray(self.ex.state.ops).astype(np.int64).sum())
 
     def rounds(self) -> int:
-        return int(np.asarray(self.ex.state.rounds))
+        return self._rounds_offset + int(np.asarray(self.ex.state.rounds))
 
     def exhausted(self) -> bool:
         return self._chunks >= self.cfg.max_chunks
 
     def move_log(self) -> List[Tuple[int, int, int, int]]:
         return list(self._moves)
+
+    # ---- checkpointable state (node space) --------------------------------
+    def fluid(self) -> Tuple[np.ndarray, np.ndarray]:
+        return (self.engine.gather_nodes(self.ex.state.f,
+                                         self.ex.row_of_bucket),
+                self.engine.gather_nodes(self.ex.state.h,
+                                         self.ex.row_of_bucket))
+
+    def threshold(self) -> np.ndarray:
+        return np.asarray(self.ex.state.t, dtype=np.float64)
+
+    def set_threshold(self, t: np.ndarray) -> None:
+        import jax
+
+        t = np.asarray(t, dtype=np.float64).reshape(-1)
+        if t.shape != (self.cfg.k,):
+            return  # checkpointed at a different width: keep the
+            # re-derived thresholds (any schedule is a valid D-iteration)
+        self.ex.state = dataclasses.replace(
+            self.ex.state,
+            t=jax.device_put(t.astype(self.cfg.dtype),
+                             self.engine.row_sharding))
+
+    # ---- elasticity -------------------------------------------------------
+    def note_straggler(self, pid: int, slowdown: float) -> None:
+        """Signal-level straggler injection: the control plane sees the
+        PID's load inflated by ``slowdown`` (a real straggling device
+        cannot be slowed from the host, but the controller's view can —
+        it then sheds buckets exactly as in production)."""
+        scale = (self.engine.load_scale if self.engine.load_scale
+                 is not None else np.ones(self.cfg.k))
+        scale = np.asarray(scale, dtype=np.float64).copy()
+        scale[pid] = slowdown
+        self.engine.load_scale = scale
+
+    def rescale(self, k_new: int,
+                strict: bool = False) -> List[Tuple[int, int, int]]:
+        """Grow/shrink the pid axis mid-solve (H and F travel in node
+        space; shrink drains through the BucketMoveExecutor path when
+        the surviving headroom can absorb it).  Returns the executed
+        drain triples; they are also appended to the move log as
+        ``(chunk, src, dst, units)``."""
+        if k_new == self.cfg.k:
+            return []
+        prev_ops, prev_rounds = self.ops(), self.rounds()
+        bpd = (_bsr_buckets_per_dev(self.problem.n, k_new, self.options)
+               if self.cfg.diffusion_backend == "bsr"
+               else self.options.buckets_per_dev)
+        old_scale = self.engine.load_scale
+        self.engine, self.ex, drains = self.engine.rescale(
+            self.ex, k_new, self.problem.graph, self.problem.b,
+            buckets_per_dev=bpd, strict=strict)
+        if old_scale is not None:
+            # surviving stragglers stay stragglers across the re-mesh;
+            # dropped/grown slots are fresh (healthy) capacity
+            scale = np.ones(k_new, dtype=np.float64)
+            m = min(k_new, old_scale.shape[0])
+            scale[:m] = old_scale[:m]
+            self.engine.load_scale = scale
+        self.cfg = self.engine.cfg
+        self.arrays = self.engine.a
+        for src, dst, moved in drains:
+            self._moves.append((self._chunks, src, dst, moved))
+        self._prev_ops = np.zeros(k_new, dtype=np.int64)
+        self._ops_offset = prev_ops
+        self._rounds_offset = prev_rounds
+        return drains
 
     def note_graph_churn(self, churn_per_node: np.ndarray) -> None:
         """Feed edge churn to the balance control plane.
@@ -434,6 +553,22 @@ _DRIVERS = {
 }
 
 
+def _invariant_violation(problem: Problem, b: np.ndarray, h: np.ndarray,
+                         f: np.ndarray, edges=None) -> float:
+    """|B − (I−P)·H − F|_1 against the problem's *current* matrix.
+
+    Zero (up to accumulation rounding) along any valid D-iteration
+    schedule — the checkpoint-integrity oracle: a torn write, a
+    corrupted leaf, or a checkpoint taken against a different P all
+    violate it by a macroscopic margin.  ``edges`` optionally supplies
+    a pre-materialized ``(src, dst, w)`` edge list so repeated checks
+    (restore's candidate walk) pay the O(L) materialization once.
+    """
+    src, dst, w = edges if edges is not None else problem.p.edge_list()
+    ph = np.bincount(dst, weights=h[src] * w, minlength=problem.n)
+    return float(np.abs(b - h + ph - f).sum())
+
+
 # --------------------------------------------------------------------------- #
 # the session
 # --------------------------------------------------------------------------- #
@@ -473,6 +608,8 @@ class SolverSession:
         # cached once: warm_start re-derives P·H per serving request and
         # must not pay the O(L) edge-list materialization every time
         self._edges = problem.p.edge_list()
+        self._ckpt_step = 0
+        self.restored_from: Optional[dict] = None
 
     # ---- state views ------------------------------------------------------
     @property
@@ -512,20 +649,32 @@ class SolverSession:
 
     # ---- streaming solve --------------------------------------------------
     def run(self, until: Optional[float] = None,
-            max_rounds: Optional[int] = None) -> Iterator[RoundReport]:
+            max_rounds: Optional[int] = None,
+            chaos=None) -> Iterator[RoundReport]:
         """Drain F toward ``until`` (a target_error), streaming one
         :class:`RoundReport` per trace grain (``options.trace_every``
         frontier rounds / one engine chunk).  The final yielded report
-        is the converged (or budget-exhausted) state."""
+        is the converged (or budget-exhausted) state.
+
+        ``chaos`` is an optional :class:`repro.chaos.SessionInjector`:
+        its plan's events fire *before* each grain (rounds = grain
+        indices, starting at 1).  A ``kill`` event raises
+        :class:`repro.chaos.ChaosKill` — recovery is the caller's
+        restore + rescale flow (DESIGN.md §8)."""
         self._check_fresh()
+        if chaos is not None:
+            chaos.bind(self)
         tol = self._tol(until)
         cap = max_rounds if max_rounds is not None else (
             self.options.max_rounds)
-        d = self._driver
         while True:
+            d = self._driver
             if d.residual() <= tol or d.rounds() >= cap or d.exhausted():
                 yield RoundReport(d.rounds(), d.residual(), d.ops())
                 return
+            if chaos is not None:
+                chaos.before_grain(self)
+                d = self._driver  # chaos may have rebuilt the driver
             if isinstance(d, _EngineDriver):
                 d.advance(tol, cap)
             else:
@@ -534,10 +683,12 @@ class SolverSession:
             yield RoundReport(d.rounds(), d.residual(), d.ops())
 
     def solve(self, until: Optional[float] = None,
-              max_rounds: Optional[int] = None) -> SolveReport:
+              max_rounds: Optional[int] = None,
+              chaos=None) -> SolveReport:
         """Run to convergence and return the unified report."""
         t0 = time.perf_counter()
-        trace = list(self.run(until=until, max_rounds=max_rounds))
+        trace = list(self.run(until=until, max_rounds=max_rounds,
+                              chaos=chaos))
         d = self._driver
         return SolveReport(
             x=d.x(),
@@ -621,6 +772,159 @@ class SolverSession:
                 delta.churn_per_node(self.problem.n))
         self._batch_driver = None  # edge list went stale
         return float(np.abs(f_new).sum())
+
+    # ---- elasticity: mid-solve PID rescale --------------------------------
+    def rescale(self, k_new: int,
+                strict: bool = False) -> List[Tuple[int, int, int]]:
+        """Grow/shrink the engine's ``pid`` axis mid-solve.
+
+        Shrink drains the dying devices' buckets through the existing
+        :class:`~repro.balance.executors.BucketMoveExecutor` path
+        (survivors' headroom rows absorb the moves, logged in the move
+        log; with insufficient headroom the drain is skipped — or
+        raises under ``strict=True``), then the axis re-meshes at
+        ``k_new`` over the store's cached engine-layout view; grow
+        re-meshes directly and the rebalancer spreads any residual
+        skew.  The accumulated (H, F) fluid pair travels in node space
+        — H is never recomputed.  Returns the executed drain triples
+        ``(src, dst, units)``.
+        """
+        self._check_fresh()
+        d = self._driver
+        if not isinstance(d, _EngineDriver):
+            raise ValueError(
+                f"rescale needs an engine backend (engine:chunk | "
+                f"engine:bsr); {self.method!r} has no pid axis"
+            )
+        d.problem = self.problem  # warm starts may have re-snapshotted
+        drains = d.rescale(k_new, strict=strict)
+        self.options = dataclasses.replace(self.options, k=k_new)
+        return drains
+
+    # ---- fault tolerance: atomic checkpoint / verified restore ------------
+    def checkpoint(self, root: str) -> str:
+        """Persist the session's fluid state under ``root`` atomically.
+
+        One step directory per call (monotonic step counter, atomic
+        ``os.replace`` commit via :mod:`repro.checkpoint.store`):
+        node-space ``(B, F, H)`` + thresholds as array leaves, plus a
+        manifest extra carrying method, counters, the move log, and the
+        GraphStore version the state was built against.  Returns the
+        committed directory path.
+        """
+        from repro.checkpoint import save_checkpoint
+
+        self._check_fresh()
+        d = self._driver
+        f, h = d.fluid()
+        self._ckpt_step += 1
+        tree = {"b": self._b, "f": f, "h": h, "t": d.threshold()}
+        extra = {
+            "method": self.method,
+            "n": self.problem.n,
+            "n_edges": self.problem.n_edges,
+            "store_version": self.problem.store_version,
+            "ops": d.ops(),
+            "rounds": d.rounds(),
+            "residual": d.residual(),
+            "move_log": [list(m) for m in d.move_log()],
+        }
+        return save_checkpoint(root, self._ckpt_step, tree, extra)
+
+    @staticmethod
+    def _reject_reason(problem: Problem, b: np.ndarray, f: np.ndarray,
+                       h: np.ndarray, extra: dict, rtol: float,
+                       edges=None) -> Optional[str]:
+        """Why a loaded checkpoint cannot resume against ``problem``
+        (None = accept).  The decisive oracle is the §2.2 invariant
+        ``B = (I−P)H + F`` evaluated against the problem's CURRENT
+        matrix: a torn/corrupted leaf or a checkpoint taken before a
+        graph delta both violate it macroscopically."""
+        if b.shape != (problem.n,):
+            return (f"shape mismatch: checkpoint N={b.shape[0]}, "
+                    f"problem N={problem.n}")
+        if extra.get("n") not in (None, problem.n):
+            return f"stale: checkpoint N={extra['n']} != {problem.n}"
+        if extra.get("n_edges") not in (None, problem.n_edges):
+            return (f"stale: checkpoint graph had {extra['n_edges']} "
+                    f"edges, problem has {problem.n_edges}")
+        sv = extra.get("store_version")
+        if (sv is not None and problem.store is not None
+                and problem.graph.version != sv):
+            return (f"stale: GraphStore advanced to version "
+                    f"{problem.graph.version}, checkpoint captured {sv}")
+        viol = _invariant_violation(problem, b, h, f, edges=edges)
+        scale = max(1.0, float(np.abs(b).sum() + np.abs(h).sum()))
+        if viol > rtol * scale:
+            return (f"invariant violated: |B−(I−P)H−F|₁ = {viol:.3e} > "
+                    f"{rtol * scale:.3e} (torn or stale checkpoint)")
+        return None
+
+    @classmethod
+    def restore(cls, root: str, problem: Problem,
+                method: Optional[str] = None,
+                options: Optional[SolverOptions] = None,
+                step: Optional[int] = None,
+                invariant_rtol: float = 1e-4, **kw) -> "SolverSession":
+        """Resume a session from the newest checkpoint that *verifies*.
+
+        Every candidate step (newest first; exactly ``step`` when given)
+        is loaded and checked — ``B − (I−P)H − F ≈ 0`` against
+        ``problem``'s current matrix, N/edge-count/store-version
+        agreement — and a failing checkpoint is **rejected rather than
+        silently resumed**, falling back to the next older complete
+        step.  Raises with the per-step rejection reasons when nothing
+        survives.  The restored session keeps the checkpoint's RHS
+        (``problem.with_b``), re-seeds ``(F, H)`` and the thresholds,
+        and records provenance in ``session.restored_from``.
+        """
+        from repro.checkpoint import list_steps, load_checkpoint
+
+        steps = list_steps(root)
+        if step is not None:
+            if step not in steps:
+                raise FileNotFoundError(
+                    f"no complete checkpoint for step {step} under {root}"
+                )
+            candidates = [step]
+        else:
+            candidates = steps[::-1]
+        if not candidates:
+            raise FileNotFoundError(f"no complete checkpoint under {root}")
+        tree_like = {
+            "b": np.zeros(problem.n), "f": np.zeros(problem.n),
+            "h": np.zeros(problem.n), "t": np.zeros(()),
+        }
+        rejected: List[Tuple[int, str]] = []
+        edges = problem.p.edge_list()  # once, not per candidate (O(L))
+        for s in candidates:
+            try:
+                tree, _, extra = load_checkpoint(root, tree_like, s)
+            except Exception as e:
+                rejected.append((s, f"unreadable: {e}"))
+                continue
+            b, f, h = tree["b"], tree["f"], tree["h"]
+            reason = cls._reject_reason(problem, b, f, h, extra,
+                                        invariant_rtol, edges=edges)
+            if reason is not None:
+                rejected.append((s, reason))
+                continue
+            session = cls(problem.with_b(b),
+                          method=method or extra["method"],
+                          options=options, **kw)
+            session._driver.seed(f, h)
+            session._driver.set_threshold(tree["t"])
+            session._ckpt_step = s
+            session.restored_from = {
+                "step": s,
+                "ops": extra.get("ops", 0),
+                "rounds": extra.get("rounds", 0),
+                "move_log": [tuple(m) for m in extra.get("move_log", [])],
+                "rejected": rejected,
+            }
+            return session
+        detail = "; ".join(f"step {s}: {r}" for s, r in rejected)
+        raise ValueError(f"no valid checkpoint under {root}: {detail}")
 
     # ---- batched multi-RHS ------------------------------------------------
     def solve_batch(self, b_matrix: np.ndarray,

@@ -135,12 +135,16 @@ class BucketMoveExecutor:
         dev_of_bucket = self.row_of_bucket // cfg.buckets_per_dev
         return np.bincount(dev_of_bucket[:n_real], minlength=cfg.k)
 
-    def apply(self, plan: MovePlan) -> int:
+    def apply(self, plan: MovePlan, keep_min: int = 1) -> int:
+        """Execute ``plan``.  ``keep_min=1`` (rebalancing) never empties
+        the source device; the rescale drain passes ``keep_min=0`` so a
+        dying device can hand over its last bucket."""
         import jax
 
         eng = self.engine
         perm, new_map, moved = eng._plan_move(
-            self.row_of_bucket, plan.src, plan.dst, plan.units)
+            self.row_of_bucket, plan.src, plan.dst, plan.units,
+            keep_min=keep_min)
         if moved == 0:
             return 0
         self.row_of_bucket = new_map

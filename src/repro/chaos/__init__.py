@@ -1,0 +1,25 @@
+"""Deterministic chaos harness: seeded disruption plans + injectors.
+
+The elasticity/fault-tolerance proof layer (DESIGN.md §8): a
+:class:`ChaosPlan` schedules straggler / kill / rescale / churn-burst /
+checkpoint-crash events against a running solve, the injectors replay
+it bit-identically, and the §2.2 invariant ``B = (I−P)H + F`` is the
+recovery oracle throughout.
+
+>>> from repro.chaos import ChaosPlan, ChaosRunner
+>>> plan = ChaosPlan(seed=0).kill(pid=1, round=3).rescale(2, round=5)
+>>> runner = ChaosRunner(problem, "engine:chunk", plan, ckpt_dir="/tmp/ck")
+>>> runner.measure()  # recovery overhead vs an undisturbed twin
+"""
+from .inject import ChaosKill, ChaosRunner, SessionInjector, tear_checkpoint
+from .plan import EVENT_KINDS, ChaosEvent, ChaosPlan
+
+__all__ = [
+    "EVENT_KINDS",
+    "ChaosEvent",
+    "ChaosKill",
+    "ChaosPlan",
+    "ChaosRunner",
+    "SessionInjector",
+    "tear_checkpoint",
+]

@@ -1,6 +1,7 @@
 from .store import (  # noqa: F401
     CheckpointManager,
     latest_step,
+    list_steps,
     load_checkpoint,
     save_checkpoint,
 )

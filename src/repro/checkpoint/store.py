@@ -31,6 +31,7 @@ __all__ = [
     "save_checkpoint",
     "load_checkpoint",
     "latest_step",
+    "list_steps",
     "CheckpointManager",
 ]
 
@@ -68,9 +69,14 @@ def save_checkpoint(root: str, step: int, tree: Any,
     return final
 
 
-def latest_step(root: str) -> Optional[int]:
+def list_steps(root: str) -> list:
+    """All *complete* checkpoint steps under ``root``, ascending.
+
+    Torn writes (missing/incomplete manifest, unparsable JSON) are
+    skipped — they never surface as restorable steps.
+    """
     if not os.path.isdir(root):
-        return None
+        return []
     steps = []
     for name in os.listdir(root):
         if name.startswith("step_") and not name.endswith(".tmp"):
@@ -83,7 +89,12 @@ def latest_step(root: str) -> Optional[int]:
                         steps.append(int(m["step"]))
                 except Exception:
                     continue
-    return max(steps) if steps else None
+    return sorted(steps)
+
+
+def latest_step(root: str) -> Optional[int]:
+    steps = list_steps(root)
+    return steps[-1] if steps else None
 
 
 def load_checkpoint(root: str, tree_like: Any,

@@ -43,6 +43,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.balance.executors import BucketMoveExecutor
+from repro.balance.plan import MovePlan
 from repro.balance.policies import Rebalancer, make_rebalancer
 from repro.balance.signals import LoadSignal
 from repro.parallel.compat import shard_map
@@ -336,6 +337,12 @@ class DistributedEngine:
             )
         else:
             self.rebalancer = None
+        # chaos/straggler injection hook: a [K] factor multiplying the
+        # load signal the control plane sees (None = healthy).  A real
+        # straggling device cannot be slowed from here, but its *signal*
+        # can — the controller then sheds load exactly as it would in
+        # production (repro.chaos.SessionInjector sets this).
+        self.load_scale: Optional[np.ndarray] = None
         self._chunk = self._build_chunk()
         self._repartition = self._build_repartition()
 
@@ -672,28 +679,31 @@ class DistributedEngine:
         if self.rebalancer is None:
             return prev_ops
         sizes = ex.sizes()
+        scale = (self.load_scale if self.load_scale is not None
+                 else np.ones(self.cfg.k))
         if self.cfg.signal == "edge-ops":
             ops = np.asarray(ex.state.ops).astype(np.int64)
             # the on-device counter is int32 and cumulative over the
             # whole solve; recover the true per-chunk delta through
             # wraparound (valid while one chunk stays under 2^32 ops)
             delta = (ops - prev_ops) & 0xFFFFFFFF
-            sig = LoadSignal.from_edge_ops(delta, sizes, step=step)
+            sig = LoadSignal.from_edge_ops(delta * scale, sizes, step=step)
             prev_ops = ops
         else:
-            sig = LoadSignal.from_residuals(r + s_, sizes, step=step)
+            sig = LoadSignal.from_residuals((r + s_) * scale, sizes,
+                                            step=step)
         for plan in self.rebalancer.propose(sig):
             moved = ex.apply(plan)
             if moved:
                 move_log.append((step, plan.src, plan.dst, moved))
         return prev_ops
 
-    def extract_solution(self, state: EngineState,
-                         row_of_bucket: np.ndarray) -> np.ndarray:
-        """Gather H back to node space: bucket id's data lives at its
-        *current* row while the node map indexes its *initial* row."""
+    def gather_nodes(self, values, row_of_bucket: np.ndarray) -> np.ndarray:
+        """Gather a bucket-space [R, S] state array back to node space:
+        a bucket id's data lives at its *current* row while the node map
+        indexes its *initial* row."""
         a = self.a
-        h = np.asarray(state.h).reshape(a.n_rows, a.bucket_size)
+        v = np.asarray(values).reshape(a.n_rows, a.bucket_size)
         x = np.zeros(a.n, dtype=np.float64)
         for bid in range(a.n_rows):
             row0 = int(a.pos_of_bucket[bid])  # initial row (node map)
@@ -701,14 +711,23 @@ class DistributedEngine:
             nodes = a.node_of_slot[row0]
             valid = nodes >= 0
             if valid.any():
-                x[nodes[valid]] = h[row1, valid]
+                x[nodes[valid]] = v[row1, valid]
         return x
 
+    def extract_solution(self, state: EngineState,
+                         row_of_bucket: np.ndarray) -> np.ndarray:
+        """Gather H back to node space."""
+        return self.gather_nodes(state.h, row_of_bucket)
+
     def _plan_move(self, row_of_bucket: np.ndarray, src_dev: int,
-                   dst_dev: int, n_move: int
+                   dst_dev: int, n_move: int, keep_min: int = 1
                    ) -> Tuple[Optional[np.ndarray], np.ndarray, int]:
         """Plan a row permutation moving up to ``n_move`` real buckets from
         ``src_dev`` to free (inert) rows on ``dst_dev``.
+
+        ``keep_min`` is the floor of real buckets left on the source —
+        1 for rebalancing moves (a PID never empties itself), 0 for the
+        rescale drain (a dying device hands everything over).
 
         Returns ``(perm, new_row_of_bucket, moved)`` with
         ``perm[i] = old row whose contents land in new row i``
@@ -721,7 +740,8 @@ class DistributedEngine:
         src_real = np.nonzero(dev_of_bucket[:n_real] == src_dev)[0]
         inert_ids = np.arange(n_real, row_of_bucket.shape[0])
         dst_free = inert_ids[dev_of_bucket[inert_ids] == dst_dev]
-        moved = int(min(n_move, max(src_real.size - 1, 0), dst_free.size))
+        moved = int(min(n_move, max(src_real.size - keep_min, 0),
+                        dst_free.size))
         if moved == 0:
             return None, row_of_bucket, 0
         new_map = row_of_bucket.copy()
@@ -731,3 +751,105 @@ class DistributedEngine:
             perm[q_row], perm[p_row] = p_row, q_row
             new_map[bid], new_map[q] = q_row, p_row
         return perm, new_map, moved
+
+    # ------------------------------------------------------------------ #
+    # mid-solve PID rescale (elastic scale-up / device loss)
+    # ------------------------------------------------------------------ #
+    def _free_rows_per_device(self, row_of_bucket: np.ndarray) -> np.ndarray:
+        """Inert (landing-capable) bucket rows currently on each device."""
+        cfg = self.cfg
+        n_real = cfg.k * (cfg.buckets_per_dev - cfg.headroom)
+        dev_of_bucket = row_of_bucket // cfg.buckets_per_dev
+        return np.bincount(dev_of_bucket[n_real:], minlength=cfg.k)
+
+    def drain_for_shrink(self, ex, k_new: int):
+        """Evacuate every real bucket owned by devices >= ``k_new`` onto
+        the survivors' inert headroom rows, one bucket at a time to the
+        survivor with the most free rows (deterministic, load-levelling).
+
+        Runs through the existing :class:`~repro.balance.executors.
+        BucketMoveExecutor` path — the same in-graph permutation the
+        dynamic partition uses — so the drain IS a sequence of executed
+        ``MovePlan``\\ s, returned as ``(src, dst, moved)`` triples.
+        Raises when the surviving headroom cannot absorb the evacuation.
+        """
+        cfg = self.cfg
+        sizes = ex.sizes()
+        need = int(sizes[k_new:].sum())
+        free = self._free_rows_per_device(ex.row_of_bucket)
+        have = int(free[:k_new].sum())
+        if need > have:
+            raise ValueError(
+                f"cannot shrink to k={k_new}: {need} real buckets must "
+                f"evacuate but survivors have only {have} free headroom "
+                f"rows (raise EngineConfig.headroom)"
+            )
+        drains = []
+        for d in range(k_new, cfg.k):
+            while ex.sizes()[d] > 0:
+                free = self._free_rows_per_device(ex.row_of_bucket)
+                free[k_new:] = -1  # dying devices never receive
+                dst = int(np.argmax(free))
+                moved = ex.apply(
+                    MovePlan(src=d, dst=dst, units=1, kind="bucket"),
+                    keep_min=0)
+                assert moved == 1, (d, dst, moved)
+                drains.append((d, dst, moved))
+        return drains
+
+    def rescale(self, ex, k_new: int, g, b: np.ndarray,
+                buckets_per_dev: Optional[int] = None,
+                strict: bool = False):
+        """Grow/shrink the ``pid`` axis mid-solve without recomputing H.
+
+        Shrink first *drains* the dying devices through the executor
+        path (:meth:`drain_for_shrink` — headroom rows absorb the
+        moves), so every byte of solver state leaves a lost device
+        through the same collective permutation the rebalancer uses;
+        then the axis is re-meshed at ``k_new`` over the store's cached
+        engine-layout view and the fluid pair ``(F, H)`` is carried over
+        in node space (the invariant ``B = (I−P)H + F`` travels with
+        it).  Grow is the same re-mesh without a drain; the fresh
+        layout is balanced by construction and the rebalancer spreads
+        any residual skew.
+
+        When the survivors' headroom cannot absorb the evacuation the
+        drain is skipped and the state rides the node-space carry alone
+        (``strict=True`` raises instead — tests that must exercise the
+        executor drain use it).
+
+        Returns ``(engine, executor, drains)`` — a NEW engine bound to
+        ``k_new`` devices with a freshly seeded policy, its executor in
+        the cold-start bucket layout of ``k_new`` (so a replay of the
+        post-rescale move log over a cold start reproduces the
+        ownership map exactly), and the executed drain triples.
+        """
+        cfg = self.cfg
+        if k_new == cfg.k:
+            return self, ex, []
+        if k_new < 1:
+            raise ValueError(f"k_new must be >= 1, got {k_new}")
+        n_dev = len(jax.devices())
+        if k_new > n_dev:
+            raise ValueError(
+                f"rescale to k={k_new} needs {k_new} physical devices, "
+                f"have {n_dev}"
+            )
+        drains = []
+        if k_new < cfg.k:
+            need = int(ex.sizes()[k_new:].sum())
+            have = int(self._free_rows_per_device(
+                ex.row_of_bucket)[:k_new].sum())
+            if need <= have or strict:
+                drains = self.drain_for_shrink(ex, k_new)
+        f_nodes = self.gather_nodes(ex.state.f, ex.row_of_bucket)
+        h_nodes = self.gather_nodes(ex.state.h, ex.row_of_bucket)
+        new_cfg = dataclasses.replace(
+            cfg, k=k_new,
+            buckets_per_dev=(buckets_per_dev if buckets_per_dev is not None
+                             else cfg.buckets_per_dev))
+        arrays = build_engine_arrays(g, b, new_cfg)
+        engine = DistributedEngine(arrays, new_cfg, axis=self.axis)
+        new_ex = BucketMoveExecutor(engine,
+                                    engine.init_state(f_nodes, h_nodes))
+        return engine, new_ex, drains

@@ -94,13 +94,17 @@ def run_sequential(
     gamma: float = GAMMA,
     max_ops: int = 10**9,
     trace: Optional[List[Tuple[int, float, int]]] = None,
+    observer=None,
 ) -> DiterationResult:
     """Single-PID D-iteration with the paper's cyclic threshold sweep.
 
     Elementary op = one edge push (cost model §2.3); dangling diffusions are
     charged one op.  Stops when |F|_1 <= target_error * eps.  ``trace``,
     when given, collects one ``(sweep, |F|_1, cumulative_ops)`` record per
-    threshold sweep (the registry's per-round trace).
+    threshold sweep (the registry's per-round trace); ``observer(f, h)``,
+    when given, is called after every sweep with the LIVE state arrays —
+    the conservation-oracle hook of tests/test_invariants.py (read-only
+    by contract).
     """
     if weights is None:
         weights = default_weights(g)
@@ -134,6 +138,8 @@ def run_sequential(
             n_diff += 1
         if trace is not None:
             trace.append((n_sweeps, residual_l1(f), n_ops))
+        if observer is not None:
+            observer(f, h)
     return DiterationResult(
         x=h,
         residual=residual_l1(f),

@@ -114,12 +114,29 @@ class SimResult:
     hist_edge_ops: np.ndarray = dataclasses.field(
         default_factory=lambda: np.zeros(0, dtype=np.int64)
     )
+    # chaos events fired during the run: (step, kind) — empty when the
+    # run was undisturbed
+    chaos_log: List[Tuple[int, str]] = dataclasses.field(
+        default_factory=list
+    )
 
     @property
     def cost_per_pid(self) -> np.ndarray:
         return (self.count_active + self.count_idle) / max(
             1, self.count_active.shape[0]
         )
+
+
+def _pad_hist(rows: List[np.ndarray], dtype=np.float64) -> np.ndarray:
+    """Stack per-step [K] records whose K may have changed mid-run
+    (chaos rescale): right-pad each row with zeros to the widest K."""
+    if not rows:
+        return np.zeros((0, 0), dtype=dtype)
+    width = max(r.shape[0] for r in rows)
+    out = np.zeros((len(rows), width), dtype=dtype)
+    for i, r in enumerate(rows):
+        out[i, : r.shape[0]] = r
+    return out
 
 
 def _edge_ranges(indptr: np.ndarray, nodes: np.ndarray) -> np.ndarray:
@@ -189,6 +206,10 @@ class DistributedSimulator:
             ]
         )
         self.debt = np.zeros(k, dtype=np.float64)  # frozen-PID carryover
+        # chaos injection state: per-PID speed multiplier (1 = healthy,
+        # 1/slowdown = straggler, 0 = dead) — repro.chaos drives this
+        self.speed_factor = np.ones(k, dtype=np.float64)
+        self.chaos_log: List[Tuple[int, str]] = []
 
         # --- counters ---------------------------------------------------------
         self.count_active = np.zeros(k, dtype=np.int64)
@@ -198,6 +219,7 @@ class DistributedSimulator:
         self.n_moves = 0
 
         # --- rebalancing control plane ---------------------------------------
+        self._rebalancer_injected = rebalancer is not None
         if rebalancer is not None:
             self.rebalancer: Optional[Rebalancer] = rebalancer
         elif cfg.policy or cfg.dynamic:
@@ -307,7 +329,9 @@ class DistributedSimulator:
 
     def _local_step(self, k: int) -> None:
         """One time step of PID k: sweeps under the threshold schedule."""
-        budget = self.speed + self.debt[k]
+        if self.speed_factor[k] <= 0.0:
+            return  # dead machine: no budget, no idle accrual
+        budget = self.speed * self.speed_factor[k] + self.debt[k]
         self.debt[k] = 0.0
         cfg = self.cfg
         omega = self.sets[k]
@@ -409,14 +433,162 @@ class DistributedSimulator:
 
     def _repartition(self, step: int) -> None:
         for plan in self.rebalancer.propose(self._load_signal(step)):
+            # liveness is the simulator's knowledge, not the policy's: a
+            # dead machine (chaos kill) neither sheds nor receives — its
+            # zero residual would otherwise make it the policy's
+            # favorite receiver and strand fluid on lost capacity
+            if (self.speed_factor[plan.src] <= 0.0
+                    or self.speed_factor[plan.dst] <= 0.0):
+                continue
             moved = self.executor.apply(plan)
             if moved:
                 self.move_log.append((step, plan.src, plan.dst, moved))
 
     # --------------------------------------------------------------------- #
+    # chaos hooks: straggler / kill / rescale (repro.chaos, DESIGN.md §8)
+    # --------------------------------------------------------------------- #
+    def kill_pid(self, pid: int, step: int = 0) -> None:
+        """Machine loss: PID ``pid`` stops computing and its Ω is handed
+        to the surviving PIDs (balanced contiguous chunks, smallest
+        survivors first — the fault-tolerant takeover a production
+        cluster performs).  The simulator idealizes state as global, so
+        the PID's in-flight outbox is flushed first — *capacity* is
+        lost, not fluid (data loss + restore is the session-level chaos
+        path).  Receivers are charged the §2.4 reassignment cost."""
+        if self.speed_factor[pid] <= 0.0:
+            return
+        self._exchange(pid)
+        self.speed_factor[pid] = 0.0
+        if self.rebalancer is not None:
+            self.rebalancer.reset_worker(pid)  # its slope history died
+        doomed = self.sets[pid]
+        self.sets[pid] = np.zeros(0, dtype=np.int64)
+        survivors = [kk for kk in range(self.k)
+                     if self.speed_factor[kk] > 0.0]
+        if not survivors:
+            raise ValueError("kill would leave no live PID")
+        if doomed.size == 0:
+            return
+        order = sorted(survivors, key=lambda kk: (self.sets[kk].size, kk))
+        for kk, chunk in zip(order, np.array_split(doomed, len(order))):
+            if chunk.size == 0:
+                continue
+            self.sets[kk] = np.concatenate([self.sets[kk], chunk])
+            self.owner[chunk] = kk
+            self.count_active[kk] += chunk.size
+            self.debt[kk] -= float(chunk.size)
+            mx = float((np.abs(self.f[chunk]) * self.weights[chunk]).max())
+            if mx > 0:
+                self.t_k[kk] = min(self.t_k[kk], mx * 1.0001)
+            self.move_log.append((step, pid, kk, int(chunk.size)))
+            self.n_moves += 1
+
+    def rescale(self, k_new: int, step: int = 0) -> None:
+        """Elastic rescale: repartition the live node sets over ``k_new``
+        PIDs mid-solve.  All outboxes flush first (every pending push is
+        addressed through the owner map, which is about to change), then
+        the live Ω's concatenate in PID order and split into ``k_new``
+        contiguous near-equal chunks — locality-preserving, and exactly
+        the partition a cold start over the same node order would build.
+        Per-PID controller state (thresholds, debt, policy slopes) is
+        re-seeded; cumulative counters carry over where the PID survives.
+        """
+        if k_new < 1:
+            raise ValueError(f"k_new must be >= 1, got {k_new}")
+        k_old = self.k
+        if k_new == k_old:
+            return
+        for kk in range(k_old):
+            self._exchange(kk)
+        live = [self.sets[kk] for kk in range(k_old)
+                if self.sets[kk].size]
+        nodes = (np.concatenate(live) if live
+                 else np.zeros(0, dtype=np.int64))
+        self.sets = [np.asarray(c, dtype=np.int64).copy()
+                     for c in np.array_split(nodes, k_new)]
+        for i, s in enumerate(self.sets):
+            self.owner[s] = i
+
+        def _resize(a, fill=0):
+            out = np.full(k_new, fill, dtype=a.dtype)
+            m = min(k_new, k_old)
+            out[:m] = a[:m]
+            return out
+
+        self.k = k_new
+        # never mutate the caller's config object: a cfg reused for a
+        # twin simulator must still mean the ORIGINAL width
+        self.cfg = dataclasses.replace(self.cfg, k=k_new)
+        self.speed = self.cfg.pid_speed or max(1, self.n // k_new)
+        self.count_active = _resize(self.count_active)
+        self.count_idle = _resize(self.count_idle)
+        self._prev_active = _resize(self._prev_active)
+        self.debt = np.zeros(k_new, dtype=np.float64)
+        # surviving DEGRADED machines stay degraded; dead slots are
+        # replaced by fresh capacity (replacing lost machines is what a
+        # post-kill rescale is for), as is any grown width
+        old_sf = self.speed_factor
+        self.speed_factor = np.ones(k_new, dtype=np.float64)
+        m = min(k_new, k_old)
+        keep = old_sf[:m] > 0.0
+        self.speed_factor[:m][keep] = old_sf[:m][keep]
+        self.outbox = [np.zeros(self.n, dtype=np.float64)
+                       for _ in range(k_new)]
+        self.touched = [[] for _ in range(k_new)]
+        self.s_abs = np.zeros(k_new, dtype=np.float64)
+        self.pending_send_cost = np.zeros(k_new, dtype=np.int64)
+        t0 = np.abs(self.f) * self.weights
+        self.t_k = np.array(
+            [(t0[s].max() * 2.0 if s.size else 1.0) + 1e-300
+             for s in self.sets]
+        )
+        if self.rebalancer is not None:
+            # policy state is per-worker and cannot survive a width
+            # change; a cfg-built policy is rebuilt at k_new, but a
+            # caller-injected instance must not be silently swapped for
+            # a default one (policy-comparison runs would measure the
+            # wrong controller from this step on)
+            if self._rebalancer_injected:
+                raise ValueError(
+                    "rescale cannot resize a caller-injected rebalancer;"
+                    " construct the simulator from cfg.policy, or swap "
+                    "sim.rebalancer yourself before the rescale event"
+                )
+            self.rebalancer = make_rebalancer(
+                self.cfg.policy or "slope_ema", k=k_new,
+                target_error=self.cfg.target_error, eta=self.cfg.eta,
+                z=self.cfg.z, unit="node",
+            )
+        self.move_log.append((step, -1, -1, k_new))  # rescale marker
+
+    def _fire_chaos(self, plan, cursor: int, step: int) -> int:
+        """Fire every due event (shared ``ChaosPlan.fire_due`` rule);
+        returns the advanced cursor."""
+        due, cursor = plan.fire_due(cursor, step)
+        for ev in due:
+            if ev.kind == "straggler":
+                self.speed_factor[ev.pid] = 1.0 / ev.slowdown
+            elif ev.kind == "kill":
+                self.kill_pid(ev.pid, step=step)
+            elif ev.kind == "rescale":
+                self.rescale(ev.k_new, step=step)
+            self.chaos_log.append((step, ev.kind))
+        return cursor
+
+    # --------------------------------------------------------------------- #
     # main loop
     # --------------------------------------------------------------------- #
-    def run(self) -> SimResult:
+    def run(self, chaos=None) -> SimResult:
+        """Run to convergence.  ``chaos`` is an optional
+        :class:`repro.chaos.ChaosPlan` whose straggler/kill/rescale
+        events fire in the step loop (rounds = simulator time steps);
+        the plan is validated against this simulator's width up front.
+        """
+        if chaos is not None:
+            from repro.chaos.plan import SIM_KINDS
+
+            chaos.validate(self.k, kinds=SIM_KINDS)
+        chaos_cursor = 0
         cfg = self.cfg
         hist_steps: List[int] = []
         hist_rs: List[np.ndarray] = []
@@ -424,9 +596,16 @@ class DistributedSimulator:
         hist_res: List[float] = []
         hist_eops: List[int] = []
         step = 0
+        speed_steps = 0  # Σ per-step nominal PID_Speed: a chaos rescale
+        # changes self.speed mid-run, and the §2.3 wall-clock metric
+        # must price each step at the speed it actually ran under
         converged = False
         while step < cfg.max_steps:
             step += 1
+            if chaos is not None:
+                chaos_cursor = self._fire_chaos(chaos, chaos_cursor, step)
+            speed_steps += self.speed  # after chaos: a rescale at this
+            # step changes the speed THIS step's local work runs under
             for k in range(self.k):
                 self._local_step(k)
             # exchange check (eq. 1): s_k > r_k / 2
@@ -454,21 +633,24 @@ class DistributedSimulator:
             h=self.h.copy(),
             converged=converged,
             n_steps=step,
-            cost_iterations=step * self.speed / max(1, self.g.n_edges),
+            cost_iterations=speed_steps / max(1, self.g.n_edges),
             count_active=self.count_active.copy(),
             count_idle=self.count_idle.copy(),
             n_exchanges=self.n_exchanges,
             n_moves=self.n_moves,
             residual=self.global_residual(),
             hist_steps=np.array(hist_steps, dtype=np.int64),
-            hist_rs=np.array(hist_rs) if hist_rs else np.zeros((0, self.k)),
+            hist_rs=(_pad_hist(hist_rs) if hist_rs
+                     else np.zeros((0, self.k))),
             hist_sizes=(
-                np.array(hist_sizes) if hist_sizes else np.zeros((0, self.k))
+                _pad_hist(hist_sizes, dtype=np.int64) if hist_sizes
+                else np.zeros((0, self.k))
             ),
             hist_residual=np.array(hist_res, dtype=np.float64),
             move_log=list(self.move_log),
             n_edge_ops=self.n_edge_ops,
             hist_edge_ops=np.array(hist_eops, dtype=np.int64),
+            chaos_log=list(self.chaos_log),
         )
 
 

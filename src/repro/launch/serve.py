@@ -22,9 +22,19 @@ Two modes:
   ``F' = F + (P'−P)·H``, so the evolving graph re-solves warm instead
   of cold.
 
+  The serving process is **elastic and fault tolerant** (DESIGN.md §8):
+  ``--ckpt-dir`` cuts an atomic checkpoint of the (H, F) fluid state
+  after every request; ``--resume`` restores the newest checkpoint that
+  passes the ``B = (I−P)H + F`` invariant check instead of solving
+  cold (torn/stale steps are rejected and skipped); ``--rescale-at R
+  --rescale-k K`` shrinks/grows the engine's pid axis mid-stream
+  (device loss / scale-up) without recomputing H — engine methods only.
+
     PYTHONPATH=src python -m repro.launch.serve rank --n 20000 --requests 8
     PYTHONPATH=src python -m repro.launch.serve rank --churn 0.01 \\
         --churn-every 3
+    PYTHONPATH=src python -m repro.launch.serve rank --ckpt-dir /tmp/ck \\
+        --resume
 """
 import argparse
 import sys
@@ -105,26 +115,79 @@ def rank_main(argv):
                     help="serve a graph-update request every this many "
                     "warm requests")
     ap.add_argument("--target-error", type=float, default=None)
+    ap.add_argument("--k", type=int, default=None,
+                    help="engine methods: devices on the pid axis")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="atomic fluid-state checkpoint after every "
+                    "served request (DESIGN.md §8)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the newest VALID checkpoint from "
+                    "--ckpt-dir instead of a cold solve")
+    ap.add_argument("--rescale-at", type=int, default=None,
+                    help="request index at which to rescale the pid "
+                    "axis (engine methods)")
+    ap.add_argument("--rescale-k", type=int, default=None,
+                    help="pid-axis width to rescale to at --rescale-at")
     args = ap.parse_args(argv)
     if args.churn > 0 and args.churn_every < 1:
         ap.error("--churn-every must be >= 1 when --churn is set")
+    if (args.rescale_at is None) != (args.rescale_k is None):
+        ap.error("--rescale-at and --rescale-k go together")
+    if args.resume and not args.ckpt_dir:
+        ap.error("--resume needs --ckpt-dir")
 
     rng = np.random.default_rng(0)
     g = webgraph_like(args.n, seed=1)
     problem = repro.Problem.pagerank(g, target_error=args.target_error)
+    options = repro.SolverOptions(k=args.k)
     print(f"N={g.n} L={g.n_edges} method={args.method} "
           f"target_error={problem.target_error:.2e}")
 
-    session = repro.SolverSession(problem, method=args.method)
-    t0 = time.time()
-    cold = session.solve()
-    print(f"[cold ] {cold.n_ops} edge pushes, {cold.n_rounds} rounds, "
-          f"{time.time()-t0:.2f}s — the serving baseline")
+    session = None
+    if args.resume:
+        try:
+            t0 = time.time()
+            session = repro.SolverSession.restore(
+                args.ckpt_dir, problem, method=args.method,
+                options=options)
+            info = session.restored_from
+            print(f"[resume] step {info['step']} "
+                  f"({len(info['rejected'])} rejected), residual="
+                  f"{session.residual:.2e}, {time.time()-t0:.2f}s — "
+                  "H carried over, no cold solve")
+            session.solve()  # drain whatever fluid remains
+            # no cold baseline this process: savings are reported
+            # against what a cold solve of this problem WOULD cost
+            baseline_ops = None
+        except FileNotFoundError:
+            print("[resume] no checkpoint yet — starting cold")
+            session = None
+        except ValueError as e:
+            # checkpoints exist but every step was rejected (torn /
+            # stale / wrong graph): serving must come up cold, not die
+            print(f"[resume] no VALID checkpoint ({e}) — starting cold")
+            session = None
+    if session is None:
+        session = repro.SolverSession(problem, method=args.method,
+                                      options=options)
+        t0 = time.time()
+        cold = session.solve()
+        baseline_ops = cold.n_ops
+        print(f"[cold ] {cold.n_ops} edge pushes, {cold.n_rounds} "
+              f"rounds, {time.time()-t0:.2f}s — the serving baseline")
+    if args.ckpt_dir:
+        print(f"[ckpt ] {session.checkpoint(args.ckpt_dir)}")
 
     from repro.graph import rotation_churn
 
     b = problem.b
     for req in range(args.requests):
+        if args.rescale_at is not None and req == args.rescale_at:
+            t0 = time.time()
+            drains = session.rescale(args.rescale_k)
+            print(f"[rescale {req}] pid axis -> k={args.rescale_k} "
+                  f"({len(drains)} buckets drained through the executor "
+                  f"path), {time.time()-t0:.2f}s — H not recomputed")
         if args.churn > 0 and req % args.churn_every == args.churn_every - 1:
             # a graph-update request: the crawl delivered link churn
             n_rot = max(1, int(args.churn * session.problem.n_edges) // 2)
@@ -133,10 +196,13 @@ def rank_main(argv):
             t0 = time.time()
             resid0 = session.update_graph(delta)
             rep = session.solve()
-            saved = 1.0 - rep.n_ops / max(cold.n_ops, 1)
+            saved = (f"{1.0 - rep.n_ops / max(baseline_ops, 1):.0%}"
+                     if baseline_ops else "n/a")
             print(f"[update {req}] {delta.n_changes} changed edges "
-                  f"|F0|={resid0:.2e} {rep.n_ops} ops ({saved:.0%} saved "
+                  f"|F0|={resid0:.2e} {rep.n_ops} ops ({saved} saved "
                   f"vs cold), {rep.n_rounds} rounds, {time.time()-t0:.2f}s")
+            if args.ckpt_dir:
+                session.checkpoint(args.ckpt_dir)
             continue
         # a drifting teleport vector: what a freshness-weighted or
         # user-conditioned ranking update looks like between requests
@@ -145,10 +211,13 @@ def rank_main(argv):
         t0 = time.time()
         resid0 = session.warm_start(b)
         rep = session.solve()
-        saved = 1.0 - rep.n_ops / max(cold.n_ops, 1)
+        saved = (f"{1.0 - rep.n_ops / max(baseline_ops, 1):.0%}"
+                 if baseline_ops else "n/a")
         print(f"[warm {req}] |F0|={resid0:.2e} {rep.n_ops} ops "
-              f"({saved:.0%} saved vs cold), {rep.n_rounds} rounds, "
+              f"({saved} saved vs cold), {rep.n_rounds} rounds, "
               f"{time.time()-t0:.2f}s")
+        if args.ckpt_dir:
+            session.checkpoint(args.ckpt_dir)
 
     # personalized batch: C independent teleport columns, one vmapped run
     hot = rng.choice(g.n, size=args.batch, replace=False)

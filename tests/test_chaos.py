@@ -1,0 +1,531 @@
+"""Elastic fault tolerance: checkpointed sessions, rescale, chaos plans.
+
+Acceptance (ISSUE 5):
+
+* on the N=4096 webgraph, ``kill(pid)`` at mid-solve followed by
+  ``restore`` + ``rescale(k−1)`` converges to ``|Δx|₁ ≤ 1e-6`` of an
+  undisturbed reference solve (subprocess, 8 fake host devices);
+* ``rescale`` up/down produces bucket ownership identical to a cold
+  start at ``k_new`` plus the same rebalancer trace (MovePlan-level
+  replay, PR 2 style);
+* a torn or stale checkpoint is REJECTED (the ``B = (I−P)H + F``
+  invariant check) rather than silently resumed — restore falls back
+  to the newest step that verifies.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import repro
+from repro.chaos import (
+    ChaosEvent,
+    ChaosKill,
+    ChaosPlan,
+    ChaosRunner,
+    SessionInjector,
+    tear_checkpoint,
+)
+from repro.core import webgraph_like
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.fixture(scope="module")
+def web1024_problem():
+    return repro.Problem.pagerank(webgraph_like(1024, seed=1))
+
+
+# --------------------------------------------------------------------------- #
+# the plan: deterministic, validated, replayable
+# --------------------------------------------------------------------------- #
+def test_plan_random_is_deterministic(repro_seed):
+    a = ChaosPlan.random(seed=repro_seed + 42, k=8, rounds=20, n_events=5)
+    b = ChaosPlan.random(seed=repro_seed + 42, k=8, rounds=20, n_events=5)
+    assert [
+        (e.kind, e.round, e.pid, e.slowdown, e.k_new, e.frac, e.seed)
+        for e in a
+    ] == [
+        (e.kind, e.round, e.pid, e.slowdown, e.k_new, e.frac, e.seed)
+        for e in b
+    ]
+    c = ChaosPlan.random(seed=repro_seed + 43, k=8, rounds=20, n_events=5)
+    assert repr(a) != repr(c) or a.events != c.events
+
+
+def test_plan_random_k1_is_consumable(repro_seed):
+    """Random plans for a 1-PID world never schedule a kill (nobody may
+    die) and always pass their own validation."""
+    for s in range(6):
+        plan = ChaosPlan.random(seed=repro_seed + s, k=1, rounds=10,
+                                n_events=6)
+        assert all(e.kind != "kill" for e in plan)
+        plan.validate(1, kinds=("straggler", "kill", "rescale"))
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError, match="unknown chaos event"):
+        ChaosEvent("meteor", 1)
+    with pytest.raises(ValueError, match="slowdown must be > 1"):
+        ChaosPlan().straggler(0, 1.0)
+    with pytest.raises(ValueError, match="frac"):
+        ChaosPlan().churn_burst(0.9, round=1)
+    with pytest.raises(ValueError, match="k_new"):
+        ChaosPlan().rescale(0, round=1)
+    plan = ChaosPlan().kill(5, round=3)
+    with pytest.raises(ValueError, match="only 4 PIDs"):
+        plan.validate(4)
+    # width is tracked THROUGH rescale events
+    plan2 = ChaosPlan().rescale(2, round=1).kill(3, round=5)
+    with pytest.raises(ValueError, match="only 2 PIDs"):
+        plan2.validate(8)
+    with pytest.raises(ValueError, match="unsupported"):
+        ChaosPlan().churn_burst(0.01, round=1).validate(
+            4, kinds=("straggler", "kill", "rescale"))
+    # events sort by round and at() slices exactly
+    p3 = ChaosPlan().kill(1, round=7).straggler(0, 2.0, round=2)
+    assert [e.round for e in p3] == [2, 7]
+    assert [e.kind for e in p3.at(7)] == ["kill"]
+    assert p3.at(3) == []
+
+
+# --------------------------------------------------------------------------- #
+# checkpoint / restore: resume, tear, staleness
+# --------------------------------------------------------------------------- #
+def test_checkpoint_resume_bit_equal(web1024_problem, tmp_path):
+    """Mid-solve checkpoint -> restore -> finish == one undisturbed
+    solve, exactly (the frontier loop is deterministic)."""
+    problem = web1024_problem
+    full = repro.SolverSession(problem,
+                               method="frontier:segment_sum").solve()
+    session = repro.SolverSession(problem, method="frontier:segment_sum")
+    for i, _ in enumerate(session.run()):
+        if i >= 3:
+            break
+    path = session.checkpoint(str(tmp_path))
+    assert os.path.exists(os.path.join(path, "manifest.json"))
+    restored = repro.SolverSession.restore(str(tmp_path), problem)
+    assert restored.restored_from["step"] == 1
+    assert restored.method == "frontier:segment_sum"  # from the manifest
+    assert restored.residual == pytest.approx(session.residual, rel=1e-6)
+    rep = restored.solve()
+    assert rep.converged
+    np.testing.assert_array_equal(rep.x, full.x)
+
+
+def test_restore_rejects_torn_falls_back(web1024_problem, tmp_path):
+    """A corrupted newest step (complete manifest, garbage H bytes) is
+    rejected by the invariant check; restore resumes the previous one."""
+    problem = web1024_problem
+    session = repro.SolverSession(problem, method="frontier:segment_sum")
+    for i, _ in enumerate(session.run()):
+        if i >= 2:
+            break
+    session.checkpoint(str(tmp_path))
+    for i, _ in enumerate(session.run(max_rounds=session.n_rounds + 64)):
+        pass
+    newest = session.checkpoint(str(tmp_path))
+    tear_checkpoint(newest)
+    restored = repro.SolverSession.restore(str(tmp_path), problem)
+    assert restored.restored_from["step"] == 1
+    assert restored.restored_from["rejected"], "tear went undetected"
+    assert "invariant" in restored.restored_from["rejected"][0][1]
+    # with no fallback left, restore raises instead of resuming garbage
+    tear_checkpoint(os.path.join(str(tmp_path), "step_000000001"))
+    with pytest.raises(ValueError, match="invariant violated"):
+        repro.SolverSession.restore(str(tmp_path), problem)
+
+
+def test_restore_rejects_stale_after_graph_delta(tmp_path):
+    """A checkpoint cut BEFORE a graph delta must not resume against
+    the patched matrix."""
+    from repro.graph import rotation_churn
+
+    problem = repro.Problem.pagerank(webgraph_like(512, seed=2))
+    session = repro.SolverSession(problem, method="frontier:segment_sum")
+    session.solve()
+    session.checkpoint(str(tmp_path))
+    session.update_graph(rotation_churn(session.problem.graph, 20, seed=3))
+    session.solve()
+    with pytest.raises(ValueError, match="stale"):
+        repro.SolverSession.restore(str(tmp_path), session.problem)
+    # a post-delta checkpoint restores fine against the same problem
+    session.checkpoint(str(tmp_path))
+    restored = repro.SolverSession.restore(str(tmp_path), session.problem)
+    assert restored.restored_from["step"] == 2
+
+
+def test_restore_across_methods(web1024_problem, tmp_path):
+    """Checkpoints are layout-free node-space state: an engine-written
+    step restores into a frontier session (and vice versa); only the
+    thresholds are width-bound and re-derive when shapes disagree."""
+    problem = web1024_problem
+    eng = repro.SolverSession(problem, method="engine:chunk")
+    for i, _ in enumerate(eng.run()):
+        if i >= 1:
+            break
+    eng.checkpoint(str(tmp_path / "eng"))
+    front = repro.SolverSession.restore(str(tmp_path / "eng"), problem,
+                                        method="frontier:segment_sum")
+    rep = front.solve()
+    assert rep.converged
+    ref = repro.SolverSession(problem,
+                              method="frontier:segment_sum").solve()
+    assert np.abs(rep.x - ref.x).sum() <= 2 * problem.target_error
+    # and the mirror direction
+    fr = repro.SolverSession(problem, method="frontier:segment_sum")
+    for i, _ in enumerate(fr.run()):
+        if i >= 1:
+            break
+    fr.checkpoint(str(tmp_path / "fr"))
+    eng2 = repro.SolverSession.restore(str(tmp_path / "fr"), problem,
+                                       method="engine:chunk")
+    rep2 = eng2.solve()
+    assert rep2.converged
+    assert np.abs(rep2.x - ref.x).sum() <= 2 * problem.target_error
+
+
+def test_restore_missing_and_explicit_step(web1024_problem, tmp_path):
+    with pytest.raises(FileNotFoundError):
+        repro.SolverSession.restore(str(tmp_path / "void"),
+                                    web1024_problem)
+    session = repro.SolverSession(web1024_problem,
+                                  method="frontier:segment_sum")
+    next(iter(session.run()))
+    session.checkpoint(str(tmp_path))
+    with pytest.raises(FileNotFoundError, match="step 9"):
+        repro.SolverSession.restore(str(tmp_path), web1024_problem,
+                                    step=9)
+    restored = repro.SolverSession.restore(str(tmp_path), web1024_problem,
+                                           step=1)
+    assert restored.restored_from["step"] == 1
+
+
+# --------------------------------------------------------------------------- #
+# session injection: kill raises, churn re-seeds, crash tears
+# --------------------------------------------------------------------------- #
+def test_injector_kill_raises_chaoskill(web1024_problem):
+    plan = ChaosPlan().kill(0, round=2)
+    session = repro.SolverSession(web1024_problem,
+                                  method="frontier:segment_sum")
+    with pytest.raises(ChaosKill, match="killed at grain 2"):
+        for _ in session.run(chaos=SessionInjector(plan)):
+            pass
+
+
+def test_injector_checkpoint_crash_needs_dir(web1024_problem):
+    plan = ChaosPlan().checkpoint_crash(round=1)
+    session = repro.SolverSession(web1024_problem,
+                                  method="frontier:segment_sum")
+    with pytest.raises(ValueError, match="no .*ckpt_dir"):
+        list(session.run(chaos=SessionInjector(plan)))
+
+
+def test_injector_rejects_pid_events_on_frontier(web1024_problem):
+    """Single-process backends have no pid axis: straggler/rescale
+    plans must fail at bind time, not mid-run."""
+    session = repro.SolverSession(web1024_problem,
+                                  method="frontier:segment_sum")
+    with pytest.raises(ValueError, match="unsupported"):
+        list(session.run(
+            chaos=SessionInjector(ChaosPlan().straggler(0, 2.0, round=1))))
+    with pytest.raises(ValueError, match="rescale needs an engine"):
+        session.rescale(2)
+
+
+def test_chaos_runner_kill_churn_crash_recovers(tmp_path, repro_seed):
+    """The full production flow on one session: crash at grain 4,
+    restore, absorb a churn burst, survive a torn checkpoint write,
+    die and recover again — still converges, every recovery verified
+    by the invariant oracle inside restore.  (Own Problem: churn
+    mutates the shared store.)"""
+    problem = repro.Problem.pagerank(webgraph_like(1024, seed=1))
+    plan = (ChaosPlan(seed=repro_seed)
+            .kill(0, round=4)
+            .churn_burst(0.01, round=7, seed=repro_seed + 5)
+            .checkpoint_crash(round=9)
+            .kill(0, round=12))
+    runner = ChaosRunner(problem, "frontier:segment_sum", plan,
+                         ckpt_dir=str(tmp_path), checkpoint_every=2)
+    m = runner.measure()
+    assert m["converged"]
+    assert m["kills"] == 2
+    assert [k for _, k in m["chaos_log"]] == [
+        "kill", "churn_burst", "checkpoint_crash", "kill"]
+    # churn changed the matrix: the runner's x legitimately differs from
+    # the pre-churn reference, but conservation still pins correctness
+    assert m["disturbed_ops"] > 0
+
+
+def test_chaos_runner_kill_after_churn_cold_restarts(tmp_path,
+                                                     repro_seed):
+    """A kill right after a churn burst, with every checkpoint cut
+    pre-churn: restore rejects them all (stale against the patched P)
+    and the runner falls back to a COLD restart instead of dying."""
+    problem = repro.Problem.pagerank(webgraph_like(1024, seed=1))
+    plan = (ChaosPlan(seed=repro_seed)
+            .churn_burst(0.01, round=3, seed=repro_seed + 1)
+            .kill(0, round=4))
+    runner = ChaosRunner(problem, "frontier:segment_sum", plan,
+                         ckpt_dir=str(tmp_path),
+                         checkpoint_every=10**6)  # only the base ckpt
+    m = runner.measure()
+    assert m["converged"] and m["kills"] == 1
+
+
+def test_chaos_runner_churn_ops_accounting(tmp_path, repro_seed):
+    """disturbed_ops counts EVERY push across churn re-seeds: the
+    injector banks the phase counters update_graph resets."""
+    problem = repro.Problem.pagerank(webgraph_like(1024, seed=1))
+    plan = ChaosPlan(seed=repro_seed).churn_burst(
+        0.01, round=5, seed=repro_seed + 9)
+    runner = ChaosRunner(problem, "frontier:segment_sum", plan,
+                         ckpt_dir=str(tmp_path), checkpoint_every=2)
+    session, disturbed, _wasted = runner.run()
+    assert runner.injector.absorbed_ops > 0
+    assert disturbed == runner.injector.absorbed_ops + session.n_ops
+
+
+def test_chaos_runner_kill_before_first_checkpoint(web1024_problem,
+                                                   tmp_path):
+    """A kill that fires before any periodic checkpoint recovers from
+    the runner's base checkpoint of the seeded state (cold restart),
+    instead of dying on an empty checkpoint dir."""
+    plan = ChaosPlan().kill(0, round=1)
+    runner = ChaosRunner(web1024_problem, "frontier:segment_sum", plan,
+                         ckpt_dir=str(tmp_path), checkpoint_every=10**6)
+    m = runner.measure()
+    assert m["converged"] and m["kills"] == 1
+    assert m["x_err_l1"] <= 2 * web1024_problem.target_error
+
+
+# --------------------------------------------------------------------------- #
+# simulator chaos: behavioral (budgets, takeover, width change)
+# --------------------------------------------------------------------------- #
+def _sim(problem, dynamic=True, k=4):
+    from repro.core.simulator import DistributedSimulator, SimulatorConfig
+
+    cfg = SimulatorConfig(k=k, target_error=problem.target_error,
+                          eps=problem.eps, mode="batch", dynamic=dynamic,
+                          record_every=50)
+    return DistributedSimulator(problem.p, problem.b, cfg)
+
+
+def test_simulator_chaos_deterministic_replay(web1024_problem):
+    plan = ChaosPlan(seed=1).straggler(1, 4.0, round=3).kill(
+        2, round=10).rescale(2, round=25)
+    r1 = _sim(web1024_problem).run(chaos=plan)
+    plan2 = ChaosPlan(seed=1).straggler(1, 4.0, round=3).kill(
+        2, round=10).rescale(2, round=25)
+    r2 = _sim(web1024_problem).run(chaos=plan2)
+    assert r1.converged and r2.converged
+    assert r1.n_steps == r2.n_steps
+    assert r1.n_edge_ops == r2.n_edge_ops
+    np.testing.assert_array_equal(r1.h, r2.h)
+    assert r1.chaos_log == r2.chaos_log
+
+
+def test_simulator_kill_hands_over_and_converges(web1024_problem):
+    base = _sim(web1024_problem).run()
+    sim = _sim(web1024_problem)
+    res = sim.run(chaos=ChaosPlan().kill(3, round=5))
+    assert res.converged
+    assert sim.sets[3].size == 0 and sim.speed_factor[3] == 0.0
+    assert all(sim.sets[k].size > 0 for k in range(3))
+    # takeover is logged as §2.4-charged moves from the dead PID
+    handovers = [m for m in res.move_log if m[1] == 3]
+    assert handovers and sum(m[3] for m in handovers) > 0
+    assert np.abs(res.h - base.h).sum() <= 2 * web1024_problem.target_error
+
+
+def test_simulator_rescale_mid_solve(web1024_problem):
+    base = _sim(web1024_problem).run()
+    sim = _sim(web1024_problem)
+    res = sim.run(chaos=ChaosPlan().rescale(2, round=8))
+    assert res.converged and sim.k == 2 and len(sim.sets) == 2
+    assert sorted(np.concatenate(sim.sets).tolist()) == list(range(1024))
+    assert np.abs(res.h - base.h).sum() <= 2 * web1024_problem.target_error
+    # histories survived the width change (padded, not ragged)
+    assert res.hist_rs.ndim == 2 and res.hist_sizes.ndim == 2
+
+
+def test_simulator_straggler_survives_rescale(web1024_problem):
+    """A rescale replaces DEAD capacity but must not cure surviving
+    degraded machines: the straggler's slowdown persists across the
+    width change."""
+    sim = _sim(web1024_problem)
+    plan = ChaosPlan().straggler(1, 4.0, round=3).rescale(2, round=8)
+    res = sim.run(chaos=plan)
+    assert res.converged
+    assert sim.speed_factor.tolist() == [1.0, 0.25]
+
+
+def test_simulator_straggler_dynamic_beats_static(web1024_problem):
+    """The paper's §2.5.2 point under degradation: a 4× straggler costs
+    the static partition far more than the dynamic one."""
+    mk_plan = lambda: ChaosPlan().straggler(1, 4.0, round=5)
+    base_dyn = _sim(web1024_problem, dynamic=True).run()
+    dyn = _sim(web1024_problem, dynamic=True).run(chaos=mk_plan())
+    stat = _sim(web1024_problem, dynamic=False).run(chaos=mk_plan())
+    assert dyn.converged and stat.converged
+    overhead_dyn = dyn.n_steps - base_dyn.n_steps
+    base_stat = _sim(web1024_problem, dynamic=False).run()
+    overhead_stat = stat.n_steps - base_stat.n_steps
+    assert overhead_stat > overhead_dyn, (overhead_stat, overhead_dyn)
+
+
+# --------------------------------------------------------------------------- #
+# ACCEPTANCE: N=4096 kill -> restore -> rescale(k-1), and the MovePlan
+# replay for rescale up/down (subprocess: 8 fake host devices)
+# --------------------------------------------------------------------------- #
+ACCEPTANCE_SCRIPT = textwrap.dedent(
+    """
+    import os, tempfile
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, {src!r})
+    import numpy as np
+    import repro
+    from repro.balance.plan import MovePlan
+    from repro.chaos import ChaosPlan, ChaosRunner
+    from repro.core import webgraph_like
+
+    g = webgraph_like(4096, seed=1)
+    problem = repro.Problem.pagerank(g, target_error=2.5e-7)
+    options = repro.SolverOptions(k=2)
+
+    # ---- kill at mid-solve -> restore -> rescale(k-1) ------------------
+    plan = ChaosPlan(seed=0).kill(pid=1, round=5)
+    with tempfile.TemporaryDirectory() as ckpt:
+        runner = ChaosRunner(problem, "engine:chunk", plan,
+                             ckpt_dir=ckpt, options=options,
+                             checkpoint_every=2, rescale_on_kill=True)
+        m = runner.measure()
+    assert m["converged"], m
+    assert m["kills"] == 1, m
+    assert m["x_err_l1"] <= 1e-6, m["x_err_l1"]
+    print("KILL-RESTORE-RESCALE ops overhead:", m["overhead_ops"],
+          "|dx|1:", m["x_err_l1"])
+
+    # ---- rescale down with a STRICT executor drain + MovePlan replay ---
+    opts = repro.SolverOptions(k=4, buckets_per_dev=12, headroom=4)
+    session = repro.SolverSession(problem, method="engine:chunk",
+                                  options=opts)
+    for i, _ in enumerate(session.run()):
+        if i >= 2:
+            break
+    drains = session.rescale(3, strict=True)
+    d = session._driver
+    assert d.cfg.k == 3
+    # every evacuated bucket left the dying device through the executor
+    assert len(drains) == 8, drains  # 12-4 real buckets on the dead dev
+    assert all(src == 3 and dst < 3 for src, dst, _ in drains), drains
+    # after the re-mesh the executor sits in the COLD-START layout of
+    # k_new — balanced by construction, the replay baseline
+    assert d.ex.sizes().tolist() == [8, 8, 8], d.ex.sizes()
+    assert np.array_equal(d.ex.row_of_bucket, d.engine.a.pos_of_bucket)
+
+    # force post-rescale rebalancer-style moves, then replay the full
+    # post-rescale MovePlan trace over a cold-start map (PR 2 style)
+    i0 = len(d._moves)
+    for plan_ in (MovePlan(src=0, dst=2, units=2, kind="bucket"),
+                  MovePlan(src=1, dst=0, units=1, kind="bucket")):
+        moved = d.ex.apply(plan_)
+        assert moved == plan_.units, (plan_, moved)
+        d._moves.append((d._chunks, plan_.src, plan_.dst, moved))
+    rep = session.solve()
+    assert rep.converged
+    ref = repro.SolverSession(problem, method="frontier:segment_sum"
+                              ).solve()
+    assert np.abs(rep.x - ref.x).sum() <= 1e-6
+
+    cold_map = np.array(d.engine.a.pos_of_bucket)
+    for (_, src, dst, units) in d._moves[i0:]:
+        _, cold_map, moved = d.engine._plan_move(cold_map, src, dst,
+                                                 units)
+        assert moved == units
+    assert np.array_equal(cold_map, d.ex.row_of_bucket), (
+        cold_map, d.ex.row_of_bucket)
+
+    # ---- rescale UP mid-solve: cold-start-at-k_new ownership -----------
+    s2 = repro.SolverSession(problem, method="engine:chunk",
+                             options=repro.SolverOptions(k=2))
+    for i, _ in enumerate(s2.run()):
+        if i >= 1:
+            break
+    ops_before = s2.n_ops
+    assert s2.rescale(4) == []  # grow needs no drain
+    d2 = s2._driver
+    assert d2.cfg.k == 4
+    assert np.array_equal(d2.ex.row_of_bucket, d2.engine.a.pos_of_bucket)
+    assert s2.n_ops >= ops_before  # phase counters survive the re-mesh
+    rep2 = s2.solve()
+    assert rep2.converged
+    assert np.abs(rep2.x - ref.x).sum() <= 1e-6
+    print("ACCEPT_OK")
+    """
+)
+
+
+def test_chaos_acceptance_subprocess():
+    """N=4096 kill->restore->rescale(k-1) within 1e-6 of undisturbed,
+    plus the MovePlan-level rescale ownership replay."""
+    r = subprocess.run(
+        [sys.executable, "-c",
+         ACCEPTANCE_SCRIPT.format(src=os.path.abspath(SRC))],
+        capture_output=True, text=True, timeout=900,
+    )
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "ACCEPT_OK" in r.stdout
+
+
+# --------------------------------------------------------------------------- #
+# engine straggler signal injection (8 fake devices)
+# --------------------------------------------------------------------------- #
+STRAGGLER_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, {src!r})
+    import numpy as np
+    import repro
+    from repro.chaos import ChaosPlan, SessionInjector
+    from repro.core import webgraph_like
+
+    g = webgraph_like(2048, seed=1)
+    problem = repro.Problem.pagerank(g, target_error=2.5e-7)
+    # enough movable buckets per device that the paper's 10% move cap
+    # yields >= 1 unit (the PR 2 replay sizing), and a long enough
+    # solve for the hysteresis patience to trip
+    options = repro.SolverOptions(k=4, policy="hysteresis",
+                                  buckets_per_dev=24, headroom=4)
+    session = repro.SolverSession(problem, method="engine:chunk",
+                                  options=options)
+    plan = ChaosPlan().straggler(pid=2, slowdown=64.0, round=2)
+    rep = session.solve(chaos=SessionInjector(plan))
+    assert rep.converged
+    scale = session._driver.engine.load_scale
+    assert scale is not None and scale[2] == 64.0, scale
+    # the inflated signal made the controller shed load away from pid 2
+    sheds = [m for m in rep.move_log if m[1] == 2]
+    assert sheds, rep.move_log
+    ref = repro.SolverSession(problem,
+                              method="frontier:segment_sum").solve()
+    assert np.abs(rep.x - ref.x).sum() <= 2 * problem.target_error
+    print("STRAGGLER_OK")
+    """
+)
+
+
+def test_engine_straggler_signal_sheds_load_subprocess():
+    r = subprocess.run(
+        [sys.executable, "-c",
+         STRAGGLER_SCRIPT.format(src=os.path.abspath(SRC))],
+        capture_output=True, text=True, timeout=900,
+    )
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "STRAGGLER_OK" in r.stdout

@@ -1,0 +1,175 @@
+"""Property-based GraphDelta tests: random delta SEQUENCES stay bit-exact.
+
+tests/test_graph_store.py pins handcrafted deltas; this suite drives the
+patchers through *randomized multigraphs* and randomized
+add/remove/reweight delta sequences, asserting after EVERY step that
+each materialized view (CSR splice, BSR tile pool, bucketed layout,
+tiled engine layout) is bit-identical to a from-scratch rebuild over the
+patched edge list — the tier-2 graph-update-parity contract, now
+explored instead of sampled.
+
+With hypothesis installed the seeds are drawn by the shrinker; without
+it the same core property runs over a deterministic seed sweep (the
+test_kernels.py fallback pattern), folded from ``--repro-seed`` so a
+logged failure replays exactly.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # optional dep: property tests skip, fallbacks run
+    HAVE_HYPOTHESIS = False
+
+from repro.graph import GraphDelta, GraphStore
+
+BS = 8
+N_BUCKETS = 3
+ENGINE_KEY = (2, 4, 2, True, np.float32)  # k, b/dev, headroom, tiled, dtype
+
+
+# --------------------------------------------------------------------------- #
+# generators (plain-numpy so hypothesis and the fallback share them)
+# --------------------------------------------------------------------------- #
+def _random_store(seed: int) -> GraphStore:
+    """A random multigraph: duplicate (src, dst) pairs and self-loops
+    included — from_edges canonicalizes by weight summation."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(8, 48))
+    m = int(rng.integers(0, 4 * n))
+    src = rng.integers(0, n, size=m)
+    dst = rng.integers(0, n, size=m)
+    w = rng.uniform(0.1, 2.0, size=m)
+    return GraphStore.from_edges(src, dst, w, n)
+
+
+def _random_delta(store: GraphStore, rng: np.random.Generator) -> GraphDelta:
+    """Disjoint random add/remove/reweight picks over the current edges."""
+    csr = store.csr()
+    src_e, dst_e, w_e = csr.edge_list()
+    n, n_e = store.n, src_e.shape[0]
+    k_total = int(rng.integers(0, n_e + 1)) if n_e else 0
+    pick = (rng.choice(n_e, size=k_total, replace=False)
+            if k_total else np.zeros(0, np.int64))
+    n_rm = int(rng.integers(0, k_total + 1))
+    rm, rw = pick[:n_rm], pick[n_rm:]
+    existing = set(
+        (int(s) << 32) | int(d) for s, d in zip(src_e, dst_e))
+    added = []
+    for _ in range(100):
+        if len(added) >= int(rng.integers(0, 8)):
+            break
+        s, d = int(rng.integers(0, n)), int(rng.integers(0, n))
+        if ((s << 32) | d) in existing:
+            continue
+        existing.add((s << 32) | d)
+        added.append((s, d, float(rng.uniform(0.1, 2.0))))
+    return GraphDelta.make(
+        added_edges=np.array(added) if added else None,
+        removed_edges=(np.stack([src_e[rm], dst_e[rm]], axis=1)
+                       .astype(np.int64) if rm.size else None),
+        reweighted=((src_e[rw].astype(np.int64),
+                     dst_e[rw].astype(np.int64),
+                     w_e[rw] * rng.uniform(0.5, 1.5, size=rw.size))
+                    if rw.size else None),
+    )
+
+
+def _assert_bit_identical(patched: GraphStore, fresh: GraphStore,
+                          ctx: str) -> None:
+    a, b = patched.csr(), fresh.csr()
+    np.testing.assert_array_equal(a.indptr, b.indptr, err_msg=ctx)
+    np.testing.assert_array_equal(a.indices, b.indices, err_msg=ctx)
+    np.testing.assert_array_equal(a.weights, b.weights, err_msg=ctx)
+
+    ta, tb = patched.bsr(BS), fresh.bsr(BS)
+    for name in ("block_row", "block_col", "blocks", "row_occupied"):
+        np.testing.assert_array_equal(getattr(ta, name), getattr(tb, name),
+                                      err_msg=f"{ctx}: bsr.{name}")
+
+    ga, gb = patched.bucketed(N_BUCKETS), fresh.bucketed(N_BUCKETS)
+    for name in ("node_of_slot", "slot_of_node", "src_slot", "dst", "wgt",
+                 "out_deg"):
+        np.testing.assert_array_equal(getattr(ga, name), getattr(gb, name),
+                                      err_msg=f"{ctx}: bucketed.{name}")
+    assert ga.n_edges == gb.n_edges, ctx
+
+    la, lb = patched.engine_layout(*ENGINE_KEY), fresh.engine_layout(
+        *ENGINE_KEY)
+    for name in ("w", "src_slot", "dst_bucket", "dst_slot", "wgt",
+                 "pos_of_bucket", "node_of_slot", "tiles", "tile_dst",
+                 "slot_out_deg"):
+        np.testing.assert_array_equal(getattr(la, name), getattr(lb, name),
+                                      err_msg=f"{ctx}: engine.{name}")
+    assert la.n_edges == lb.n_edges, ctx
+
+
+def check_delta_sequence(graph_seed: int, delta_seed: int,
+                         n_deltas: int) -> None:
+    """THE property: after every delta of a random sequence, every
+    patched view == a from-scratch rebuild, bit for bit."""
+    store = _random_store(graph_seed)
+    rng = np.random.default_rng(delta_seed)
+    # materialize every view BEFORE the churn so each patcher exercises
+    store.bsr(BS)
+    store.bucketed(N_BUCKETS)
+    store.engine_layout(*ENGINE_KEY)
+    for i in range(n_deltas):
+        delta = _random_delta(store, rng)
+        version = store.version
+        store.apply_delta(delta)
+        if delta.is_empty:
+            assert store.version == version
+            continue
+        assert store.version == version + 1
+        fresh = GraphStore.from_csr(store.csr())
+        _assert_bit_identical(
+            store, fresh,
+            ctx=f"graph_seed={graph_seed} delta_seed={delta_seed} "
+                f"step={i} ({delta.n_changes} changes)")
+
+
+# --------------------------------------------------------------------------- #
+# hypothesis-driven exploration
+# --------------------------------------------------------------------------- #
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(graph_seed=st.integers(0, 2**31 - 1),
+           delta_seed=st.integers(0, 2**31 - 1),
+           n_deltas=st.integers(1, 4))
+    def test_delta_sequences_bit_identical_prop(graph_seed, delta_seed,
+                                                n_deltas):
+        check_delta_sequence(graph_seed, delta_seed, n_deltas)
+
+
+# --------------------------------------------------------------------------- #
+# deterministic fallbacks (always run; the only coverage without
+# hypothesis — same pattern as test_kernels.py / test_partition.py)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("case", range(8))
+def test_delta_sequences_bit_identical_fallback(case, repro_seed):
+    check_delta_sequence(graph_seed=repro_seed + 101 * case,
+                         delta_seed=repro_seed + 7919 * case + 1,
+                         n_deltas=3)
+
+
+def test_fallback_sweep_actually_mutates(repro_seed):
+    """Guard against a vacuous property: the deterministic sweep must
+    exercise non-empty deltas of all three kinds somewhere."""
+    kinds = set()
+    for case in range(8):
+        store = _random_store(repro_seed + 101 * case)
+        rng = np.random.default_rng(repro_seed + 7919 * case + 1)
+        for _ in range(3):
+            d = _random_delta(store, rng)
+            if d.added.shape[0]:
+                kinds.add("added")
+            if d.removed.shape[0]:
+                kinds.add("removed")
+            if d.reweighted.shape[0]:
+                kinds.add("reweighted")
+            store.apply_delta(d)
+    assert kinds == {"added", "removed", "reweighted"}
