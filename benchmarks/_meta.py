@@ -1,0 +1,36 @@
+"""One normalized ``meta`` block for every BENCH_*.json emitter.
+
+Historically each bench grew its own meta spelling (``backend`` vs
+``platform``, ``device`` with no kind, no jax version, no timestamp),
+which made the artifacts impossible to diff mechanically.  ``std_meta``
+is the single constructor: the perf gate keys its platform matching and
+staleness reporting on these fields, and ``run.py`` schema-guards them
+in every emitted *and* committed artifact.
+"""
+from __future__ import annotations
+
+from datetime import datetime, timezone
+
+# every BENCH_*.json meta carries at least these (perf-gate contract)
+META_KEYS = {
+    "bench", "platform", "device_kind", "device", "jax_version", "seed",
+    "timestamp_utc",
+}
+
+
+def std_meta(bench: str, seed: int = 0, **extra) -> dict:
+    """Normalized meta block; ``extra`` holds bench-specific context."""
+    import jax
+
+    dev = jax.devices()[0]
+    meta = {
+        "bench": bench,
+        "platform": jax.default_backend(),
+        "device_kind": dev.device_kind,
+        "device": str(dev),
+        "jax_version": jax.__version__,
+        "seed": seed,
+        "timestamp_utc": datetime.now(timezone.utc).isoformat(),
+    }
+    meta.update(extra)
+    return meta

@@ -82,15 +82,17 @@ def main(smoke: bool = False, out_path: str = "BENCH_api.json",
             print(f"  {method:22s}{tag:24s} {row['wall_s']:8.2f}s  "
                   f"cost={row['cost_iterations']:7.2f}  "
                   f"converged={row['converged']}")
+    from benchmarks._meta import std_meta
+
     payload = {
-        "meta": {
-            "bench": "api_auto_dispatch",
-            "n": n,
-            "graph": "host_block_graph",
-            "target_error": problem.target_error,
-            "platform": jax.default_backend(),
-            "backends_registered": sorted(repro.list_backends()),
-        },
+        "meta": std_meta(
+            "api_auto_dispatch",
+            seed=1,
+            n=n,
+            graph="host_block_graph",
+            target_error=problem.target_error,
+            backends_registered=sorted(repro.list_backends()),
+        ),
         "rows": rows,
     }
     with open(out_path, "w") as fh:

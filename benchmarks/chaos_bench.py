@@ -174,13 +174,14 @@ def main(smoke: bool = False, out_path: str = "BENCH_chaos.json") -> dict:
                   f"overhead={row['overhead_ops']:>8d} ops "
                   f"({row['overhead_frac']:+.1%}), "
                   f"|dx|1={row['x_err_l1']:.2e}")
+    from benchmarks._meta import std_meta
+
     payload = {
-        "meta": {
-            "bench": "chaos_recovery_overhead",
-            "graph": "webgraph_like",
-            "platform": jax.default_backend(),
-            "n_devices": n_dev,
-        },
+        "meta": std_meta(
+            "chaos_recovery_overhead",
+            graph="webgraph_like",
+            n_devices=n_dev,
+        ),
         "rows": rows,
     }
     with open(out_path, "w") as fh:

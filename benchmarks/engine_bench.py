@@ -102,18 +102,20 @@ def main(smoke: bool = False, out_path: str = "BENCH_engine.json"):
     import jax
 
     rows = []
-    meta = {
-        "backend": jax.default_backend(),
-        "device": str(jax.devices()[0]),
-        "graph": "host_block_graph(host_size=128, links_per_node=8, "
-                 "intra_frac=0.92, span_hosts=2)",
-        "note": ("chunk_ms times the steady-state jitted chunk "
-                 "(chunk_rounds exchange cycles incl. psum_scatter); "
-                 "k>1 rows run on fake host devices in a subprocess. "
-                 "On CPU the bsr backend runs the einsum tile path; the "
-                 "Pallas gather kernel takes over on TPU."),
-        "smoke": smoke,
-    }
+    from benchmarks._meta import std_meta
+
+    meta = std_meta(
+        "engine_chunk_rounds",
+        seed=1,
+        graph="host_block_graph(host_size=128, links_per_node=8, "
+              "intra_frac=0.92, span_hosts=2)",
+        note=("chunk_ms times the steady-state jitted chunk "
+              "(chunk_rounds exchange cycles incl. psum_scatter); "
+              "k>1 rows run on fake host devices in a subprocess. "
+              "On CPU the bsr backend runs the einsum tile path; the "
+              "Pallas gather kernel takes over on TPU."),
+        smoke=smoke,
+    )
     if smoke:
         grid = [(2**12, 1, 36, 4)]
     else:

@@ -106,12 +106,14 @@ def main(smoke: bool = False, out_path: str = "BENCH_graph.json") -> dict:
                           f"({row['ops_ratio']:4.1f}x fewer pushes, "
                           f"patch {row['patch_speedup']:5.1f}x faster "
                           f"than rebuild)")
+    from benchmarks._meta import std_meta
+
     payload = {
-        "meta": {
-            "bench": "graph_delta_vs_cold",
-            "graph": "webgraph_like + rotation_churn(exclude_top=0.2)",
-            "platform": jax.default_backend(),
-        },
+        "meta": std_meta(
+            "graph_delta_vs_cold",
+            seed=7,
+            graph="webgraph_like + rotation_churn(exclude_top=0.2)",
+        ),
         "rows": rows,
     }
     with open(out_path, "w") as fh:

@@ -1,0 +1,208 @@
+"""Perf-regression gate over the consolidated ``BENCH.json`` trajectory.
+
+``python -m benchmarks.run --consolidate`` ends by running this gate, so
+a PR that regenerates benchmark artifacts cannot land a regression
+silently: every committed baseline metric is re-extracted from the fresh
+``BENCH.json`` and compared inside a tolerance band.
+
+Two metric kinds with different bands:
+
+* ``counter`` — deterministic work counts (``n_ops``, ``rounds``,
+  ``warm_ops``, ``disturbed_ops``).  These are seeded and
+  platform-stable, so the band is tight (:data:`COUNTER_BAND`) and they
+  are enforced everywhere.
+* ``wall`` — wall-clock timings.  Machine-dependent, so the band is wide
+  (:data:`WALL_BAND`) and they are enforced **only when the current
+  platform matches the baseline's** — a TPU artifact is never judged
+  against a CPU baseline.
+
+A metric present in the baseline but absent from the current trajectory
+is a failure too (coverage must not silently shrink); metrics new in the
+current trajectory are reported informationally.
+
+CLI::
+
+    python -m benchmarks.perf_gate --check             # exit 1 on fail
+    python -m benchmarks.perf_gate --update-baseline   # reseed baseline
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+BASELINE_PATH = "benchmarks/perf_baseline.json"
+BENCH_PATH = "BENCH.json"
+
+COUNTER_BAND = 1.10  # deterministic op counts: 10% headroom
+WALL_BAND = 2.0  # wall time: CI machines are noisy; 2x is a regression
+BANDS = {"counter": COUNTER_BAND, "wall": WALL_BAND}
+
+
+def extract_metrics(payload: Dict) -> Dict[str, Dict]:
+    """``{metric_name: {"kind", "value"}}`` from a consolidated payload.
+
+    Names are hierarchical (``section/field/row-id``) so a report line is
+    self-describing; the row-id spells the sweep coordinates.
+    """
+    metrics: Dict[str, Dict] = {}
+
+    def rows(section: str) -> List[Dict]:
+        sec = payload.get("sections", {}).get(section, {})
+        return [r for r in sec.get("rows", []) if "skipped" not in r]
+
+    def put(name: str, kind: str, value) -> None:
+        if value is None:
+            return
+        metrics[name] = {"kind": kind, "value": float(value)}
+
+    for r in rows("kernels"):
+        rid = (f"n{r['n']}.c{r['c']}.d{r['density']}"
+               f".bd{r.get('buffer_depth', 1)}")
+        put(f"kernels/pallas_skip_us/{rid}", "wall", r["pallas_skip_us"])
+        put(f"kernels/segment_sum_us/{rid}", "wall", r["segment_sum_us"])
+    for r in rows("engine"):
+        rid = f"{r['backend']}.n{r['n']}.k{r['k']}"
+        put(f"engine/us_per_round/{rid}", "wall", r["us_per_round"])
+        put(f"engine/rounds/{rid}", "counter", r["rounds"])
+    for r in rows("api"):
+        rid = f"{r['method']}.n{r['n']}"
+        put(f"api/n_ops/{rid}", "counter", r["n_ops"])
+        put(f"api/wall_s/{rid}", "wall", r["wall_s"])
+    for r in rows("graph"):
+        rid = f"{r['method']}.n{r['n']}.churn{r['churn_frac']}"
+        put(f"graph/warm_ops/{rid}", "counter", r["warm_ops"])
+        put(f"graph/patch_s/{rid}", "wall", r["patch_s"])
+    for r in rows("chaos"):
+        rid = f"{r['scenario']}.{r['method']}.n{r['n']}"
+        put(f"chaos/disturbed_ops/{rid}", "counter", r["disturbed_ops"])
+    return metrics
+
+
+def compare(current: Dict[str, Dict], baseline: Dict,
+            platform: Optional[str] = None
+            ) -> Tuple[List[Dict], bool]:
+    """Band-compare ``current`` metrics against a ``baseline`` record.
+
+    Returns ``(results, ok)``; each result row carries ``metric``,
+    ``kind``, ``base``, ``cur``, ``band``, ``status`` where status is one
+    of ``ok`` / ``improved`` / ``fail`` / ``missing`` /
+    ``skipped_platform`` / ``new``.
+    """
+    bands = dict(BANDS)
+    bands.update(baseline.get("bands", {}))
+    base_platform = baseline.get("meta", {}).get("platform")
+    wall_enforced = (platform is None or base_platform is None
+                     or platform == base_platform)
+    results: List[Dict] = []
+    ok = True
+    for name, rec in sorted(baseline.get("metrics", {}).items()):
+        kind = rec["kind"]
+        band = float(bands.get(kind, WALL_BAND))
+        row = {"metric": name, "kind": kind, "base": rec["value"],
+               "band": band, "cur": None}
+        cur = current.get(name)
+        if cur is None:
+            row["status"] = "missing"
+            ok = False
+        else:
+            row["cur"] = cur["value"]
+            if kind == "wall" and not wall_enforced:
+                row["status"] = "skipped_platform"
+            elif rec["value"] <= 0:
+                row["status"] = "ok" if cur["value"] <= 0 else "fail"
+                ok &= row["status"] == "ok"
+            else:
+                ratio = cur["value"] / rec["value"]
+                if ratio > band:
+                    row["status"] = "fail"
+                    ok = False
+                elif ratio < 1.0 / band:
+                    row["status"] = "improved"
+                else:
+                    row["status"] = "ok"
+        results.append(row)
+    for name in sorted(set(current) - set(baseline.get("metrics", {}))):
+        results.append({"metric": name, "kind": current[name]["kind"],
+                        "base": None, "cur": current[name]["value"],
+                        "band": None, "status": "new"})
+    return results, ok
+
+
+def make_baseline(payload: Dict) -> Dict:
+    """Baseline record (committed JSON) from a consolidated payload."""
+    from benchmarks._meta import std_meta
+
+    return {
+        "meta": std_meta("perf_baseline",
+                         source_bench=payload.get("meta", {}).get(
+                             "timestamp_utc")),
+        "bands": dict(BANDS),
+        "metrics": extract_metrics(payload),
+    }
+
+
+def _load(path: str) -> Dict:
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def report(results: List[Dict]) -> None:
+    counts: Dict[str, int] = {}
+    for r in results:
+        counts[r["status"]] = counts.get(r["status"], 0) + 1
+        if r["status"] in ("fail", "missing"):
+            if r["status"] == "missing":
+                print(f"  FAIL {r['metric']}: in baseline "
+                      f"({r['base']:.6g}) but absent from BENCH.json")
+            else:
+                print(f"  FAIL {r['metric']}: {r['base']:.6g} -> "
+                      f"{r['cur']:.6g} "
+                      f"({r['cur'] / r['base']:.2f}x > band "
+                      f"{r['band']:.2f}x)")
+        elif r["status"] == "improved":
+            print(f"  improved {r['metric']}: {r['base']:.6g} -> "
+                  f"{r['cur']:.6g}")
+    print(f"  perf gate: {counts}")
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    bench_path = BENCH_PATH
+    baseline_path = BASELINE_PATH
+    if "--bench" in argv:
+        bench_path = argv[argv.index("--bench") + 1]
+    if "--baseline" in argv:
+        baseline_path = argv[argv.index("--baseline") + 1]
+    if "--update-baseline" in argv:
+        payload = _load(bench_path)
+        baseline = make_baseline(payload)
+        with open(baseline_path, "w") as fh:
+            json.dump(baseline, fh, indent=1)
+        print(f"  wrote {baseline_path} "
+              f"({len(baseline['metrics'])} metrics)")
+        return 0
+    # --check (the default)
+    if not os.path.exists(baseline_path):
+        print(f"  {baseline_path} not present — nothing to gate")
+        return 0
+    if not os.path.exists(bench_path):
+        print(f"  FAIL: {bench_path} not present but a baseline is "
+              "committed — run python -m benchmarks.run --consolidate")
+        return 1
+    import jax
+
+    baseline = _load(baseline_path)
+    current = extract_metrics(_load(bench_path))
+    results, ok = compare(current, baseline,
+                          platform=jax.default_backend())
+    report(results)
+    print(f"  perf gate: {'PASS' if ok else 'FAIL'} "
+          f"(baseline platform={baseline.get('meta', {}).get('platform')},"
+          f" current platform={jax.default_backend()})")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

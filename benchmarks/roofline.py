@@ -1,296 +1,158 @@
-"""Roofline analysis from the dry-run's compiled artifacts (§Roofline).
+"""Roofline analysis of the BSR diffusion kernels (rebuilt for the PR-6
+pipelined kernels; the old version predated the BSR kernel and read
+``results/dryrun/`` artifacts that no longer exist).
 
-Three terms per (arch × shape × mesh), all in seconds-per-step on TPU v5e:
+The model lives in :mod:`repro.kernels.tune.model` — bytes are what the
+kernels actually move (**active** tiles × tile bytes at the swept
+frontier density, plus the fluid streams), flops are the MXU work of the
+active tiles only, because the scalar-prefetched occupancy skip makes
+inactive tiles free.  Per measured row this module derives:
 
-    compute    = flops_per_device / peak_flops            (197 TFLOP/s bf16)
-    memory     = bytes_per_device / hbm_bw                (819 GB/s)
-    collective = moved_ici / ici_bw + moved_dcn / dcn_bw
+* ``roofline_fraction`` — ideal-time / measured-time against the
+  platform's nominal envelope (interpret/oracle rows land far below 1.0
+  by design; the field tracks the *trajectory*, hardware runs move it),
+* ``dma_compute_ratio`` — tile-stream DMA time over MXU time: >1 means
+  the kernel is DMA-bound and ``buffer_depth`` can only hide (never
+  remove) the gap,
+* ``arithmetic_intensity`` and the binding wall (memory vs compute).
 
-Link model: every v5e chip has 4 ICI links × ~50 GB/s => 200 GB/s aggregate
-per chip intra-pod; the pod axis crosses DCN at ~6.25 GB/s per chip.
-
-Sources per family:
-
-* **GNN / recsys / solver** — flops & bytes straight from
-  ``compiled.cost_analysis()`` (per-device, post-SPMD; these programs have
-  no data-dependent loops so the counters are exact).
-* **LM** — XLA:CPU's cost analysis counts ``while`` (scan) bodies ONCE
-  (probe in EXPERIMENTS.md §Dry-run), so scanned-layer models are
-  undercounted ~L·nm×.  LM terms therefore use the standard analytic
-  accounting (PaLM-style MFU math): 6·N_active·T + attention for training
-  (×4/3 for remat recompute), plus an explicit per-component byte model
-  (weights/optimizer/activations/scores/CE-logits/KV-cache).  The raw HLO
-  numbers are kept as reference columns.
-* **collectives** (all families) — the HLO inventory with while-trip
-  correction applied at parse time (launch/dryrun.parse_collectives).
-
-``roofline_fraction`` = irreducible step time / modelled bottleneck time,
-where irreducible = max(useful_flops/peak, irreducible_bytes/hbm_bw) — the
-score of how close the lowered program is to the best achievable step.
+``annotate_payload`` merges these into BENCH_kernels.json rows at emit
+time; ``build_table`` recomputes them from a committed artifact.
 """
 from __future__ import annotations
 
-import glob
 import json
-import math
 import os
 import sys
-from typing import Dict, Optional
-
-PEAK_FLOPS = 197e12  # bf16 / chip
-HBM_BW = 819e9  # B/s per chip
-ICI_BW = 4 * 50e9  # 4 links x 50 GB/s aggregate per chip
-DCN_BW = 6.25e9  # per chip across the pod axis
-
-RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+from typing import Dict, List, Optional
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-MESHES = {
-    "pod16x16": dict(n_dev=256, dp=16, tp=16),
-    "pod2x16x16": dict(n_dev=512, dp=32, tp=16),
-}
+from repro.kernels.tune.model import (  # noqa: E402
+    PLATFORM_SPECS,
+    dma_compute_ratio,
+    frontier_round_cost,
+    ideal_time_s,
+    roofline_fraction,
+)
 
-# byte-model coefficients (documented in EXPERIMENTS.md §Roofline)
-C_ACT = 20.0  # residual-stream tensor r/w per layer (fwd+remat+bwd)
-C_SCORE = 6.0  # attention score matrix passes (f32)
-C_CE = 4.0  # CE logits chunk materialisations (write+read, fwd+bwd)
-C_MOE = 6.0  # MoE dispatch buffer passes
+BENCH_PATH = "BENCH_kernels.json"
 
-
-def _lm_flops(cfg, meta, kind):
-    n_act = cfg.n_active_params
-    l, hq, dh = cfg.n_layers, cfg.n_heads, cfg.head_dim
-    s, t = meta.get("seq", 0), meta.get("tokens", 0)
-    if kind == "train":
-        useful = 6.0 * n_act * t + 6.0 * l * t * s * hq * dh
-        return useful, useful * 4.0 / 3.0  # remat recompute
-    if kind == "prefill":
-        useful = 2.0 * n_act * t + 2.0 * l * t * s * hq * dh
-        return useful, useful
-    useful = 2.0 * n_act * t + 4.0 * l * t * s * cfg.n_kv_heads * dh
-    return useful, useful
+# the timed columns of a frontier-sweep row, and which tile population
+# each one touches (the skip path only moves/multiplies active tiles)
+_MEASURED_COLS = (
+    ("pallas_skip_us", "n_blocks_active"),
+    ("bsr_full_us", "n_blocks"),
+)
 
 
-def _lm_bytes(cfg, meta, kind, mesh):
-    """(irreducible_bytes, modelled_bytes) per device."""
-    tp, dp, n_dev = mesh["tp"], mesh["dp"], mesh["n_dev"]
-    l, d, v = cfg.n_layers, cfg.d_model, cfg.vocab
-    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    s, t, b = meta.get("seq", 0), meta.get("tokens", 0), meta.get("batch", 1)
-    p_bytes = cfg.n_params * 2.0
-    w_shard = p_bytes / tp  # TP-gathered weight reads per pass
-    if kind == "train":
-        t_dev = t / dp
-        w = 3.0 * w_shard
-        opt = 8.0 * 4.0 * cfg.n_params / n_dev
-        act = C_ACT * l * t_dev * d * 2.0
-        score = C_SCORE * l * t_dev * s * (hq / tp) * 4.0
-        ce = C_CE * t_dev * math.ceil(v / tp) * 4.0
-        moe = 0.0
-        if cfg.moe is not None:
-            moe = (C_MOE * l * t_dev * cfg.moe.top_k
-                   * cfg.moe.capacity_factor * d * 2.0)
-        total = w + opt + act + score + ce + moe
-        irreducible = 2.0 * w_shard + opt + 2.0 * t_dev * d * 2.0 * l \
-            + t_dev * math.ceil(v / tp) * 4.0
-        return irreducible, total
-    kv_bytes = meta.get("kv_bytes", 2)
-    cache_total = l * b * s * hkv * dh * 2.0 * kv_bytes
-    if kind == "prefill":
-        t_dev = t / dp
-        cache_dev = cache_total / (dp * tp)
-        w = w_shard
-        act = 8.0 * l * t_dev * d * 2.0
-        score = 2.0 * l * t_dev * s * (hq / tp) * 4.0
-        total = w + act + score + cache_dev
-        irreducible = w + cache_dev + t_dev * d * 2.0 * l
-        return irreducible, total
-    # decode: one token per sequence against an S cache
-    shards = dp * tp if b >= dp else tp  # long_500k: batch unshardable
-    cache_dev = cache_total / shards
-    b_dev = max(b / dp, 1) if b >= dp else b
-    w = w_shard
-    logits = b_dev * math.ceil(v / tp) * 4.0
-    total = w + 2.0 * cache_dev + logits + b_dev * l * d * 2.0 * 10.0
-    irreducible = w + cache_dev + logits
-    return irreducible, total
-
-
-def model_terms(rec: Dict) -> Optional[Dict]:
-    """Analytic (useful_flops, modelled_flops, irreducible_b, modelled_b)."""
-    from repro.configs import get_arch
-
-    arch = rec["arch"]
-    if arch == "diteration-solver":
-        useful = 2.0 * rec["meta"]["edges"] / rec["n_devices"] * 8
-        return {"useful_flops_dev": useful, "flops_dev": None,
-                "irreducible_bytes_dev": None, "bytes_dev": None}
-    spec = get_arch(arch)
-    cfg = spec.model_cfg
-    mesh = MESHES[rec["mesh"]]
-    if spec.family == "lm":
-        useful, modelled = _lm_flops(cfg, rec["meta"], rec["kind"])
-        irr_b, mod_b = _lm_bytes(cfg, rec["meta"], rec["kind"], mesh)
-        return {
-            "useful_flops_dev": useful / mesh["n_dev"],
-            "flops_dev": modelled / mesh["n_dev"],
-            "irreducible_bytes_dev": irr_b,
-            "bytes_dev": mod_b,
+def analyse_row(row: Dict, bs: int, platform: str) -> Optional[Dict]:
+    """Roofline terms for one sweep row; None for skipped rows."""
+    if "skipped" in row or "n" not in row:
+        return None
+    spec = PLATFORM_SPECS.get(platform, PLATFORM_SPECS["cpu"])
+    n, c = int(row["n"]), int(row["c"])
+    n_row_blocks = -(-n // bs)
+    out: Dict = {}
+    for col, pop in _MEASURED_COLS:
+        if row.get(col) is None or pop not in row:
+            continue
+        cost = frontier_round_cost(n_row_blocks, bs, c, int(row[pop]))
+        ideal_s, bound = ideal_time_s(cost, spec)
+        frac = roofline_fraction(row[col] * 1e-6, ideal_s)
+        out[col] = {
+            "bytes": cost.total_bytes,
+            "flops": cost.flops,
+            "arithmetic_intensity": round(cost.arithmetic_intensity, 4),
+            "ideal_us": round(ideal_s * 1e6, 3),
+            "bound": bound,
+            "dma_compute_ratio": round(dma_compute_ratio(cost, spec), 3),
+            "roofline_fraction": round(frac, 6),
         }
-    # GNN / recsys: HLO counters are exact; useful flops analytic
-    if spec.family == "gnn":
-        useful = _gnn_model_flops(cfg, rec["meta"]) / mesh["n_dev"]
-    else:
-        useful = _fm_model_flops(cfg, rec["meta"],
-                                 rec["kind"]) / mesh["n_dev"]
-    return {"useful_flops_dev": useful, "flops_dev": None,
-            "irreducible_bytes_dev": None, "bytes_dev": None}
+    return out or None
 
 
-def _gnn_model_flops(arch_cfg, meta: Dict) -> float:
-    n, e = meta["n_nodes"], meta["n_edges"]
-    d = arch_cfg.d_hidden
-    a = arch_cfg.arch
-    if a == "gin":
-        fwd = arch_cfg.n_layers * n * 4 * d * d + n * 2 * d * d
-    elif a == "meshgraphnet":
-        per = (e * 2 * (3 * d) * d + e * 2 * d * d
-               + n * 2 * (2 * d) * d + n * 2 * d * d)
-        fwd = arch_cfg.n_layers * per + (n + e) * 4 * d * d
-    elif a == "egnn":
-        per = (e * 2 * (2 * d + 1) * d + e * 4 * d * d
-               + n * 2 * (2 * d) * d + n * 2 * d * d)
-        fwd = arch_cfg.n_layers * per
-    elif a == "dimenet":
-        tpe = meta.get("n_triplets", 8 * e)
-        nb = arch_cfg.n_bilinear
-        per = (tpe * 2 * nb * d * d + e * 2 * (2 * d) * d
-               + e * 4 * d * d)
-        fwd = arch_cfg.n_layers * per + e * 2 * (3 * d) * d
-    else:
-        fwd = 0.0
-    return 3.0 * fwd
+def annotate_payload(payload: Dict) -> Dict:
+    """Merge roofline fields into sweep rows, in place (emit-time hook).
 
-
-def _fm_model_flops(arch_cfg, meta: Dict, kind: str) -> float:
-    b = meta.get("batch", 1)
-    f, d = arch_cfg.n_fields, arch_cfg.embed_dim
-    fwd = b * f * d * 4.0
-    if kind == "retrieval":
-        fwd = meta.get("n_candidates", 1) * d * 2.0
-    return (3.0 if kind == "train" else 1.0) * fwd
-
-
-def analyse(path: str) -> Dict:
-    rec = json.load(open(path))
-    if "skipped" in rec:
-        return rec
-    mesh = MESHES[rec["mesh"]]
-    hlo_flops = rec["cost"]["flops_per_device"] or 0.0
-    hlo_bytes = rec["cost"]["bytes_per_device"] or 0.0
-    mt = model_terms(rec) or {}
-    flops_dev = mt.get("flops_dev") or hlo_flops
-    bytes_dev = mt.get("bytes_dev") or hlo_bytes
-    useful = mt.get("useful_flops_dev") or hlo_flops
-    irr_b = mt.get("irreducible_bytes_dev") or hlo_bytes
-
-    ici = rec["collectives"].get(
-        "moved_bytes_ici", rec["collectives"].get("moved_bytes_total", 0.0))
-    dcn = rec["collectives"].get("moved_bytes_dcn", 0.0)
-    t_comp = flops_dev / PEAK_FLOPS
-    t_mem = bytes_dev / HBM_BW
-    t_coll = ici / ICI_BW + dcn / DCN_BW
-    bound = max(t_comp, t_mem, t_coll)
-    dominant = max(
-        (("compute", t_comp), ("memory", t_mem), ("collective", t_coll)),
-        key=lambda kv: kv[1],
-    )[0]
-    t_irreducible = max(useful / PEAK_FLOPS, irr_b / HBM_BW)
-    frac = (t_irreducible / bound) if bound else None
-    return {
-        "arch": rec["arch"],
-        "cell": rec["cell"],
-        "mesh": rec["mesh"],
-        "kind": rec["kind"],
-        "t_compute_s": t_comp,
-        "t_memory_s": t_mem,
-        "t_collective_s": t_coll,
-        "dominant": dominant,
-        "useful_ratio": (useful / flops_dev) if flops_dev else None,
-        "roofline_fraction": frac,
-        "hlo_flops_dev": hlo_flops,
-        "model_flops_dev": flops_dev,
-        "useful_flops_dev": useful,
-        "bytes_dev": bytes_dev,
-        "collective_gib_dev": (ici + dcn) / 2**30,
-        "mem_args_gib": (rec["memory"].get("argument_bytes") or 0) / 2**30,
-        "mem_temp_gib": (rec["memory"].get("temp_bytes") or 0) / 2**30,
-    }
-
-
-def build_table(results_dir: str = None, mesh_filter: str = None):
-    results_dir = results_dir or os.path.abspath(RESULTS)
-    rows = []
-    for f in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
-        r = analyse(f)
-        if "skipped" in r:
+    The headline ``roofline_fraction`` / ``dma_compute_ratio`` of a row
+    follow its occupancy-skip measurement (the deployable path); the
+    full-path fraction keeps a ``full_`` prefix.
+    """
+    meta = payload.get("meta", {})
+    platform = meta.get("platform", meta.get("backend", "cpu"))
+    bs = int(meta.get("bs", 128))
+    for row in payload.get("rows", []):
+        terms = analyse_row(row, bs, platform)
+        if terms is None:
             continue
-        if mesh_filter and r["mesh"] != mesh_filter:
+        row.setdefault("buffer_depth", 1)
+        skip = terms.get("pallas_skip_us")
+        if skip is not None:
+            row["roofline_fraction"] = skip["roofline_fraction"]
+            row["dma_compute_ratio"] = skip["dma_compute_ratio"]
+            row["arithmetic_intensity"] = skip["arithmetic_intensity"]
+        full = terms.get("bsr_full_us")
+        if full is not None:
+            row["full_roofline_fraction"] = full["roofline_fraction"]
+    return payload
+
+
+def build_table(bench_path: str = BENCH_PATH) -> List[Dict]:
+    """Roofline table recomputed from a BENCH_kernels.json artifact."""
+    if not os.path.exists(bench_path):
+        return []
+    with open(bench_path) as fh:
+        payload = json.load(fh)
+    meta = payload.get("meta", {})
+    platform = meta.get("platform", meta.get("backend", "cpu"))
+    bs = int(meta.get("bs", 128))
+    table: List[Dict] = []
+    for row in payload.get("rows", []):
+        terms = analyse_row(row, bs, platform)
+        if terms is None:
             continue
-        rows.append(r)
-    return rows
+        skip = terms.get("pallas_skip_us") or terms.get("bsr_full_us")
+        if skip is None:
+            continue
+        table.append({
+            "n": row["n"],
+            "c": row["c"],
+            "density": row["density"],
+            "bs": bs,
+            "buffer_depth": row.get("buffer_depth", 1),
+            "measured_us": row.get("pallas_skip_us",
+                                   row.get("bsr_full_us")),
+            "ideal_us": skip["ideal_us"],
+            "arithmetic_intensity": skip["arithmetic_intensity"],
+            "bound": skip["bound"],
+            "dma_compute_ratio": skip["dma_compute_ratio"],
+            "roofline_fraction": skip["roofline_fraction"],
+        })
+    return table
 
 
-def to_markdown(rows) -> str:
-    out = ["| arch | cell | mesh | compute s | memory s | collective s | "
-           "dominant | useful/modelled | roofline frac |\n",
-           "|---|---|---|---|---|---|---|---|---|\n"]
-    for r in sorted(rows, key=lambda r: (r["arch"], r["cell"], r["mesh"])):
-        u = f"{r['useful_ratio']:.2f}" if r["useful_ratio"] else "n/a"
-        fr = (f"{r['roofline_fraction']:.3f}"
-              if r["roofline_fraction"] is not None else "n/a")
-        out.append(
-            f"| {r['arch']} | {r['cell']} | {r['mesh']} "
-            f"| {r['t_compute_s']:.2e} | {r['t_memory_s']:.2e} "
-            f"| {r['t_collective_s']:.2e} | **{r['dominant']}** "
-            f"| {u} | {fr} |\n")
-    return "".join(out)
-
-
-def main():
-    import argparse
-
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--dir", default=None)
-    ap.add_argument("--mesh", default=None)
-    ap.add_argument("--csv", default=None)
-    ap.add_argument("--md", default=None)
-    args = ap.parse_args()
-    rows = build_table(args.dir, args.mesh)
-    print(f"{'arch':<22}{'cell':<15}{'mesh':<11}{'comp_s':>9}{'mem_s':>9}"
-          f"{'coll_s':>9} {'dominant':<11}{'useful':>7}{'frac':>7}")
-    for r in sorted(rows, key=lambda r: (r["arch"], r["cell"], r["mesh"])):
-        u = f"{r['useful_ratio']:.2f}" if r["useful_ratio"] else "n/a"
-        fr = (f"{r['roofline_fraction']:.3f}"
-              if r["roofline_fraction"] is not None else "n/a")
-        print(f"{r['arch']:<22}{r['cell']:<15}{r['mesh']:<11}"
-              f"{r['t_compute_s']:>9.2e}{r['t_memory_s']:>9.2e}"
-              f"{r['t_collective_s']:>9.2e} {r['dominant']:<11}"
-              f"{u:>7}{fr:>7}")
-    if args.csv:
-        import csv
-
-        with open(args.csv, "w", newline="") as f:
-            w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
-            w.writeheader()
-            w.writerows(rows)
-        print(f"wrote {args.csv}")
-    if args.md:
-        with open(args.md, "w") as f:
-            f.write(to_markdown(rows))
-        print(f"wrote {args.md}")
+def main(argv=None) -> int:
+    path = BENCH_PATH
+    if argv and argv[0] not in ("-h", "--help"):
+        path = argv[0]
+    table = build_table(path)
+    if not table:
+        print(f"no analysable rows in {path} — run "
+              "python -m benchmarks.kernel_bench --sweep first")
+        return 1
+    print("n,c,density,depth,measured_us,ideal_us,ai,bound,"
+          "dma_compute_ratio,roofline_fraction")
+    for r in table:
+        print(f"{r['n']},{r['c']},{r['density']},{r['buffer_depth']},"
+              f"{r['measured_us']},{r['ideal_us']},"
+              f"{r['arithmetic_intensity']},{r['bound']},"
+              f"{r['dma_compute_ratio']},{r['roofline_fraction']}")
+    membound = sum(1 for r in table if r["bound"] == "memory")
+    print(f"# {len(table)} rows; {membound} memory-bound, "
+          f"{len(table) - membound} compute-bound")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main(sys.argv[1:]))

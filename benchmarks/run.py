@@ -13,7 +13,10 @@ schema — so a schema break is caught before it lands.
 per-suite artifacts (``BENCH_kernels.json`` / ``BENCH_engine.json`` /
 ``BENCH_api.json`` / ``BENCH_graph.json``) into ONE schema-guarded
 ``BENCH.json`` trajectory, so perf history is machine-readable in one
-place: ``{"meta": ..., "sections": {name: {meta, rows}}}``.
+place: ``{"meta": ..., "sections": {name: {meta, rows}}}`` — and then
+runs the perf-regression gate (benchmarks/perf_gate.py) against the
+committed baseline when one is present, so a regressed artifact cannot
+land silently.
 """
 from __future__ import annotations
 
@@ -22,10 +25,13 @@ import os
 import sys
 import time
 
+from benchmarks._meta import META_KEYS, std_meta
+
 KERNEL_ROW_KEYS = {
     "n", "c", "density", "n_edges", "n_blocks", "n_blocks_active",
     "segment_sum_us", "bsr_full_us", "pallas_skip_us",
-    "speedup_vs_segment_sum",
+    "speedup_vs_segment_sum", "buffer_depth", "roofline_fraction",
+    "dma_compute_ratio",
 }
 ENGINE_ROW_KEYS = {
     "n", "k", "backend", "n_edges", "bucket_size", "chunk_ms", "rounds",
@@ -57,7 +63,12 @@ BENCH_SECTIONS = {
 
 
 def _validate_bench(payload: dict, required: set, name: str) -> None:
-    assert isinstance(payload.get("meta"), dict), f"{name}: missing meta"
+    meta = payload.get("meta")
+    assert isinstance(meta, dict), f"{name}: missing meta"
+    meta_missing = META_KEYS - meta.keys()
+    assert not meta_missing, (
+        f"{name}: meta missing normalized keys {sorted(meta_missing)} "
+        "(emit it via benchmarks._meta.std_meta)")
     rows = payload.get("rows")
     assert isinstance(rows, list) and rows, f"{name}: missing rows"
     real = [r for r in rows if "skipped" not in r]
@@ -80,11 +91,11 @@ def consolidate(out_path: str = "BENCH.json") -> dict:
         _validate_bench(payload, keys, path)
         sections[name] = payload
     payload = {
-        "meta": {
-            "bench": "consolidated_perf_trajectory",
-            "sections_present": sorted(sections),
-            "section_files": {n: BENCH_SECTIONS[n][0] for n in sections},
-        },
+        "meta": std_meta(
+            "consolidated_perf_trajectory",
+            sections_present=sorted(sections),
+            section_files={n: BENCH_SECTIONS[n][0] for n in sections},
+        ),
         "sections": sections,
     }
     if sections:
@@ -164,6 +175,15 @@ def main():
     if "--consolidate" in sys.argv:
         consolidate()
         _validate_consolidated()
+        # perf-regression gate: compare the consolidated trajectory
+        # against the committed baseline (skipped until one is seeded)
+        from benchmarks import perf_gate
+
+        if os.path.exists(perf_gate.BASELINE_PATH):
+            return perf_gate.main(["--check"])
+        print(f"  {perf_gate.BASELINE_PATH} not present — gate skipped "
+              "(seed it with python -m benchmarks.perf_gate "
+              "--update-baseline)")
         return 0
     t0 = time.time()
     print("=" * 70)
@@ -247,26 +267,27 @@ def main():
     kernel_bench.main()
 
     # ---------------- roofline summary ----------------
-    print("\n[roofline (from dry-run artifacts, if present)]")
+    print("\n[roofline (from BENCH_kernels.json, if present)]")
     from benchmarks import roofline
 
     try:
         rows_r = roofline.build_table()
         if rows_r:
-            doms = {}
+            bounds = {}
             for r in rows_r:
-                doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
-            print(f"  {len(rows_r)} cells analysed; dominant terms: {doms}")
-            worst = sorted(
-                (r for r in rows_r if r["roofline_fraction"] is not None),
-                key=lambda r: r["roofline_fraction"])[:5]
+                bounds[r["bound"]] = bounds.get(r["bound"], 0) + 1
+            print(f"  {len(rows_r)} rows analysed; binding wall: {bounds}")
+            worst = sorted(rows_r,
+                           key=lambda r: r["roofline_fraction"])[:5]
             for r in worst:
-                print(f"  worst-frac: {r['arch']}×{r['cell']}×{r['mesh']} "
-                      f"frac={r['roofline_fraction']:.3f} "
-                      f"dom={r['dominant']}")
+                print(f"  worst-frac: n={r['n']} c={r['c']} "
+                      f"density={r['density']} depth={r['buffer_depth']} "
+                      f"frac={r['roofline_fraction']:.4f} "
+                      f"bound={r['bound']} "
+                      f"dma/compute={r['dma_compute_ratio']:.2f}")
         else:
-            print("  (no dry-run artifacts found — run "
-                  "python -m repro.launch.dryrun --all first)")
+            print("  (no BENCH_kernels.json — run "
+                  "python -m benchmarks.kernel_bench --sweep first)")
     except Exception as e:  # pragma: no cover
         print("  roofline summary unavailable:", e)
 

@@ -111,8 +111,10 @@ def _solve_frontier_segment_sum(problem, options):
         # would silently solve via the per-edge path after paying the
         # BSR tiling build
         supports_warm_start=True,
-        device_kinds=("tpu",),  # runs anywhere, but auto only on TPU
+        device_kinds=("tpu",),  # runs anywhere, but auto only on TPU —
+        # unless a tuned record proves the BSR path out on this platform
         auto_priority=40,
+        tune_key="frontier_round_bsr",
     ),
 )
 def _solve_frontier_pallas(problem, options):
@@ -137,6 +139,7 @@ def _solve_engine_chunk(problem, options):
     BackendCapabilities(
         supports_dynamic_partition=True, supports_warm_start=True,
         configurable_k=True, min_auto_n=1 << 17, auto_priority=30,
+        tune_key="bsr_gather_spmm",
     ),
 )
 def _solve_engine_bsr(problem, options):

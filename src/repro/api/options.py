@@ -48,7 +48,12 @@ class SolverOptions:
     max_steps: int = 2_000_000
     record_every: int = 1
     # ---- frontier (jnp / pallas) ------------------------------------------
-    bs: int = 128  # BSR block size for frontier:pallas
+    # kernel-config knobs default to None = "tuned record for this platform
+    # if one exists, else the historical default" (bs=128, depth=1, thr=0);
+    # an explicit value always wins over the tuned record.
+    bs: Optional[int] = None  # BSR block size for frontier:pallas / engine:bsr
+    buffer_depth: Optional[int] = None  # tile-pool DMA pipeline depth
+    occupancy_threshold: Optional[float] = None  # defer sparse block cols
     interpret: bool = False  # force the Pallas interpreter off-TPU
     trace_every: int = 32  # rounds per trace record (streaming grain)
     # ---- engine -----------------------------------------------------------
@@ -96,6 +101,19 @@ class SolverOptions:
             )
         if opt.k is not None and opt.k < 1:
             raise ValueError(f"k must be >= 1, got {opt.k}")
+        if opt.bs is not None and opt.bs < 1:
+            raise ValueError(f"bs must be >= 1, got {opt.bs}")
+        if opt.buffer_depth is not None and opt.buffer_depth < 1:
+            raise ValueError(
+                f"buffer_depth must be >= 1, got {opt.buffer_depth}"
+            )
+        if opt.occupancy_threshold is not None and not (
+            0.0 <= opt.occupancy_threshold < 1.0
+        ):
+            raise ValueError(
+                "occupancy_threshold must be in [0, 1), got "
+                f"{opt.occupancy_threshold}"
+            )
         if opt.dynamic and opt.k == 1:
             raise ValueError(
                 "dynamic partition needs k >= 2 (one PID has nothing to "

@@ -41,6 +41,14 @@ class BackendCapabilities:
     on; it still runs elsewhere (all backends are portable) but auto
     dispatch prefers native ground.  ``min_auto_n`` gates auto-dispatch
     to sizes where the backend's fixed costs amortize.
+
+    ``tune_key`` names the autotunable kernel behind the backend (a key
+    of :data:`repro.kernels.tune.KERNELS`).  When a persisted tuned
+    record exists for (tune_key, current platform), auto-dispatch treats
+    the backend as native there and ranks it by the record's *measured*
+    throughput — measurement beats the hardcoded ``auto_priority``
+    (DESIGN.md §9).  Without a record the historical priority ordering
+    applies unchanged.
     """
 
     supports_dynamic_partition: bool = False
@@ -50,6 +58,7 @@ class BackendCapabilities:
     device_kinds: Tuple[str, ...] = ("cpu", "gpu", "tpu")
     min_auto_n: int = 0
     auto_priority: int = 0  # higher wins among eligible backends
+    tune_key: Optional[str] = None  # autotuned kernel behind this backend
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,14 +105,30 @@ def list_backends() -> Dict[str, BackendCapabilities]:
     return {k: b.caps for k, b in sorted(_REGISTRY.items())}
 
 
+def _tuned_throughput(caps: BackendCapabilities,
+                      platform: str) -> Optional[float]:
+    """Measured GFLOP/s from the backend's tuned record, if one exists."""
+    if caps.tune_key is None:
+        return None
+    from repro.kernels.tune import best_config
+
+    rec = best_config(caps.tune_key, platform)
+    return None if rec is None else rec.throughput_gflops
+
+
 def _auto_select(problem: Problem, options: SolverOptions) -> str:
     """Pick the fastest eligible backend (documented, deterministic).
 
     Eligibility: honors the requested k/dynamic/batch; native to the
     current JAX platform; problem size above the backend's auto floor.
-    Among eligible backends the highest ``auto_priority`` wins —
-    priorities encode the measured ordering of BENCH_kernels.json /
-    BENCH_engine.json (BSR paths win at scale, per-edge wins small).
+
+    Ranking is measurement-first: a backend whose ``tune_key`` has a
+    persisted tuned record for this platform counts as native here and
+    ranks by the record's measured throughput; every measured backend
+    outranks every unmeasured one, and unmeasured backends keep the
+    historical ``auto_priority`` ordering (which encodes the committed
+    BENCH_kernels.json / BENCH_engine.json results).  With no records on
+    disk — the default state — dispatch is exactly the old priority rule.
     """
     import jax
 
@@ -117,9 +142,11 @@ def _auto_select(problem: Problem, options: SolverOptions) -> str:
             "solve the columns as separate problems"
         )
     best: Optional[_Backend] = None
+    best_key: Tuple[float, float] = (-1.0, -1.0)
     for be in _REGISTRY.values():
         caps = be.caps
-        if platform not in caps.device_kinds:
+        measured = _tuned_throughput(caps, platform)
+        if platform not in caps.device_kinds and measured is None:
             continue
         if problem.n < caps.min_auto_n:
             continue
@@ -138,8 +165,10 @@ def _auto_select(problem: Problem, options: SolverOptions) -> str:
                 options.k > len(jax.devices())
             ):
                 continue
-        if best is None or caps.auto_priority > best.caps.auto_priority:
-            best = be
+        key = ((1.0, measured) if measured is not None
+               else (0.0, float(caps.auto_priority)))
+        if best is None or key > best_key:
+            best, best_key = be, key
     if best is None:  # want_k on a 1-device host with engines excluded
         return "simulator" if want_k else "frontier:segment_sum"
     return best.name

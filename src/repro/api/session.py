@@ -34,6 +34,8 @@ from typing import Iterator, List, Optional, Tuple
 
 import numpy as np
 
+from repro.kernels.tune import resolved_config
+
 from .options import SolverOptions
 from .problem import Problem
 from .report import RoundReport, SolveReport
@@ -204,10 +206,17 @@ class _BsrFrontierDriver:
         g = problem.p
         self.n = g.n
         self.l = max(g.n_edges, 1)
+        # kernel config: explicit options > platform tuned record > defaults
+        bs, self.buffer_depth, self.occupancy_threshold = resolved_config(
+            "frontier_round_bsr",
+            bs=options.bs,
+            buffer_depth=options.buffer_depth,
+            occupancy_threshold=options.occupancy_threshold,
+        )
         # the store's cached BSR view: graph deltas patch dirty tiles
         # in place, so a post-update rebuild re-uploads — not re-tiles
-        self.m = problem.graph.bsr(bs=options.bs).to_device()
-        n_pad = self.m.n_row_blocks * options.bs
+        self.m = problem.graph.bsr(bs=bs).to_device()
+        n_pad = self.m.n_row_blocks * bs
         dt = self.m.blocks.dtype
         pad = lambda v, t: jnp.zeros(n_pad, dtype=t).at[: g.n].set(
             jnp.asarray(v, dtype=t))
@@ -245,6 +254,8 @@ class _BsrFrontierDriver:
         m, w, out_deg, dang, gamma = (self.m, self.w, self.out_deg,
                                       self.dang, self.gamma)
         op_backend, interpret = self.op_backend, self.interpret
+        buffer_depth = self.buffer_depth
+        occupancy_threshold = self.occupancy_threshold
 
         def cond(state):
             f, res, h, t, ops, rounds = state
@@ -254,7 +265,9 @@ class _BsrFrontierDriver:
             f, _res, h, t, ops, rounds = state
             f_new, sent, res = frontier_round_bsr(
                 m, f, w, t, backend=op_backend,
-                interpret=interpret or None)
+                interpret=interpret or None,
+                buffer_depth=buffer_depth,
+                occupancy_threshold=occupancy_threshold)
             # the op's threshold predicate is authoritative (the pallas
             # backend folds t into the weights); sel follows the sent fluid
             sel = sent != 0
@@ -370,6 +383,10 @@ class _EngineDriver:
             dtype=options.dtype or jnp.float32,
             diffusion_backend=diffusion_backend,
             pallas_interpret=options.interpret,
+            # explicit option > platform tuned record > default depth 1
+            pallas_buffer_depth=resolved_config(
+                "bsr_gather_spmm", buffer_depth=options.buffer_depth
+            )[1],
         )
         # the store's cached engine-layout view: graph deltas patch
         # dirty bucket rows / tiles in place before we land here

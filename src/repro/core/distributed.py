@@ -84,6 +84,9 @@ class EngineConfig:
     # einsum + segment-sum elsewhere)
     pallas_interpret: bool = False  # force the Pallas tile kernel through
     # the interpreter off-TPU (parity tests only — emulation speed)
+    pallas_buffer_depth: int = 1  # tile-pool DMA pipeline depth for the
+    # gather kernel (1 = automatic BlockSpec pipelining; >= 2 = manual
+    # async-copy ring; bit-identical results either way)
 
 
 @dataclasses.dataclass
@@ -185,6 +188,7 @@ def _tile_push_stable(
     *,
     use_pallas: bool,
     interpret: bool = False,
+    buffer_depth: int = 1,
     visits: Optional[tuple] = None,
 ) -> jax.Array:
     """delta[bid] = sum of tile @ sent over tiles targeting stable bucket bid.
@@ -212,6 +216,7 @@ def _tile_push_stable(
         out = bsr_gather_spmm_pallas(
             tiles.reshape(-1, s, s), order, visit_dst, visit_col,
             sent[:, :, None], r_total, bs=s, interpret=interpret,
+            buffer_depth=buffer_depth,
         )
         return jnp.where(occ[:, None], out[..., 0], jnp.zeros_like(out[..., 0]))
     partial = jnp.einsum("btij,bj->bti", tiles, sent)
@@ -426,6 +431,7 @@ class DistributedEngine:
                 tiles, tile_dst, sent, r_total,
                 use_pallas=pallas_path,
                 interpret=cfg.pallas_interpret,
+                buffer_depth=cfg.pallas_buffer_depth,
                 visits=visits,
             )  # [R, S] indexed by stable bucket id
             # stable bucket space -> current row space via the position map

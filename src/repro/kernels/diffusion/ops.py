@@ -91,12 +91,24 @@ def frontier_round_bsr(
     *,
     backend: str | None = None,  # None/"auto" | "pallas" | "block"
     interpret: bool | None = None,
+    buffer_depth: int = 1,
+    occupancy_threshold: float = 0.0,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """One fused frontier round ``F' = F - sent + P @ sent`` over BSR ``m``.
 
     ``sent = where(|F| * w > t, F, 0)`` — every node above the threshold
     diffuses simultaneously (the frontier-batched D-iteration schedule).
     Returns ``(f_new, sent, res)`` with ``res = |f_new|_1`` (scalar).
+
+    ``buffer_depth`` (pallas backend only) selects the tile-fetch pipeline
+    depth — pure data movement, bit-identical results across depths.
+
+    ``occupancy_threshold`` defers sparse block columns: a column block whose
+    fraction of above-threshold nodes is <= the threshold keeps its fluid
+    this round and diffuses later (the D-iteration schedule permits any
+    subset of nodes to fire per round, so this is exact, not approximate —
+    deferred fluid is *kept*, never dropped).  0.0 (default) arms every
+    column with at least one above-threshold node, the historical behaviour.
 
     Backends:
 
@@ -122,6 +134,16 @@ def frontier_round_bsr(
         sel = jnp.abs(f2) * wt_flat[:, None] > 1.0
     else:
         sel = jnp.abs(f2) * w[:, None] > t
+    blk = sel.reshape(-1, m.bs * c)
+    if occupancy_threshold > 0.0:
+        frac = jnp.mean(blk.astype(f2.dtype), axis=1)
+        col_active = (frac > occupancy_threshold).astype(jnp.int32)
+        # only nodes in armed columns fire; the rest keep their fluid.
+        sel = jnp.logical_and(
+            sel, (col_active != 0).repeat(m.bs)[:, None]
+        )
+    else:
+        col_active = jnp.any(blk, axis=1).astype(jnp.int32)
     sent = jnp.where(sel, f2, jnp.zeros_like(f2))
     if backend == "block":
         xt = sent.reshape(-1, m.bs, c)
@@ -135,12 +157,10 @@ def frontier_round_bsr(
             interpret = not _on_tpu()
         ft = f2.reshape(-1, m.bs, c)
         wt = wt_flat.reshape(-1, m.bs, 1)
-        col_active = jnp.any(
-            sel.reshape(-1, m.bs * c), axis=1
-        ).astype(jnp.int32)
         out, row_l1 = frontier_round_bsr_pallas(
             m.blocks.astype(f2.dtype), m.block_row, m.block_col, col_active,
             ft, wt, m.n_row_blocks, bs=m.bs, interpret=interpret,
+            buffer_depth=buffer_depth,
         )
         # rows owning no block never get their output tile initialised:
         # substitute the kept fluid (F - sent) and its |·|_1 there.

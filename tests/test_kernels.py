@@ -219,6 +219,123 @@ def test_bsr_gather_spmm_shuffled_pool():
 
 
 # --------------------------------------------------------------------------- #
+# diffusion / multi-buffered DMA pipeline (buffer_depth > 1)
+# --------------------------------------------------------------------------- #
+def _frontier_fixture(n=300, c=3, seed=7, bs=64, t_quantile=0.5):
+    rng = np.random.default_rng(seed)
+    g = power_law_graph(n, seed=seed)
+    p, _ = pagerank_system(g)
+    m = prepare_bsr(p.indptr, p.indices, p.weights, p.n, bs=bs)
+    n_pad = m.n_row_blocks * bs
+    f = np.zeros((n_pad, c), np.float32)
+    f[: p.n] = rng.standard_normal((p.n, c))
+    w = np.zeros(n_pad, np.float32)
+    w[: p.n] = 1.0 / np.maximum(np.diff(p.indptr), 1)
+    fw = (np.abs(f) * w[:, None]).ravel()
+    t = max(float(np.quantile(fw, t_quantile)), 1e-6)
+    return m, f, w, t
+
+
+@pytest.mark.parametrize("depth", [1, 2, 4])
+def test_frontier_round_buffer_depths_match_ref(depth):
+    """Each pipeline depth reproduces the numpy twin (interpret mode)."""
+    m, f, w, t = _frontier_fixture()
+    fr, sr, rr = frontier_round_ref(
+        np.asarray(m.blocks), np.asarray(m.block_row),
+        np.asarray(m.block_col), f, w, t)
+    fo, so, ro = frontier_round_bsr(
+        m, jnp.asarray(f), jnp.asarray(w), jnp.float32(t),
+        backend="pallas", interpret=True, buffer_depth=depth)
+    np.testing.assert_allclose(np.asarray(fo), fr, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(so), sr, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("depth", [2, 4])
+def test_frontier_round_depth_bit_parity(depth):
+    """The multi-buffered ring is BIT-identical to the depth-1 kernel:
+    the pipeline reorders DMA issue, never the accumulation order."""
+    m, f, w, t = _frontier_fixture()
+    out1 = frontier_round_bsr(
+        m, jnp.asarray(f), jnp.asarray(w), jnp.float32(t),
+        backend="pallas", interpret=True, buffer_depth=1)
+    outd = frontier_round_bsr(
+        m, jnp.asarray(f), jnp.asarray(w), jnp.float32(t),
+        backend="pallas", interpret=True, buffer_depth=depth)
+    for a, b in zip(out1, outd):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), (
+            f"depth={depth} not bit-identical to depth=1")
+
+
+@pytest.mark.parametrize("depth", [2, 4])
+def test_gather_spmm_depth_bit_parity(depth):
+    """Same bit-parity contract for the engine's gather kernel."""
+    bs = 16
+    rng = np.random.default_rng(3)
+    n_tiles, nrb = 24, 6
+    pool = rng.standard_normal((n_tiles, bs, bs)).astype(np.float32) * 0.1
+    dst = rng.integers(0, nrb, n_tiles).astype(np.int32)
+    col = rng.integers(0, nrb, n_tiles).astype(np.int32)
+    x = rng.standard_normal((nrb, bs, 2)).astype(np.float32)
+    order = np.argsort(dst, kind="stable").astype(np.int32)
+    args = (jnp.asarray(pool), jnp.asarray(order), jnp.asarray(dst[order]),
+            jnp.asarray(col[order]), jnp.asarray(x), nrb)
+    out1 = np.asarray(bsr_gather_spmm_pallas(
+        *args, bs=bs, interpret=True, buffer_depth=1))
+    outd = np.asarray(bsr_gather_spmm_pallas(
+        *args, bs=bs, interpret=True, buffer_depth=depth))
+    assert np.array_equal(out1, outd)
+
+
+def test_gather_spmm_depth_exceeds_visits():
+    """A pipeline deeper than the visit list must still be exact (the
+    warmup clamps to n_visits)."""
+    bs = 8
+    rng = np.random.default_rng(11)
+    pool = rng.standard_normal((2, bs, bs)).astype(np.float32)
+    dst = np.array([0, 1], np.int32)
+    col = np.array([1, 0], np.int32)
+    x = rng.standard_normal((2, bs, 1)).astype(np.float32)
+    order = np.arange(2, dtype=np.int32)
+    out = np.asarray(bsr_gather_spmm_pallas(
+        jnp.asarray(pool), jnp.asarray(order), jnp.asarray(dst),
+        jnp.asarray(col), jnp.asarray(x), 2, bs=bs, interpret=True,
+        buffer_depth=4))
+    ref = np.stack([pool[0] @ x[1], pool[1] @ x[0]])
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
+def test_frontier_round_rejects_bad_depth():
+    m, f, w, t = _frontier_fixture(n=100, c=1)
+    with pytest.raises(ValueError):
+        frontier_round_bsr(m, jnp.asarray(f), jnp.asarray(w),
+                           jnp.float32(t), backend="pallas",
+                           interpret=True, buffer_depth=0)
+
+
+def test_occupancy_threshold_defers_exactly():
+    """τ > 0 suppresses low-occupancy block columns this round — the
+    pallas and block backends agree on the deferred frontier, and τ=0
+    reproduces the historical behavior bitwise."""
+    m, f, w, t = _frontier_fixture(n=300, c=1, t_quantile=0.9)
+    outs = {}
+    for backend in ("block", "pallas"):
+        fo, so, ro = frontier_round_bsr(
+            m, jnp.asarray(f), jnp.asarray(w), jnp.float32(t),
+            backend=backend, interpret=True, occupancy_threshold=0.5)
+        outs[backend] = np.asarray(fo)
+    np.testing.assert_allclose(outs["block"], outs["pallas"],
+                               rtol=2e-4, atol=2e-4)
+    # τ=0 must be the historical behavior exactly
+    f0, _, _ = frontier_round_bsr(
+        m, jnp.asarray(f), jnp.asarray(w), jnp.float32(t),
+        backend="block", occupancy_threshold=0.0)
+    fh, _, _ = frontier_round_bsr(
+        m, jnp.asarray(f), jnp.asarray(w), jnp.float32(t),
+        backend="block")
+    assert np.array_equal(np.asarray(f0), np.asarray(fh))
+
+
+# --------------------------------------------------------------------------- #
 # segment
 # --------------------------------------------------------------------------- #
 @pytest.mark.parametrize(
