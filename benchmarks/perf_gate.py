@@ -77,6 +77,13 @@ def extract_metrics(payload: Dict) -> Dict[str, Dict]:
     for r in rows("chaos"):
         rid = f"{r['scenario']}.{r['method']}.n{r['n']}"
         put(f"chaos/disturbed_ops/{rid}", "counter", r["disturbed_ops"])
+    for r in rows("stream"):
+        rid = f"{r['scenario']}.{r['method']}.n{r['n']}.k{r['k']}"
+        put(f"stream/total_ops/{rid}", "counter", r["total_ops"])
+        # zero-valued baselines are enforced as exactly-zero (see
+        # compare): an exactness or request-drop regression fails hard
+        put(f"stream/max_dx_l1/{rid}", "counter", r["max_dx_l1"])
+        put(f"stream/dropped/{rid}", "counter", r["dropped"])
     return metrics
 
 

@@ -51,6 +51,14 @@ CHAOS_ROW_KEYS = {
     "disturbed_ops", "overhead_ops", "overhead_frac", "x_err_l1",
     "converged",
 }
+STREAM_ROW_KEYS = {
+    "scenario", "method", "n", "k", "requests", "served", "dropped",
+    "rejected", "applied_updates", "deferred_peak", "mean_staleness",
+    "total_ops", "undisturbed_ops", "wasted_ops", "max_dx_l1",
+    "checked_points", "p50_latency_s", "p95_latency_s",
+    "recovery_p50_s", "recovery_p95_s", "degraded_frac", "kills",
+    "restores", "rescales", "converged",
+}
 
 # one registry drives per-suite validation AND the BENCH.json merge
 BENCH_SECTIONS = {
@@ -59,6 +67,7 @@ BENCH_SECTIONS = {
     "api": ("BENCH_api.json", API_ROW_KEYS),
     "graph": ("BENCH_graph.json", GRAPH_ROW_KEYS),
     "chaos": ("BENCH_chaos.json", CHAOS_ROW_KEYS),
+    "stream": ("BENCH_stream.json", STREAM_ROW_KEYS),
 }
 
 
@@ -153,9 +162,24 @@ def smoke() -> int:
     chaos_rows = [r for r in cp["rows"] if "skipped" not in r]
     assert chaos_rows and all(r["converged"] for r in chaos_rows), (
         "a chaos scenario failed to converge after recovery")
+    print("[smoke] stream soak bench (shortened, seeded chaos)")
+    from benchmarks import stream_bench
+
+    sp = stream_bench.main(smoke=True, out_path="BENCH_stream.smoke.json")
+    _validate_bench(sp, STREAM_ROW_KEYS, "stream bench (smoke)")
+    soak = [r for r in sp["rows"] if r["scenario"] == "soak"]
+    assert soak, "stream smoke emitted no soak row"
+    s = soak[0]
+    assert s["requests"] >= 100, s  # shortened soak still streams >=100
+    assert s["kills"] >= 1 and s["restores"] >= 1, s
+    assert s["rescales"] >= 1, s
+    assert s["applied_updates"] >= 1, s  # continuous churn reached apply
+    assert s["dropped"] == 0, "supervised stream dropped a request"
+    assert s["max_dx_l1"] <= 1e-6, (
+        "served solutions diverged from the effective-schedule replay")
     for tmp in ("BENCH_kernels.smoke.json", "BENCH_engine.smoke.json",
                 "BENCH_api.smoke.json", "BENCH_graph.smoke.json",
-                "BENCH_chaos.smoke.json"):
+                "BENCH_chaos.smoke.json", "BENCH_stream.smoke.json"):
         if os.path.exists(tmp):
             os.remove(tmp)
     # consolidate() validates each committed per-suite artifact as it

@@ -1,0 +1,430 @@
+"""Streaming soak bench: a supervised serving session under chaos.
+
+Drives a timestamped evolving-web trace — drifting personalization
+vectors, continuous link churn from a simulated crawler, poison
+requests — through a :class:`repro.resilience.SupervisedSession` while
+a seeded chaos schedule kills devices mid-request, rescales the pid
+axis, and opens a straggler window, then replays the *effective*
+schedule (the requests, update-apply points, and rescales that
+actually executed) through an undisturbed twin on a separate GraphStore
+replica.  Determinism is the exactness oracle: every served solution
+must match the twin **exactly** at matching trace points (DESIGN.md
+§10) — recovery replays the identical trajectory, so |Δx|₁ = 0.
+
+Scenarios:
+
+* ``soak``               — the headline stream: kills + rescales +
+                           churn + straggler + poison, zero dropped
+                           non-poison requests, exact agreement
+* ``frontier:defer-*``   — staleness-vs-cost frontier: the same
+                           overloaded stream at increasing defer
+                           budgets (graph-update deferral is the
+                           *exact* rung: dx stays 0, staleness grows)
+* ``rung:*``             — accuracy cost of the lossy ladder rungs
+                           (loosen-target, shed-occupancy, survival)
+                           against an exact nominal reference
+
+  PYTHONPATH=src python -m benchmarks.stream_bench            # full
+  PYTHONPATH=src python -m benchmarks.stream_bench --smoke    # tiny CI
+
+Emits ``BENCH_stream.json`` (schema-guarded by ``python -m
+benchmarks.run --smoke``, counters folded into the perf gate).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+import tempfile
+from typing import Dict, List, Optional, Tuple
+
+# fake 8 host devices for the engine's pid axis (standalone runs only;
+# under benchmarks.run the real device count rules)
+if "jax" not in sys.modules:
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_force_host_platform_device_count=8").strip()
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StreamSpec:
+    """One deterministic stream scenario (trace + chaos + config)."""
+
+    n: int = 4096
+    k: int = 8
+    method: str = "engine:chunk"
+    requests: int = 500
+    drift: float = 0.003
+    churn_every: int = 10           # every i-th request is a graph update
+    churn_rot: int = 8              # link rotations per update
+    poison_every: int = 0           # every i-th rank request is poison
+    stale_update_at: Optional[int] = None  # inject one stale-version update
+    kill_at: Tuple[int, ...] = ()   # request indices killed mid-solve
+    rescale_at: Dict[int, int] = dataclasses.field(default_factory=dict)
+    straggler: Optional[Tuple[int, int, float]] = None  # (start, end, slow)
+    queue_burst: int = 6            # queue depth during the straggler window
+    defer_cap: int = 64
+    deadline_s: Optional[float] = 0.05
+    op_rate: float = 2e6
+    target_error: Optional[float] = None
+    chunk_rounds: int = 32
+    seed: int = 0
+    sample_every: int = 10          # |dx| checked at every i-th request
+    rungs: Optional[tuple] = None   # None = (nominal, defer-updates)
+    pressure_hi: float = 1.0
+    pressure_lo: float = 0.5
+
+
+def build_problem(n: int, seed: int = 1, target_error=None):
+    import repro
+    from repro.core import webgraph_like
+    from repro.graph import GraphStore
+
+    store = GraphStore.from_csr(webgraph_like(n, seed=seed))
+    return repro.Problem.pagerank(store, target_error=target_error)
+
+
+def make_trace(spec: StreamSpec, problem) -> List[dict]:
+    """The request stream, fully materialized up front so the soak and
+    the reference replay consume bit-identical payloads."""
+    rng = np.random.default_rng(spec.seed)
+    b = np.asarray(problem.b, dtype=np.float64)
+    trace: List[dict] = []
+    for i in range(spec.requests):
+        if (spec.churn_every and i % spec.churn_every
+                == spec.churn_every - 1):
+            trace.append({"kind": "update", "seed": 5000 + i,
+                          "stale": i == spec.stale_update_at})
+            continue
+        b = np.abs(b * (1.0 + spec.drift * rng.standard_normal(problem.n)))
+        poison = bool(spec.poison_every and i % spec.poison_every
+                      == spec.poison_every - 1)
+        entry = {"kind": "rank", "b": b, "poison": poison}
+        if poison:
+            bad = b.copy()
+            bad[int(rng.integers(problem.n))] = np.nan
+            entry["b_poison"] = bad
+        trace.append(entry)
+    return trace
+
+
+def run_stream(spec: StreamSpec, ckpt_dir: str) -> dict:
+    """Drive the supervised soak; returns outcomes + the effective log
+    + sampled solutions (by trace index)."""
+    import repro
+    from repro.chaos import ChaosPlan, SessionInjector
+    from repro.graph import rotation_churn
+    from repro.resilience import (DegradationLadder, RetryPolicy, Rung,
+                                  SupervisedSession)
+    from repro.balance import PressurePolicy
+
+    problem = build_problem(spec.n, target_error=spec.target_error)
+    trace = make_trace(spec, problem)
+    is_engine = spec.method.startswith("engine")
+    options = repro.SolverOptions(
+        k=spec.k if is_engine else None,
+        chunk_rounds=spec.chunk_rounds if is_engine else 4)
+    rungs = spec.rungs if spec.rungs is not None else (
+        Rung("nominal"), Rung("defer-updates", defer_updates=True))
+    ladder = DegradationLadder(
+        rungs=rungs,
+        policy=PressurePolicy(eta=0.6, z=3, hi=spec.pressure_hi,
+                              lo=spec.pressure_lo, patience=2))
+    sup = SupervisedSession(
+        problem, method=spec.method, options=options, ckpt_dir=ckpt_dir,
+        ladder=ladder, deadline_s=spec.deadline_s, op_rate=spec.op_rate,
+        defer_cap=spec.defer_cap, sleep=lambda s: None,
+        retry=RetryPolicy(base_delay_s=0.005, max_delay_s=0.02, seed=0))
+    # the "crawler": owns its own replica and applies every delta it
+    # emits immediately, so queued deltas compose in emission order no
+    # matter how long the ladder defers them
+    crawler = build_problem(spec.n).graph
+    crawler_v0 = crawler.version
+    deltas_by_seed: Dict[int, object] = {}
+    emitted = 0
+
+    effective: List[tuple] = []
+    pending: List[int] = []         # churn seeds awaiting apply events
+    samples: Dict[int, np.ndarray] = {}
+    outcomes = []
+    staleness: List[int] = []       # queued updates at each serve point
+    ev_cursor = 0
+    for i, req in enumerate(trace):
+        if i in spec.rescale_at:
+            sup.rescale(spec.rescale_at[i])
+        if spec.straggler is not None:
+            start, end, slow = spec.straggler
+            if i == start:
+                sup.note_straggler(min(1, spec.k - 1), slow)
+            if i == end:
+                sup.note_straggler(min(1, spec.k - 1), 1.0)
+        in_burst = (spec.straggler is not None
+                    and spec.straggler[0] <= i < spec.straggler[1])
+        if req["kind"] == "rank":
+            if req["poison"]:
+                out = sup.serve_rank(req["b_poison"], request_id=i,
+                                     want_x=False)
+                outcomes.append(out)
+                ev_cursor = len(sup.log)
+                continue
+            chaos = None
+            if i in spec.kill_at:
+                # target the last pid of the CURRENT width (rescales may
+                # have shrunk the session since the trace was authored)
+                k_now = getattr(getattr(sup.session, "_driver", None),
+                                "cfg", None)
+                k_now = getattr(k_now, "k", 1)
+                chaos = SessionInjector(ChaosPlan(seed=i).kill(
+                    pid=max(k_now - 1, 0), round=2))
+            want = (i % spec.sample_every == 0)
+            out = sup.serve_rank(
+                req["b"], request_id=i, chaos=chaos,
+                queue_depth=spec.queue_burst if in_burst else 0,
+                want_x=want)
+            if out.ok and want:
+                samples[i] = out.x
+        else:
+            delta = rotation_churn(crawler, spec.churn_rot,
+                                   seed=req["seed"])
+            if req["stale"]:
+                # wrong version pin: rejected at admission, so the
+                # crawler must NOT count it either — both sides agree
+                # the delta never happened
+                sv = 0
+            else:
+                sv = crawler_v0 + emitted  # version this delta targets
+                crawler.apply_delta(delta)
+                emitted += 1
+                deltas_by_seed[req["seed"]] = delta
+                pending.append(req["seed"])
+            out = sup.serve_update(delta, store_version=sv, request_id=i)
+            if out.rejected and not req["stale"] and pending:
+                pending.pop()       # never reached the queue after all
+        outcomes.append(out)
+        staleness.append(sup.deferred_updates)
+        # fold the supervisor's new events into the effective schedule
+        for ev in list(sup.log)[ev_cursor:]:
+            if ev.kind == "request_served":
+                effective.append(("rank", ev.detail["request_id"]))
+            elif ev.kind == "update_applied":
+                effective.append(("update", pending.pop(0)))
+            elif ev.kind == "update_conflict":
+                pending.pop(0)      # quarantined at apply: not effective
+            elif ev.kind == "rescale":
+                effective.append(("rescale", ev.detail["k_new"]))
+        ev_cursor = len(sup.log)
+    # drain anything still deferred so the stream ends caught-up
+    sup.flush_deferred(reason="end-of-stream")
+    for ev in list(sup.log)[ev_cursor:]:
+        if ev.kind == "update_applied":
+            effective.append(("update", pending.pop(0)))
+        elif ev.kind == "update_conflict":
+            pending.pop(0)
+    return {
+        "sup": sup, "trace": trace, "effective": effective,
+        "samples": samples, "outcomes": outcomes,
+        "deltas_by_seed": deltas_by_seed, "staleness": staleness,
+    }
+
+
+def replay_reference(spec: StreamSpec, run: dict) -> dict:
+    """Undisturbed twin on a fresh GraphStore replica: replays the
+    soak's effective schedule (requests, update applies, rescales) with
+    no chaos, no ladder, no retries — at the NOMINAL target, so lossy
+    rungs show up as measured error rather than vanishing into a
+    matching degraded reference."""
+    import repro
+
+    problem = build_problem(spec.n, target_error=spec.target_error)
+    is_engine = spec.method.startswith("engine")
+    options = repro.SolverOptions(
+        k=spec.k if is_engine else None,
+        chunk_rounds=spec.chunk_rounds if is_engine else 4)
+    ref = repro.SolverSession(problem, method=spec.method,
+                              options=options)
+    b_by_index = {i: e["b"] for i, e in enumerate(run["trace"])
+                  if e["kind"] == "rank" and not e["poison"]}
+    ref_samples: Dict[int, np.ndarray] = {}
+    total_ops = 0
+    for entry in run["effective"]:
+        kind = entry[0]
+        if kind == "rank":
+            i = entry[1]
+            ref.warm_start(b_by_index[i])
+            rep = ref.solve()
+            total_ops += rep.n_ops
+            if i in run["samples"]:
+                ref_samples[i] = rep.x
+        elif kind == "update":
+            # regenerate from the replica store: identical churn seeds
+            # on identical store content produce identical deltas
+            delta = run["deltas_by_seed"][entry[1]]
+            ref.update_graph(delta)
+            rep = ref.solve()
+            total_ops += rep.n_ops
+        elif kind == "rescale":
+            ref.rescale(entry[1])
+    return {"ref": ref, "samples": ref_samples,
+            "undisturbed_ops": ref.lifetime_ops}
+
+
+def _percentile(values: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(values), q)) if values else 0.0
+
+
+def stream_row(scenario: str, spec: StreamSpec, run: dict,
+               ref: dict) -> dict:
+    sup = run["sup"]
+    outs = run["outcomes"]
+    ranks = [o for o in outs if o.kind == "rank" and not o.rejected]
+    served = [o for o in ranks if o.ok]
+    dropped = [o for o in ranks if not o.ok]
+    rejected = [o for o in outs if o.rejected]
+    dxs = {i: float(np.abs(run["samples"][i] - ref["samples"][i]).sum())
+           for i in run["samples"] if i in ref["samples"]}
+    lat = [o.latency_s for o in served]
+    kill_lat = [o.latency_s for o in served if o.restores > 0]
+    counts = sup.log.counts()
+    stale = run["staleness"]
+    return {
+        "scenario": scenario,
+        "method": spec.method,
+        "n": spec.n,
+        "k": spec.k,
+        "requests": spec.requests,
+        "served": len(served),
+        "dropped": len(dropped),
+        "rejected": len(rejected),
+        "applied_updates": counts.get("update_applied", 0),
+        "deferred_peak": max(stale) if stale else 0,
+        "mean_staleness": round(float(np.mean(stale)), 3) if stale else 0.0,
+        "total_ops": int(sup.total_ops),
+        "undisturbed_ops": int(ref["undisturbed_ops"]),
+        "wasted_ops": int(sup.wasted_ops),
+        "max_dx_l1": max(dxs.values()) if dxs else float("nan"),
+        "checked_points": len(dxs),
+        "p50_latency_s": round(_percentile(lat, 50), 6),
+        "p95_latency_s": round(_percentile(lat, 95), 6),
+        "recovery_p50_s": round(_percentile(kill_lat, 50), 6),
+        "recovery_p95_s": round(_percentile(kill_lat, 95), 6),
+        "degraded_frac": round(
+            sum(1 for o in served if o.degraded) / max(len(served), 1), 4),
+        "kills": counts.get("fault", 0),
+        "restores": sup.restores,
+        "rescales": counts.get("rescale", 0),
+        "degrades": counts.get("degrade", 0),
+        "recovers": counts.get("recover", 0),
+        "converged": bool(all(o.converged for o in served)),
+    }
+
+
+def soak_cell(spec: StreamSpec, scenario: str = "soak") -> dict:
+    with tempfile.TemporaryDirectory() as ckpt:
+        run = run_stream(spec, ckpt)
+    ref = replay_reference(spec, run)
+    return stream_row(scenario, spec, run, ref)
+
+
+def frontier_cells(n: int, requests: int, defer_caps=(1, 4, 16)) -> list:
+    """Staleness-vs-cost frontier: identical overloaded stream, defer
+    budget swept.  Deferral is the exact rung — the frontier trades
+    peak/mean staleness against ops concentrated in the overload
+    window, never accuracy."""
+    rows = []
+    for cap in defer_caps:
+        spec = StreamSpec(
+            n=n, k=4, requests=requests, churn_every=4,
+            straggler=(requests // 4, 3 * requests // 4, 8.0),
+            queue_burst=8, defer_cap=cap, deadline_s=0.02,
+            sample_every=5, seed=1)
+        rows.append(soak_cell(spec, scenario=f"frontier:defer-{cap}"))
+    return rows
+
+
+def rung_cells(n: int, requests: int) -> list:
+    """Accuracy cost of the lossy rungs, measured against an exact
+    nominal reference (the bounded/best-effort rows of DESIGN.md §10)."""
+    from repro.resilience import Rung
+
+    cells = [
+        ("rung:loosen-target", "engine:chunk",
+         Rung("loosen-target", target_scale=8.0)),
+        ("rung:shed-occupancy", "frontier:pallas",
+         Rung("shed-occupancy", occupancy_threshold=0.25)),
+        ("rung:survival", "engine:chunk",
+         Rung("survival", target_scale=32.0, round_cap=8)),
+    ]
+    rows = []
+    for scenario, method, rung in cells:
+        spec = StreamSpec(
+            n=n, k=4, method=method, requests=requests, churn_every=6,
+            deadline_s=None, sample_every=4, seed=2,
+            rungs=(rung,))        # pinned: the rung is always active
+        rows.append(soak_cell(spec, scenario=scenario))
+    return rows
+
+
+def main(smoke: bool = False, out_path: str = "BENCH_stream.json") -> dict:
+    import jax
+
+    n_dev = len(jax.devices())
+    rows = []
+    if smoke:
+        soak = StreamSpec(
+            n=1024, k=min(4, n_dev), requests=100, churn_every=8,
+            poison_every=25, stale_update_at=55, kill_at=(22,),
+            rescale_at={60: max(min(4, n_dev) - 1, 1)},
+            straggler=(35, 50, 6.0), sample_every=8, seed=0)
+        rows.append(soak_cell(soak, scenario="soak"))
+        rows.extend(frontier_cells(512, requests=24, defer_caps=(1, 8)))
+    else:
+        k = min(8, n_dev)
+        soak = StreamSpec(
+            n=4096, k=k, requests=500, churn_every=10, poison_every=37,
+            stale_update_at=209, kill_at=(48, 260),
+            rescale_at={150: max(k - 2, 1), 330: k},
+            straggler=(380, 430, 6.0), sample_every=10, seed=0)
+        rows.append(soak_cell(soak, scenario="soak"))
+        rows.extend(frontier_cells(1024, requests=48))
+        rows.extend(rung_cells(1024, requests=24))
+    for r in rows:
+        print(f"  {r['scenario']:24s} served={r['served']}/{r['requests']} "
+              f"dropped={r['dropped']} rejected={r['rejected']} "
+              f"|dx|max={r['max_dx_l1']:.2e} "
+              f"stale(mean/peak)={r['mean_staleness']}/{r['deferred_peak']} "
+              f"p95={r['p95_latency_s']*1e3:.1f}ms "
+              f"degraded={r['degraded_frac']:.0%}")
+    from benchmarks._meta import std_meta
+
+    payload = {
+        "meta": std_meta("stream_soak", graph="webgraph_like",
+                         n_devices=n_dev),
+        "rows": rows,
+    }
+    with open(out_path, "w") as fh:
+        json.dump(payload, fh, indent=1)
+    print(f"[stream bench] wrote {out_path} ({len(rows)} rows)")
+    return payload
+
+
+if __name__ == "__main__":
+    _out = "BENCH_stream.json"
+    if "--out" in sys.argv:
+        _out = sys.argv[sys.argv.index("--out") + 1]
+    _payload = main(smoke="--smoke" in sys.argv, out_path=_out)
+    _rows = _payload["rows"]
+    _soak = [r for r in _rows if r["scenario"] == "soak"]
+    _exact = _soak + [r for r in _rows
+                      if r["scenario"].startswith("frontier:")]
+    _ok = (
+        bool(_soak)
+        and all(r["dropped"] == 0 for r in _rows)
+        # exact scenarios: determinism must hold to the bit
+        and all(r["max_dx_l1"] <= 1e-6 for r in _exact)
+        and all(r["converged"] for r in _exact)
+    )
+    sys.exit(0 if _ok else 1)

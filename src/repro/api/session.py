@@ -77,6 +77,25 @@ class _SegmentSumDriver:
         self._state = (f, h, t, jnp.zeros((), jnp.int32),
                        jnp.zeros((), jnp.int32))
 
+    def warm_seed(self, b_new: np.ndarray) -> float:
+        """Device-resident warm start: ``F' = B' − H + P·H`` without
+        materializing H on the host.  The history stays where it lives;
+        only the O(N) request payload ``b_new`` crosses to the device.
+        Counters reset (new phase).  Returns |F'|_1 (scalar readback).
+        """
+        import jax
+        import jax.numpy as jnp
+
+        f_old, h, _t, _ops, _rounds = self._state
+        b = jnp.asarray(b_new, dtype=h.dtype)
+        ph = jax.ops.segment_sum(h[self.src] * self.wgt, self.dst,
+                                 num_segments=self.n)
+        f = b - h + ph
+        t = jnp.abs(f * self.w).max() * 2.0
+        self._state = (f, h, t, jnp.zeros((), jnp.int32),
+                       jnp.zeros((), jnp.int32))
+        return float(jnp.abs(f).sum())
+
     def advance(self, tol: float, round_limit: int) -> None:
         """Run until |F|_1 <= tol or the *total* round count hits the
         limit; resumable (identical round sequence to one long loop)."""
@@ -218,6 +237,12 @@ class _BsrFrontierDriver:
         self.m = problem.graph.bsr(bs=bs).to_device()
         n_pad = self.m.n_row_blocks * bs
         dt = self.m.blocks.dtype
+        # device edge list for the device-resident warm start (P·H via
+        # segment_sum — the BSR pool only exposes fused rounds)
+        src, dst, wgt = g.edge_list()
+        self._src_d = jnp.asarray(src, dtype=jnp.int32)
+        self._dst_d = jnp.asarray(dst, dtype=jnp.int32)
+        self._wgt_d = jnp.asarray(wgt, dtype=dt)
         pad = lambda v, t: jnp.zeros(n_pad, dtype=t).at[: g.n].set(
             jnp.asarray(v, dtype=t))
         self.w = pad(problem.node_weights(), dt)
@@ -244,6 +269,25 @@ class _BsrFrontierDriver:
         t = jnp.abs(f * self.w).max() * 2.0
         self._state = (f, jnp.abs(f).sum(), h, t,
                        jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+
+    def warm_seed(self, b_new: np.ndarray) -> float:
+        """Device-resident warm start over the padded state (see
+        :meth:`_SegmentSumDriver.warm_seed`)."""
+        import jax
+        import jax.numpy as jnp
+
+        f_old, _res, h, _t, _ops, _rounds = self._state
+        h_n = h[: self.n]
+        b = jnp.asarray(b_new, dtype=self._dt)
+        ph = jax.ops.segment_sum(h_n[self._src_d] * self._wgt_d,
+                                 self._dst_d, num_segments=self.n)
+        f_n = b - h_n + ph
+        f = jnp.zeros(self._n_pad, dtype=self._dt).at[: self.n].set(f_n)
+        res = jnp.abs(f).sum()
+        t = jnp.abs(f * self.w).max() * 2.0
+        self._state = (f, res, h, t, jnp.zeros((), jnp.int32),
+                       jnp.zeros((), jnp.int32))
+        return float(res)
 
     def advance(self, tol: float, round_limit: int) -> None:
         import jax
@@ -401,16 +445,10 @@ class _EngineDriver:
     def seed(self, f_nodes: np.ndarray,
              h_nodes: Optional[np.ndarray] = None) -> None:
         from repro.balance.executors import BucketMoveExecutor
-        from repro.balance.policies import make_rebalancer
 
-        if self.engine.rebalancer is not None:
-            # fresh policy state per solve phase: a warm start is a new
-            # convergence trajectory, stale EMA slopes would misfire
-            self.engine.rebalancer = make_rebalancer(
-                self.cfg.policy or "slope_ema", k=self.cfg.k,
-                target_error=self.cfg.target_error, eta=self.cfg.eta,
-                z=self.cfg.z, unit="bucket",
-            )
+        # fresh policy state per solve phase: a warm start is a new
+        # convergence trajectory, stale EMA slopes would misfire
+        self._fresh_rebalancer()
         self.ex = BucketMoveExecutor(
             self.engine, self.engine.init_state(f_nodes, h_nodes))
         self._resid = float(np.abs(np.asarray(f_nodes)).sum())
@@ -421,7 +459,98 @@ class _EngineDriver:
         # the new width, so phase totals accumulate into host offsets
         self._ops_offset = 0
         self._rounds_offset = 0
+        self._warm_maps = None  # (arrays-identity, layout-bytes, maps)
         self._seeded = True
+
+    def _fresh_rebalancer(self) -> None:
+        from repro.balance.policies import make_rebalancer
+
+        if self.engine.rebalancer is not None:
+            self.engine.rebalancer = make_rebalancer(
+                self.cfg.policy or "slope_ema", k=self.cfg.k,
+                target_error=self.cfg.target_error, eta=self.cfg.eta,
+                z=self.cfg.z, unit="bucket",
+            )
+
+    def warm_seed(self, b_new: np.ndarray) -> float:
+        """Device-resident warm start over the sharded bucket layout.
+
+        The history H never leaves the devices: the bucketed [R, S]
+        state is permuted home-layout-wise, flattened to node space,
+        run through ``P·H`` (device segment_sum over a cached device
+        edge list), and the re-seeded ``F' = B' − H + P·H`` scattered
+        back — all jnp ops.  Only ``b_new`` (the request payload) is
+        uploaded and only the scalar |F'|_1 is read back.  Index maps
+        are cached per (arrays, bucket-layout) and rebuilt when a
+        rescale or bucket move changes either.  Counters reset; the
+        rebalancer restarts fresh (new convergence trajectory).
+        """
+        import jax
+        import jax.numpy as jnp
+
+        a, cfg, eng, ex = self.arrays, self.cfg, self.engine, self.ex
+        r_rows, s_slots = a.n_rows, a.bucket_size
+        rob = np.asarray(ex.row_of_bucket)
+        cache = self._warm_maps
+        if (cache is None or cache[0] is not a
+                or cache[1] != rob.tobytes()):
+            src, dst, wgt = self.problem.p.edge_list()
+            # cur_of_home[home row] = row currently holding that bucket
+            cur = np.empty(r_rows, dtype=np.int64)
+            cur[np.asarray(a.pos_of_bucket, dtype=np.int64)] = rob
+            inv = np.empty(r_rows, dtype=np.int64)
+            inv[cur] = np.arange(r_rows)
+            nos = a.node_of_slot  # [R, S], home-row indexed
+            valid = nos >= 0
+            flat_slot = (np.arange(r_rows)[:, None] * s_slots
+                         + np.arange(s_slots)[None, :])[valid]
+            maps = {
+                "src": jnp.asarray(src, jnp.int32),
+                "dst": jnp.asarray(dst, jnp.int32),
+                "wgt": jnp.asarray(wgt, cfg.dtype),
+                "perm": jnp.asarray(cur, jnp.int32),
+                "inv": jnp.asarray(inv, jnp.int32),
+                "flat_slot": jnp.asarray(flat_slot, jnp.int32),
+                "node_ids": jnp.asarray(nos[valid], jnp.int32),
+                "w_home": jnp.asarray(a.w, cfg.dtype).reshape(
+                    r_rows, s_slots),
+            }
+            self._warm_maps = (a, rob.tobytes(), maps)
+        maps = self._warm_maps[2]
+        st = ex.state
+        h_rows = st.h.reshape(r_rows, s_slots)
+        h_home = jnp.take(h_rows, maps["perm"], axis=0)
+        h_node = jnp.zeros(a.n, cfg.dtype).at[maps["node_ids"]].set(
+            h_home.reshape(-1)[maps["flat_slot"]])
+        b_dev = jnp.asarray(np.asarray(b_new), cfg.dtype)
+        ph = jax.ops.segment_sum(h_node[maps["src"]] * maps["wgt"],
+                                 maps["dst"], num_segments=a.n)
+        f_node = b_dev - h_node + ph
+        f_home = jnp.zeros(r_rows * s_slots, cfg.dtype).at[
+            maps["flat_slot"]].set(f_node[maps["node_ids"]]
+                                   ).reshape(r_rows, s_slots)
+        fw_cur = jnp.take(jnp.abs(f_home) * maps["w_home"], maps["inv"],
+                          axis=0)
+        t0 = fw_cur.reshape(cfg.k, -1).max(axis=1) * 2.0 + 1e-30
+        f_cur = jnp.take(f_home, maps["inv"], axis=0)
+        put_row = lambda x: jax.device_put(x, eng.row_sharding)
+        ex.state = dataclasses.replace(
+            st,
+            f=put_row(f_cur.reshape(st.f.shape).astype(cfg.dtype)),
+            outbox=put_row(jnp.zeros_like(st.outbox)),
+            t=put_row(t0.astype(cfg.dtype)),
+            ops=put_row(jnp.zeros(cfg.k, dtype=jnp.int32)),
+            rounds=jax.device_put(jnp.zeros((), dtype=jnp.int32),
+                                  eng.rep_sharding),
+        )
+        self._fresh_rebalancer()
+        self._resid = float(jnp.abs(f_node).sum())
+        self._chunks = 0
+        self._moves = []
+        self._prev_ops = np.zeros(cfg.k, dtype=np.int64)
+        self._ops_offset = 0
+        self._rounds_offset = 0
+        return self._resid
 
     def advance(self, tol: float, round_limit: int) -> None:
         """One jitted chunk + one control-plane pass (engine grain)."""
@@ -627,6 +756,11 @@ class SolverSession:
         self._edges = problem.p.edge_list()
         self._ckpt_step = 0
         self.restored_from: Optional[dict] = None
+        # lifetime §2.3 accounting: phase counters reset on every
+        # warm_start / update_graph, so re-seeds bank them here first —
+        # ``lifetime_ops`` is THE one rule recovery-cost consumers sum
+        self._ops_banked = 0
+        self._rounds_banked = 0
 
     # ---- state views ------------------------------------------------------
     @property
@@ -646,6 +780,23 @@ class SolverSession:
     @property
     def n_rounds(self) -> int:
         return self._driver.rounds()
+
+    @property
+    def lifetime_ops(self) -> int:
+        """Edge pushes charged across the session's whole life (§2.3):
+        every solve phase since construction or restore, including work
+        banked by warm_start / update_graph re-seeds."""
+        return self._ops_banked + self._driver.ops()
+
+    @property
+    def lifetime_rounds(self) -> int:
+        return self._rounds_banked + self._driver.rounds()
+
+    def _bank_phase(self) -> None:
+        """Fold the current phase counters into the lifetime totals —
+        call ONLY immediately before a re-seed resets them."""
+        self._ops_banked += self._driver.ops()
+        self._rounds_banked += self._driver.rounds()
 
     def _tol(self, until: Optional[float]) -> float:
         te = until if until is not None else self.problem.target_error
@@ -729,7 +880,13 @@ class SolverSession:
         old H leaves against the new system, so |F'| (returned) is small
         whenever B' is near the RHS H was built for, and the follow-up
         ``run``/``solve`` charges correspondingly few edge pushes.
-        Phase counters (ops, rounds, trace) reset to zero.
+        Phase counters (ops, rounds, trace) reset to zero after banking
+        into the lifetime totals.
+
+        The serving hot path: drivers exposing ``warm_seed`` re-seed
+        entirely on device (H and F never round-trip through host
+        numpy; only ``b_new`` is uploaded and the scalar |F'|_1 read
+        back) — all four warm-startable backends do.
         """
         self._check_fresh()
         b_new = np.asarray(b_new, dtype=np.float64)
@@ -738,6 +895,13 @@ class SolverSession:
                 f"b_new has shape {b_new.shape}, expected "
                 f"({self.problem.n},)"
             )
+        self._bank_phase()
+        warm_seed = getattr(self._driver, "warm_seed", None)
+        if warm_seed is not None:
+            resid = warm_seed(b_new)
+            self._b = b_new
+            self.problem = self.problem.with_b(b_new)
+            return resid
         h = self._driver.x()
         src, dst, w = self._edges
         ph = np.bincount(dst, weights=h[src] * w, minlength=self.problem.n)
@@ -760,10 +924,19 @@ class SolverSession:
         drains only the churn-injected fluid instead of restarting
         cold.  Routed through :meth:`Problem.with_graph`; on engine
         backends the churn also feeds the balance control plane as a
-        ``graph-churn`` LoadSignal.  Phase counters reset; returns
-        ``|F'|_1``.
+        ``graph-churn`` LoadSignal.  Phase counters reset (banked into
+        the lifetime totals); returns ``|F'|_1``.
+
+        **Transactional**: a malformed delta is rejected before any
+        mutation (the CSR splice validates first, and the inverse delta
+        is captured up front — both raise with the session untouched);
+        a failure *after* the store mutated (view patch, driver
+        rebuild, re-seed) rolls the store back via the inverse delta
+        and re-seeds the old state over a fresh driver, so the next
+        request serves the pre-delta graph instead of a half-patched
+        one.  The original exception re-raises either way.
         """
-        from repro.graph import GraphDelta
+        from repro.graph import GraphDelta, invert_delta
 
         if not isinstance(delta, GraphDelta):
             raise TypeError(
@@ -774,16 +947,43 @@ class SolverSession:
         if delta.is_empty:
             return self._driver.residual()
         store = self.problem.graph
-        store.apply_delta(delta)  # patches every materialized view
-        self.problem = self.problem.with_graph(store)
-        src, dst, w = self.problem.p.edge_list()
-        self._edges = (src, dst, w)
-        ph = np.bincount(dst, weights=h[src] * w, minlength=self.problem.n)
-        f_new = self._b - h + ph
-        # fresh driver over the PATCHED views (cache hits inside the
-        # store: tiles/buckets/rows were spliced, not rebuilt)
-        self._driver = _DRIVERS[self.method](self.problem, self.options)
-        self._driver.seed(f_new, h)
+        # rollback token; also pre-validates that every removed /
+        # reweighted edge exists (raises BEFORE any mutation)
+        inverse = invert_delta(store, delta)
+        self._bank_phase()
+        applied = False
+        try:
+            store.apply_delta(delta)  # patches every materialized view
+            applied = True
+            self.problem = self.problem.with_graph(store)
+            src, dst, w = self.problem.p.edge_list()
+            self._edges = (src, dst, w)
+            ph = np.bincount(dst, weights=h[src] * w,
+                             minlength=self.problem.n)
+            f_new = self._b - h + ph
+            # fresh driver over the PATCHED views (cache hits inside the
+            # store: tiles/buckets/rows were spliced, not rebuilt)
+            self._driver = _DRIVERS[self.method](self.problem,
+                                                 self.options)
+            self._driver.seed(f_new, h)
+        except Exception:
+            if applied:
+                store.apply_delta(inverse)
+            # even a failed apply_delta may have partially patched a
+            # view the old driver captured (the store rolls its CSR
+            # back and drops the view cache) — rebuild the driver over
+            # the restored store and re-seed the held (H, F) via the
+            # same invariant identity F = B − H + P·H
+            self.problem = self.problem.with_graph(store)
+            src, dst, w = self.problem.p.edge_list()
+            self._edges = (src, dst, w)
+            ph = np.bincount(dst, weights=h[src] * w,
+                             minlength=self.problem.n)
+            self._driver = _DRIVERS[self.method](self.problem,
+                                                 self.options)
+            self._driver.seed(self._b - h + ph, h)
+            self._batch_driver = None
+            raise
         if isinstance(self._driver, _EngineDriver):
             self._driver.note_graph_churn(
                 delta.churn_per_node(self.problem.n))
@@ -843,6 +1043,8 @@ class SolverSession:
             "store_version": self.problem.store_version,
             "ops": d.ops(),
             "rounds": d.rounds(),
+            "lifetime_ops": self.lifetime_ops,
+            "lifetime_rounds": self.lifetime_rounds,
             "residual": d.residual(),
             "move_log": [list(m) for m in d.move_log()],
         }
@@ -895,9 +1097,30 @@ class SolverSession:
         (``problem.with_b``), re-seeds ``(F, H)`` and the thresholds,
         and records provenance in ``session.restored_from``.
         """
+        import os
+
         from repro.checkpoint import list_steps, load_checkpoint
 
         steps = list_steps(root)
+        # adversarial directories: step-like dirs that list_steps
+        # refused (torn manifest mid-write, permission-denied,
+        # unparsable JSON) surface as rejection provenance instead of
+        # disappearing silently
+        rejected: List[Tuple[int, str]] = []
+        complete = {f"step_{s:09d}" for s in steps}
+        try:
+            entries = sorted(os.listdir(root))
+        except OSError:
+            entries = []
+        for name in entries:
+            if (name.startswith("step_") and not name.endswith(".tmp")
+                    and name not in complete):
+                try:
+                    s_bad = int(name.split("_", 1)[1])
+                except ValueError:
+                    s_bad = -1
+                rejected.append(
+                    (s_bad, "incomplete or unreadable manifest"))
         if step is not None:
             if step not in steps:
                 raise FileNotFoundError(
@@ -912,7 +1135,6 @@ class SolverSession:
             "b": np.zeros(problem.n), "f": np.zeros(problem.n),
             "h": np.zeros(problem.n), "t": np.zeros(()),
         }
-        rejected: List[Tuple[int, str]] = []
         edges = problem.p.edge_list()  # once, not per candidate (O(L))
         for s in candidates:
             try:
@@ -936,6 +1158,8 @@ class SolverSession:
                 "step": s,
                 "ops": extra.get("ops", 0),
                 "rounds": extra.get("rounds", 0),
+                "lifetime_ops": extra.get("lifetime_ops",
+                                          extra.get("ops", 0)),
                 "move_log": [tuple(m) for m in extra.get("move_log", [])],
                 "rejected": rejected,
             }

@@ -13,7 +13,9 @@ granularity.  This package is that claim turned into an architecture:
   implementations ship: :class:`SlopeEMAPolicy` (paper §2.5.2 exact),
   :class:`CostRefreshPolicy` (periodic CB re-split from observed costs),
   :class:`HysteresisPolicy` (slope-EMA with a deadband and multi-move
-  batching).
+  batching), :class:`PressurePolicy` (serving-tier overload control:
+  ±1 degradation-ladder rung recommendations from a ``latency``
+  signal).
 * :class:`~repro.balance.plan.MovePlan` — granularity-agnostic
   "move ``units`` from worker ``src`` to worker ``dst``" decision with a
   declared unit kind (``node`` | ``bucket`` | ``expert-shard`` |
@@ -33,6 +35,7 @@ from .signals import LoadSignal
 from .policies import (
     CostRefreshPolicy,
     HysteresisPolicy,
+    PressurePolicy,
     Rebalancer,
     SlopeEMAPolicy,
     make_rebalancer,
@@ -51,6 +54,7 @@ __all__ = [
     "SlopeEMAPolicy",
     "CostRefreshPolicy",
     "HysteresisPolicy",
+    "PressurePolicy",
     "make_rebalancer",
     "MoveExecutor",
     "NodeMoveExecutor",

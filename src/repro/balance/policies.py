@@ -15,6 +15,11 @@ of what a load unit is (node, bucket, expert shard, device slice).
 * :class:`HysteresisPolicy` — slope-EMA with a deadband (the trigger
   must persist ``patience`` consecutive steps) and multi-move batching
   (pairs slowest↔fastest extremes in one shot).
+* :class:`PressurePolicy` — overload controller for the serving tier:
+  EMAs a ``latency`` signal's absolute pressure and emits ±1 rung
+  recommendations for the degradation ladder (DESIGN.md §10) instead of
+  MovePlans — structurally it is still a Rebalancer (``propose``
+  returns ``[]``), so it plugs into the same control loop.
 """
 from __future__ import annotations
 
@@ -30,6 +35,7 @@ __all__ = [
     "SlopeEMAPolicy",
     "CostRefreshPolicy",
     "HysteresisPolicy",
+    "PressurePolicy",
     "make_rebalancer",
     "POLICY_NAMES",
 ]
@@ -242,7 +248,87 @@ class HysteresisPolicy:
         self.streak = 0
 
 
-POLICY_NAMES = ("slope_ema", "cost_refresh", "hysteresis")
+class PressurePolicy:
+    """Hysteretic overload controller driving the degradation ladder.
+
+    Same deadband idiom as :class:`HysteresisPolicy`, but the decision
+    space is vertical (shed work / restore quality) instead of
+    horizontal (move load between workers): the EMA'd worst-worker
+    pressure must sit above ``hi`` for ``patience`` consecutive steps to
+    recommend stepping DOWN one rung (+1), or below ``lo`` for
+    ``patience`` steps to recommend stepping back UP (−1), with a
+    ``z``-step cooldown after every decision so the ladder never
+    oscillates faster than the signal can respond.
+
+    ``update(signal) -> int`` is the primary API (the ladder calls it
+    once per served request); ``propose`` is the Rebalancer-protocol
+    shim — it forwards to ``update``, stashes the decision in
+    ``last_delta``, and returns no MovePlans.
+    """
+
+    def __init__(self, k: int = 1, target_error: float = 0.0,
+                 eta: float = 0.3, z: int = 4, hi: float = 1.0,
+                 lo: float = 0.5, patience: int = 2,
+                 unit: str = "request", **_ignored):
+        if lo >= hi:
+            raise ValueError(f"need lo < hi, got lo={lo} hi={hi}")
+        self.k = k
+        self.eta = eta
+        self.z = z
+        self.hi = hi
+        self.lo = lo
+        self.patience = patience
+        self.unit = unit
+        self.ema: Optional[float] = None
+        self.last_delta = 0
+        self.n_moves = 0
+        self._hi_streak = 0
+        self._lo_streak = 0
+        self._cooldown = 0
+
+    def update(self, signal: LoadSignal) -> int:
+        """One control step: returns −1 (relieve), 0 (hold), +1 (shed)."""
+        p = float(signal.values.max()) if signal.values.size else 0.0
+        self.ema = p if self.ema is None else (
+            self.ema * (1.0 - self.eta) + p * self.eta)
+        if self._cooldown > 0:
+            self._cooldown -= 1
+        if self.ema > self.hi:
+            self._hi_streak += 1
+            self._lo_streak = 0
+        elif self.ema < self.lo:
+            self._lo_streak += 1
+            self._hi_streak = 0
+        else:
+            self._hi_streak = 0
+            self._lo_streak = 0
+        if self._cooldown > 0:
+            return 0
+        if self._hi_streak >= self.patience:
+            self._hi_streak = 0
+            self._cooldown = self.z
+            self.n_moves += 1
+            return 1
+        if self._lo_streak >= self.patience:
+            self._lo_streak = 0
+            self._cooldown = self.z
+            self.n_moves += 1
+            return -1
+        return 0
+
+    def propose(self, signal: LoadSignal) -> List[MovePlan]:
+        self.last_delta = self.update(signal)
+        return []
+
+    def reset_worker(self, k: int) -> None:
+        self.ema = None
+        self.last_delta = 0
+        self._hi_streak = 0
+        self._lo_streak = 0
+        self._cooldown = self.z
+
+
+POLICY_NAMES = ("slope_ema", "cost_refresh", "hysteresis", "pressure")
 
 
 def make_rebalancer(name: str, k: int, target_error: float,
@@ -257,6 +343,9 @@ def make_rebalancer(name: str, k: int, target_error: float,
     if name == "hysteresis":
         return HysteresisPolicy(k=k, target_error=target_error, eta=eta,
                                 z=z, unit=unit, **kw)
+    if name == "pressure":
+        return PressurePolicy(k=k, target_error=target_error, eta=eta,
+                              z=z, unit=unit, **kw)
     raise ValueError(
         f"unknown rebalancing policy {name!r}; expected one of "
         f"{POLICY_NAMES}"

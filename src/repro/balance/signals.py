@@ -13,6 +13,7 @@ edge-ops        edge operations charged this window    node / bucket
 step-time       wall-clock seconds of worker k's step  device
 expert-tokens   tokens routed to expert shard k        expert-shard
 graph-churn     changed edges owned by worker k        node / bucket
+latency         serving pressure (deadline + queue)    request stream
 ==============  =====================================  ==============
 
 The convention throughout: **larger value = slower / more loaded
@@ -30,7 +31,7 @@ import numpy as np
 __all__ = ["LoadSignal", "SIGNAL_KINDS"]
 
 SIGNAL_KINDS = ("residual", "edge-ops", "step-time", "expert-tokens",
-                "graph-churn")
+                "graph-churn", "latency")
 
 
 @dataclasses.dataclass
@@ -116,6 +117,33 @@ class LoadSignal:
         if total > 0:
             churn = churn / total
         return cls(values=churn, sizes=sizes, kind="graph-churn", step=step)
+
+    @classmethod
+    def from_latency(cls, latency_s: float, deadline_s: float,
+                     queue_depth: int = 0, queue_cap: int = 8,
+                     step: int = 0) -> "LoadSignal":
+        """Serving-tier pressure: deadline headroom plus queue backlog.
+
+        Unlike the skew signals above, this one is NOT normalized to
+        fractions — overload is about absolute headroom, not relative
+        imbalance.  ``values[0]`` is a dimensionless pressure where
+        1.0 means "at the deadline with an empty queue"; a
+        :class:`~repro.balance.policies.PressurePolicy` thresholds it
+        to drive the serving degradation ladder up and down:
+
+            pressure = latency/deadline + queue_depth/queue_cap
+
+        ``sizes[0]`` carries the raw queue depth so event logs can
+        recover it without re-deriving.
+        """
+        if deadline_s <= 0:
+            raise ValueError(f"deadline_s must be positive, got "
+                             f"{deadline_s}")
+        pressure = (max(float(latency_s), 0.0) / float(deadline_s)
+                    + max(int(queue_depth), 0) / max(int(queue_cap), 1))
+        return cls(values=np.array([pressure]),
+                   sizes=np.array([max(int(queue_depth), 0)]),
+                   kind="latency", step=step)
 
     @classmethod
     def from_expert_counts(cls, token_counts: np.ndarray,

@@ -152,10 +152,14 @@ class ChaosRunner:
     def run(self, until: Optional[float] = None):
         """Returns ``(session, disturbed_ops, wasted_ops)``.
 
-        ``disturbed_ops`` is every edge push charged across all
-        attempts (including work a kill destroyed and pushes banked by
-        the injector across churn re-seeds); ``wasted_ops`` the part
-        that died un-checkpointed.
+        ``disturbed_ops`` sums ``SolverSession.lifetime_ops`` per
+        attempt — THE one §2.3 accounting rule: every edge push charged
+        across all attempts, including work a kill destroyed and pushes
+        a churn re-seed banked (``update_graph`` folds them into the
+        session's lifetime totals, so nothing is counted twice and
+        nothing leaks).  ``wasted_ops`` is the part that died
+        un-checkpointed (attempt lifetime minus the restored
+        checkpoint's recorded lifetime).
         """
         from repro.api.session import SolverSession
 
@@ -174,14 +178,13 @@ class ChaosRunner:
                     grains += 1
                     if grains % self.checkpoint_every == 0:
                         session.checkpoint(self.ckpt_dir)
-                total_ops += session.n_ops
-                return (session, total_ops + self.injector.absorbed_ops,
+                return (session, total_ops + session.lifetime_ops,
                         wasted_ops)
             except ChaosKill as kill:
                 self.kills.append(kill)
                 if len(self.kills) > self.max_recoveries:
                     raise
-                lost = session.n_ops
+                lost = session.lifetime_ops
                 total_ops += lost
                 k_before = getattr(getattr(session._driver, "cfg", None),
                                    "k", 1)
@@ -190,7 +193,8 @@ class ChaosRunner:
                         self.ckpt_dir, session.problem,
                         method=self.method, options=self.options)
                     wasted_ops += max(
-                        0, lost - (session.restored_from["ops"] or 0))
+                        0, lost - (session.restored_from["lifetime_ops"]
+                                   or 0))
                 except (FileNotFoundError, ValueError):
                     # every step rejected (e.g. all checkpoints pre-date
                     # a churn_burst): production falls back to a COLD
@@ -208,17 +212,21 @@ class ChaosRunner:
         """Disturbed vs undisturbed twin: the recovery-cost row."""
         from repro.api.session import SolverSession
 
-        ref = SolverSession(self.problem, method=self.method,
-                            options=self.options).solve(until=until)
+        ref_session = SolverSession(self.problem, method=self.method,
+                                    options=self.options)
+        ref = ref_session.solve(until=until)
         session, disturbed_ops, wasted = self.run(until=until)
         rep = session.solve(until=until)  # already converged: no-op read
+        undisturbed = ref_session.lifetime_ops  # == ref.n_ops: one phase
         return {
-            "undisturbed_ops": int(ref.n_ops),
+            "undisturbed_ops": int(undisturbed),
             "disturbed_ops": int(disturbed_ops),
-            "overhead_ops": int(disturbed_ops - ref.n_ops),
+            "overhead_ops": int(disturbed_ops - undisturbed),
             "overhead_frac": float(
-                (disturbed_ops - ref.n_ops) / max(ref.n_ops, 1)),
+                (disturbed_ops - undisturbed) / max(undisturbed, 1)),
             "wasted_ops": int(wasted),
+            "recovered_ops": int(disturbed_ops - wasted),
+            "final_attempt_ops": int(session.lifetime_ops),
             "kills": len(self.kills),
             "x_err_l1": float(np.abs(rep.x - ref.x).sum()),
             "converged": bool(rep.converged and ref.converged),

@@ -7,7 +7,8 @@ stable-id tiles); :class:`GraphDelta` describes edge churn and
 :meth:`GraphStore.apply_delta` patches every materialized view
 incrementally (dirty tiles / buckets / rows only).  See DESIGN.md §7.
 """
-from .delta import GraphDelta, pagerank_edge_churn, rotation_churn
+from .delta import (GraphDelta, invert_delta, pagerank_edge_churn,
+                    rotation_churn)
 from .store import GraphStore
 from .views import BsrTiles, EngineLayout
 
@@ -16,6 +17,7 @@ __all__ = [
     "EngineLayout",
     "GraphDelta",
     "GraphStore",
+    "invert_delta",
     "pagerank_edge_churn",
     "rotation_churn",
 ]

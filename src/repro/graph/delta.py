@@ -29,8 +29,8 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-__all__ = ["GraphDelta", "edge_keys", "pagerank_edge_churn",
-           "rotation_churn"]
+__all__ = ["GraphDelta", "edge_keys", "invert_delta",
+           "pagerank_edge_churn", "rotation_churn"]
 
 
 def edge_keys(src: np.ndarray, dst: np.ndarray) -> np.ndarray:
@@ -159,6 +159,44 @@ class GraphDelta:
         """
         src, _ = self.touched_edges()
         return np.bincount(src, minlength=n).astype(np.int64)
+
+
+def invert_delta(store, delta: GraphDelta) -> GraphDelta:
+    """The delta that undoes ``delta``, captured BEFORE it is applied.
+
+    Must be called against the store state the delta would mutate: the
+    inverse re-adds ``removed`` edges and restores ``reweighted`` edges
+    at their *current* weights, which only exist pre-apply.  This is the
+    rollback token :meth:`repro.api.SolverSession.update_graph` captures
+    so a failure after :meth:`GraphStore.apply_delta` (view patch,
+    driver rebuild, re-seed) can restore the store instead of leaving
+    the session serving over half-mutated views.
+    """
+    csr = store.csr()
+    src_e, dst_e, w_e = csr.edge_list()
+    sorted_keys = edge_keys(src_e, dst_e)
+
+    def old_weights(pairs: np.ndarray, group: str) -> np.ndarray:
+        if pairs.shape[0] == 0:
+            return np.zeros(0, np.float64)
+        keys = GraphDelta._keys(pairs)
+        pos = np.searchsorted(sorted_keys, keys)
+        ok = (pos < sorted_keys.size) & (sorted_keys[
+            np.minimum(pos, sorted_keys.size - 1)] == keys)
+        if not ok.all():
+            bad = pairs[~ok][0]
+            raise ValueError(
+                f"cannot invert: {group} edge ({bad[0]}, {bad[1]}) "
+                f"does not exist in the store")
+        return w_e[pos].astype(np.float64)
+
+    return GraphDelta(
+        added=delta.removed,
+        added_w=old_weights(delta.removed, "removed"),
+        removed=delta.added,
+        reweighted=delta.reweighted,
+        reweighted_w=old_weights(delta.reweighted, "reweighted"),
+    )
 
 
 def pagerank_edge_churn(

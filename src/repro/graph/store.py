@@ -204,25 +204,40 @@ class GraphStore:
                             f"{type(delta).__name__}")
         if delta.is_empty:
             return self
+        old_csr = (self._indptr, self._indices, self._weights, self._csr)
         self._indptr, self._indices, self._weights = _views.splice_csr(
             self._indptr, self._indices, self._weights, self.n, delta)
         self._csr = None  # old CSRGraph wrappers keep the old arrays
-        # bucketed views first: engine layouts read them while patching
-        for kind in ("bucket", "bsr", "engine"):
-            for key, (view, order) in list(self._views.items()):
-                if key[0] != kind:
-                    continue
-                if kind == "bucket":
-                    patched = _views.patch_bucketed(
-                        view, self._indptr, self._indices, self._weights,
-                        self.n_edges, delta)
-                elif kind == "bsr":
-                    patched = _views.patch_bsr(
-                        view, self._indptr, self._indices, self._weights,
-                        self.n, delta)
-                else:
-                    patched = _views.patch_engine_layout(view, self, delta,
-                                                         order=order)
-                self._views[key] = (patched, order)
+        try:
+            # bucketed views first: engine layouts read them while patching
+            for kind in ("bucket", "bsr", "engine"):
+                for key, (view, order) in list(self._views.items()):
+                    if key[0] != kind:
+                        continue
+                    if kind == "bucket":
+                        patched = _views.patch_bucketed(
+                            view, self._indptr, self._indices,
+                            self._weights, self.n_edges, delta)
+                    elif kind == "bsr":
+                        patched = _views.patch_bsr(
+                            view, self._indptr, self._indices,
+                            self._weights, self.n, delta)
+                    else:
+                        patched = _views.patch_engine_layout(
+                            view, self, delta, order=order)
+                    self._views[key] = (patched, order)
+        except Exception:
+            # transactional contract: a failed view patch must not leave
+            # the store half-mutated at an unbumped version (a session's
+            # staleness guard would pass over corrupt views).  The CSR
+            # rolls back to the pre-splice arrays; the view cache is
+            # dropped wholesale because in-place patching may have
+            # partially mutated a view object — holders of captured view
+            # references must rebuild from the store (update_graph's
+            # rollback path rebuilds its driver, which does exactly that).
+            (self._indptr, self._indices,
+             self._weights, self._csr) = old_csr
+            self._views.clear()
+            raise
         self.version += 1
         return self

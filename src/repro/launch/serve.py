@@ -22,6 +22,14 @@ Two modes:
   ``F' = F + (P'−P)·H``, so the evolving graph re-solves warm instead
   of cold.
 
+  Every request passes **admission control** (DESIGN.md §10): poison
+  personalization vectors (NaN / negative / zero mass — exercised by
+  ``--poison-every``) and stale or malformed graph deltas are rejected
+  into a quarantine WITHOUT killing the session; the stream keeps
+  serving and the quarantine tally prints at exit.  A graph update
+  that fails mid-apply rolls back transactionally (the session keeps
+  serving the pre-delta graph).
+
   The serving process is **elastic and fault tolerant** (DESIGN.md §8):
   ``--ckpt-dir`` cuts an atomic checkpoint of the (H, F) fluid state
   after every request; ``--resume`` restores the newest checkpoint that
@@ -114,6 +122,10 @@ def rank_main(argv):
     ap.add_argument("--churn-every", type=int, default=3,
                     help="serve a graph-update request every this many "
                     "warm requests")
+    ap.add_argument("--poison-every", type=int, default=0,
+                    help="inject a poison (NaN) personalization vector "
+                    "every this many requests to exercise admission "
+                    "control (0 disables)")
     ap.add_argument("--target-error", type=float, default=None)
     ap.add_argument("--k", type=int, default=None,
                     help="engine methods: devices on the pid axis")
@@ -179,7 +191,10 @@ def rank_main(argv):
         print(f"[ckpt ] {session.checkpoint(args.ckpt_dir)}")
 
     from repro.graph import rotation_churn
+    from repro.resilience import (Quarantine, RequestRejected,
+                                  validate_graph_update, validate_rhs)
 
+    quarantine = Quarantine()
     b = problem.b
     for req in range(args.requests):
         if args.rescale_at is not None and req == args.rescale_at:
@@ -194,7 +209,25 @@ def rank_main(argv):
             delta = rotation_churn(session.problem.graph, n_rot,
                                    seed=1000 + req)
             t0 = time.time()
-            resid0 = session.update_graph(delta)
+            try:
+                # admission: a delta built against a stale store
+                # version or naming edges the store doesn't hold never
+                # reaches the session
+                validate_graph_update(
+                    session.problem.graph, delta,
+                    store_version=session.problem.store_version)
+                resid0 = session.update_graph(delta)
+            except RequestRejected as e:
+                quarantine.record(req, e.reason)
+                print(f"[quarantine {req}] update rejected: {e}")
+                continue
+            except Exception as e:
+                # update_graph rolled the store back: the session still
+                # serves the pre-delta graph, the stream keeps flowing
+                quarantine.record(req, "update-failed")
+                print(f"[quarantine {req}] update failed, rolled back: "
+                      f"{e}")
+                continue
             rep = session.solve()
             saved = (f"{1.0 - rep.n_ops / max(baseline_ops, 1):.0%}"
                      if baseline_ops else "n/a")
@@ -208,8 +241,19 @@ def rank_main(argv):
         # user-conditioned ranking update looks like between requests
         b = b * (1.0 + args.drift * rng.standard_normal(g.n))
         b = np.abs(b)
+        b_req = b
+        if args.poison_every and req % args.poison_every == (
+                args.poison_every - 1):
+            b_req = b.copy()
+            b_req[rng.integers(g.n)] = np.nan  # a client sent garbage
         t0 = time.time()
-        resid0 = session.warm_start(b)
+        try:
+            b_ok = validate_rhs(b_req, g.n)
+        except RequestRejected as e:
+            quarantine.record(req, e.reason)
+            print(f"[quarantine {req}] rank request rejected: {e}")
+            continue
+        resid0 = session.warm_start(b_ok)
         rep = session.solve()
         saved = (f"{1.0 - rep.n_ops / max(baseline_ops, 1):.0%}"
                  if baseline_ops else "n/a")
@@ -218,6 +262,9 @@ def rank_main(argv):
               f"{time.time()-t0:.2f}s")
         if args.ckpt_dir:
             session.checkpoint(args.ckpt_dir)
+    if quarantine.total:
+        print(f"[quarantine] {quarantine.total} rejected: "
+              f"{quarantine.to_jsonable()['by_reason']}")
 
     # personalized batch: C independent teleport columns, one vmapped run
     hot = rng.choice(g.n, size=args.batch, replace=False)

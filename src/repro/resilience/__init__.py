@@ -1,0 +1,48 @@
+"""Self-healing serving layer over :class:`repro.SolverSession`.
+
+The session layer (DESIGN.md §4/§8) gives one request-scoped guarantee:
+a solve either converges or raises.  This package turns that into a
+*service*-scoped guarantee — a supervised stream where every non-poison
+request is served, faults are absorbed, and overload degrades quality
+instead of availability (DESIGN.md §10):
+
+* :class:`SupervisedSession` — the supervisor: per-request deadlines
+  and op budgets, restore-newest + exponential-backoff retry on
+  transient faults (:class:`~repro.chaos.ChaosKill`, device loss, torn
+  restores), and a :class:`CircuitBreaker` that escalates repeated
+  failures to checkpoint-restore-then-rescale.
+* :class:`DegradationLadder` / :class:`Rung` — graceful degradation
+  driven by a ``latency`` :class:`~repro.balance.LoadSignal` through
+  :class:`~repro.balance.PressurePolicy`: overload sheds to cheaper
+  serving targets (defer graph updates, looser frontier occupancy τ,
+  looser target scale, round caps) and recovers stepwise.
+* :mod:`~repro.resilience.admission` — per-request admission control:
+  NaN / invariant-violating personalization vectors and stale
+  ``store_version`` graph updates are rejected (and quarantined) per
+  request without killing the session.
+* :class:`EventLog` — seq-numbered, JSON-able record of everything the
+  supervisor did (serves, retries, restores, rung moves, rejects), the
+  substrate for the soak harness's assertions.
+"""
+from .admission import (Quarantine, RequestRejected, validate_graph_update,
+                        validate_rhs)
+from .degrade import DEFAULT_RUNGS, DegradationLadder, Rung
+from .events import Event, EventLog
+from .retry import CircuitBreaker, RetryPolicy
+from .supervisor import RequestOutcome, SupervisedSession
+
+__all__ = [
+    "CircuitBreaker",
+    "DEFAULT_RUNGS",
+    "DegradationLadder",
+    "Event",
+    "EventLog",
+    "Quarantine",
+    "RequestOutcome",
+    "RequestRejected",
+    "RetryPolicy",
+    "Rung",
+    "SupervisedSession",
+    "validate_graph_update",
+    "validate_rhs",
+]

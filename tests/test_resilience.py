@@ -1,0 +1,644 @@
+"""Self-healing serving: supervisor, retry/breaker, degradation ladder,
+admission control, adversarial checkpoint dirs, and the streaming soak
+acceptance (subprocess, 8 fake host devices).
+
+Exactness contract under test (DESIGN.md §10): recovery and degradation
+REPLAY the schedule an undisturbed twin would have run, so served
+solutions agree with the twin exactly (|Δx|₁ = 0), not merely within
+tolerance — determinism is the mechanism, checkpoints every request
+boundary make it hold through kills.
+"""
+import json
+import os
+import stat
+import subprocess
+import sys
+import tempfile
+import textwrap
+
+import numpy as np
+import pytest
+
+import repro
+from repro.balance import LoadSignal, PressurePolicy
+from repro.chaos import ChaosPlan, SessionInjector
+from repro.core import webgraph_like
+from repro.graph import GraphDelta, GraphStore, rotation_churn
+from repro.resilience import (DEFAULT_RUNGS, CircuitBreaker,
+                              DegradationLadder, EventLog, Quarantine,
+                              RequestRejected, RetryPolicy, Rung,
+                              SupervisedSession, validate_graph_update,
+                              validate_rhs)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _problem(n=192, seed=1, **kw):
+    return repro.Problem.pagerank(
+        GraphStore.from_csr(webgraph_like(n, seed=seed)), **kw)
+
+
+def _delta(added=None, added_w=None, removed=None,
+           reweighted=None, reweighted_w=None):
+    z2 = np.zeros((0, 2), dtype=np.int64)
+    z1 = np.zeros(0, dtype=np.float64)
+    return GraphDelta(
+        added=z2 if added is None else np.asarray(added, np.int64),
+        added_w=z1 if added_w is None else np.asarray(added_w, float),
+        removed=z2 if removed is None else np.asarray(removed, np.int64),
+        reweighted=(z2 if reweighted is None
+                    else np.asarray(reweighted, np.int64)),
+        reweighted_w=(z1 if reweighted_w is None
+                      else np.asarray(reweighted_w, float)))
+
+
+# --------------------------------------------------------------------------- #
+# retry / breaker
+# --------------------------------------------------------------------------- #
+def test_retry_policy_deterministic_backoff():
+    rp = RetryPolicy(base_delay_s=0.1, multiplier=2.0, max_delay_s=0.5,
+                     jitter=0.5, seed=3)
+    # same attempt -> same jittered delay; growth honors base * mult^a
+    assert rp.delay_s(1) == rp.delay_s(1)
+    for a in (1, 2, 3, 4, 8):
+        nominal = min(0.1 * 2.0 ** (a - 1), 0.5)
+        assert 0.5 * nominal <= rp.delay_s(a) <= 1.5 * nominal
+    # distinct attempts draw distinct jitter
+    assert rp.delay_s(1) != rp.delay_s(2)
+    with pytest.raises(ValueError):
+        RetryPolicy(max_attempts=0)
+    with pytest.raises(ValueError):
+        RetryPolicy(jitter=1.0)
+
+
+def test_circuit_breaker_trips_and_resets():
+    br = CircuitBreaker(trip_after=3)
+    assert not br.record_failure() and not br.record_failure()
+    assert br.record_failure() and br.tripped
+    br.reset()
+    assert not br.tripped and br.trips == 1
+    br.record_failure()
+    br.record_success()  # success clears the consecutive streak
+    assert br.consecutive_failures == 0
+
+
+# --------------------------------------------------------------------------- #
+# pressure signal + policy + ladder
+# --------------------------------------------------------------------------- #
+def test_load_signal_from_latency():
+    sig = LoadSignal.from_latency(0.5, 1.0, queue_depth=4, queue_cap=8)
+    assert sig.kind == "latency"
+    assert float(sig.values[0]) == pytest.approx(0.5 + 0.5)
+    with pytest.raises(ValueError):
+        LoadSignal.from_latency(1.0, 0.0)
+
+
+def test_pressure_policy_hysteresis():
+    pol = PressurePolicy(eta=1.0, z=2, hi=1.0, lo=0.5, patience=2)
+    hi = LoadSignal.from_latency(2.0, 1.0)
+    lo = LoadSignal.from_latency(0.1, 1.0)
+    # patience gates the first +1; cooldown suppresses the next
+    assert [pol.update(hi) for _ in range(3)] == [0, 1, 0]
+    downs = [pol.update(lo) for _ in range(8)]
+    assert -1 in downs and 1 not in downs
+    with pytest.raises(ValueError):
+        PressurePolicy(hi=0.5, lo=0.5)
+
+
+def test_degradation_ladder_walks_and_saturates():
+    lad = DegradationLadder(
+        policy=PressurePolicy(eta=1.0, z=0, hi=1.0, lo=0.5, patience=1))
+    hi = LoadSignal.from_latency(5.0, 1.0)
+    lo = LoadSignal.from_latency(0.01, 1.0)
+    top = len(lad.rungs) - 1
+    for _ in range(top + 3):  # saturates at the last rung
+        lad.observe(hi)
+    assert lad.index == top and lad.engaged
+    assert lad.until(1e-3) == 1e-3 * lad.rung.target_scale
+    for _ in range(top + 3):
+        lad.observe(lo)
+    assert lad.index == 0 and not lad.engaged
+    assert lad.rung.name == "nominal"
+
+
+def test_rung_validation_and_defaults():
+    with pytest.raises(ValueError):
+        Rung("bad", target_scale=0.5)
+    with pytest.raises(ValueError):
+        Rung("bad", occupancy_threshold=1.0)
+    names = [r.name for r in DEFAULT_RUNGS]
+    assert names[0] == "nominal" and len(names) >= 4
+    # monotone: later rungs never tighten the target
+    scales = [r.target_scale for r in DEFAULT_RUNGS]
+    assert scales == sorted(scales)
+
+
+# --------------------------------------------------------------------------- #
+# admission
+# --------------------------------------------------------------------------- #
+def test_validate_rhs_rejects_poison():
+    n = 8
+    good = validate_rhs(np.ones(n), n)
+    assert good.dtype == np.float64 and good.shape == (n,)
+    for bad, reason in [
+        (np.ones(n - 1), "bad-shape"),
+        (np.concatenate([[np.nan], np.ones(n - 1)]), "non-finite"),
+        (np.concatenate([[-1.0], np.ones(n - 1)]), "negative-mass"),
+        (np.zeros(n), "zero-mass"),
+    ]:
+        with pytest.raises(RequestRejected) as ei:
+            validate_rhs(bad, n)
+        assert ei.value.reason == reason
+
+
+def test_validate_graph_update_membership_and_versions():
+    prob = _problem(64)
+    store = prob.graph
+    ok = rotation_churn(store, 2, seed=3)
+    validate_graph_update(store, ok, store_version=store.version)
+    with pytest.raises(RequestRejected) as ei:
+        validate_graph_update(store, ok, store_version=store.version + 5)
+    assert ei.value.reason == "stale-store-version"
+    # queued deltas shift the logical version the client sees
+    validate_graph_update(store, ok, store_version=store.version + 3,
+                          queued=3, check_membership=False)
+    with pytest.raises(RequestRejected) as ei:
+        validate_graph_update(store, "nope")
+    assert ei.value.reason == "malformed-delta"
+    src, dst, _ = store.csr().edge_list()
+    exists = np.array([[src[0], dst[0]]])
+    with pytest.raises(RequestRejected) as ei:
+        validate_graph_update(store, _delta(
+            added=exists, added_w=[0.1]))
+    assert ei.value.reason == "duplicate-edge"
+    missing = np.array([[int(src[0]), int(dst[0])]])
+    # find a (src, dst) pair not in the store
+    while True:
+        cand = (int(missing[0, 0]), (int(missing[0, 1]) + 1) % store.n)
+        keys = set(zip(src.tolist(), dst.tolist()))
+        if cand not in keys:
+            missing = np.array([cand])
+            break
+        missing[0, 1] += 1
+    with pytest.raises(RequestRejected) as ei:
+        validate_graph_update(store, _delta(removed=missing))
+    assert ei.value.reason == "missing-edge"
+    with pytest.raises(RequestRejected) as ei:
+        validate_graph_update(store, _delta(
+            added=[[0, store.n]], added_w=[0.1]))
+    assert ei.value.reason == "bad-endpoint"
+    with pytest.raises(RequestRejected) as ei:
+        validate_graph_update(store, _delta(
+            added=missing, added_w=[np.inf]))
+    assert ei.value.reason == "bad-weight"
+
+
+def test_quarantine_counters():
+    q = Quarantine()
+    q.record("a", "non-finite")
+    q.record("b", "non-finite")
+    q.record("c", "stale-store-version")
+    assert q.total == 3
+    assert q.by_reason["non-finite"] == 2
+    assert q.to_jsonable()["by_reason"]["stale-store-version"] == 1
+
+
+def test_event_log_virtual_clock():
+    t = {"now": 0.0}
+    log = EventLog(clock=lambda: t["now"])
+    log.record("start")
+    t["now"] = 2.5
+    e = log.record("fault", pid=3)
+    assert e.t == 2.5 and e.seq == 1 and e.detail["pid"] == 3
+    assert log.counts() == {"start": 1, "fault": 1}
+    assert [d["kind"] for d in log.to_jsonable()] == ["start", "fault"]
+
+
+# --------------------------------------------------------------------------- #
+# supervised serving (in-process, k=1 engine)
+# --------------------------------------------------------------------------- #
+def _supervised(td, n=192, **kw):
+    kw.setdefault("options", repro.SolverOptions(k=1))
+    kw.setdefault("sleep", lambda s: None)
+    kw.setdefault("retry", RetryPolicy(base_delay_s=1e-4, max_delay_s=1e-3))
+    return SupervisedSession(_problem(n), method="engine:chunk",
+                             ckpt_dir=td, **kw)
+
+
+def test_supervised_kill_retry_is_exact():
+    n = 192
+    rng = np.random.default_rng(0)
+    with tempfile.TemporaryDirectory() as td:
+        sup = _supervised(td, n)
+        ref = repro.SolverSession(_problem(n), method="engine:chunk",
+                                  options=repro.SolverOptions(k=1))
+        b = np.asarray(sup.session.problem.b)
+        for i in range(4):
+            b = np.abs(b * (1 + 0.01 * rng.standard_normal(n)))
+            chaos = (SessionInjector(ChaosPlan().kill(0, round=1))
+                     if i == 2 else None)
+            out = sup.serve_rank(b, request_id=i, chaos=chaos)
+            assert out.ok
+            ref.warm_start(b)
+            ref.solve()
+            assert float(np.abs(out.x - ref.x).sum()) == 0.0
+            if i == 2:
+                assert out.restores >= 1 and out.attempts >= 2
+        counts = sup.log.counts()
+        assert counts.get("fault", 0) >= 1
+        assert counts.get("restore", 0) + counts.get("cold_restart", 0) >= 1
+
+
+def test_supervised_poison_does_not_kill_session():
+    n = 192
+    with tempfile.TemporaryDirectory() as td:
+        sup = _supervised(td, n)
+        b = np.asarray(sup.session.problem.b)
+        bad = b.copy()
+        bad[5] = np.nan
+        out = sup.serve_rank(bad, request_id="p")
+        assert out.rejected and out.reject_reason == "non-finite"
+        out2 = sup.serve_rank(b, request_id="ok")
+        assert out2.ok and out2.converged
+        assert sup.quarantine.by_reason == {"non-finite": 1}
+        assert sup.log.counts().get("request_rejected") == 1
+
+
+def test_supervised_deferral_and_flush_exact():
+    n = 192
+    with tempfile.TemporaryDirectory() as td:
+        sup = _supervised(td, n)
+        ref = repro.SolverSession(_problem(n), method="engine:chunk",
+                                  options=repro.SolverOptions(k=1))
+        sup.ladder.index = 1  # defer-updates rung
+        assert sup.ladder.rung.defer_updates
+        d = rotation_churn(sup.session.problem.graph, 3, seed=7)
+        out = sup.serve_update(
+            d, store_version=sup.session.problem.store_version,
+            request_id="u")
+        assert out.deferred and sup.deferred_updates == 1
+        b = np.abs(np.asarray(sup.session.problem.b) * 1.02)
+        o1 = sup.serve_rank(b, request_id=0)  # served on the STALE graph
+        ref.warm_start(b)
+        ref.solve()
+        assert float(np.abs(o1.x - ref.x).sum()) == 0.0
+        sup.ladder.index = 0
+        assert sup.flush_deferred() == 1 and sup.deferred_updates == 0
+        ref.update_graph(rotation_churn(ref.problem.graph, 3, seed=7))
+        ref.solve()
+        b2 = np.abs(b * 1.02)
+        o2 = sup.serve_rank(b2, request_id=1)
+        ref.warm_start(b2)
+        ref.solve()
+        assert float(np.abs(o2.x - ref.x).sum()) == 0.0
+        assert sup.log.counts().get("update_applied") == 1
+
+
+def test_supervised_stale_version_and_conflict_quarantine():
+    n = 192
+    with tempfile.TemporaryDirectory() as td:
+        sup = _supervised(td, n)
+        d = rotation_churn(sup.session.problem.graph, 2, seed=5)
+        out = sup.serve_update(d, store_version=999, request_id="s")
+        assert out.rejected and out.reject_reason == "stale-store-version"
+        # a delta removing a nonexistent edge is caught by admission when
+        # the queue is empty
+        src, dst, _ = sup.session.problem.graph.csr().edge_list()
+        keys = set(zip(src.tolist(), dst.tolist()))
+        cand = next((s, t) for s in range(n) for t in range(n)
+                    if (s, t) not in keys)
+        ghost = _delta(removed=[cand])
+        out = sup.serve_update(ghost, request_id="g")
+        assert out.rejected and out.reject_reason == "missing-edge"
+        # ... but while DEFERRING, admission skips membership; the
+        # conflict surfaces at apply time and is quarantined, not fatal
+        sup.ladder.index = 1
+        out = sup.serve_update(ghost, request_id="g2")
+        assert out.deferred
+        sup.ladder.index = 0
+        sup.flush_deferred()
+        assert sup.quarantine.by_reason.get("conflict-at-apply") == 1
+        assert sup.log.counts().get("update_conflict") == 1
+        # session still serves
+        out = sup.serve_rank(np.asarray(sup.session.problem.b),
+                             request_id="after")
+        assert out.ok
+
+
+def test_supervised_accounting_parity_without_chaos():
+    """No faults, no degradation: the supervisor's unified §2.3 ops
+    accounting equals a plain session running the same stream."""
+    n = 192
+    rng = np.random.default_rng(1)
+    with tempfile.TemporaryDirectory() as td:
+        sup = _supervised(td, n)
+        ref = repro.SolverSession(_problem(n), method="engine:chunk",
+                                  options=repro.SolverOptions(k=1))
+        b = np.asarray(sup.session.problem.b)
+        for i in range(3):
+            b = np.abs(b * (1 + 0.01 * rng.standard_normal(n)))
+            out = sup.serve_rank(b, request_id=i)
+            assert out.ok
+            ref.warm_start(b)
+            ref.solve()
+        assert sup.total_ops == ref.lifetime_ops
+        assert sup.wasted_ops == 0 and sup.restores == 0
+
+
+def test_supervised_requests_stay_device_resident():
+    """Between requests the engine state never round-trips through the
+    host re-seed path: warm starts go through the device-resident
+    ``warm_seed`` (only b uploads), and with ``want_x=False`` the
+    solution is never gathered either."""
+    n = 192
+    rng = np.random.default_rng(2)
+    with tempfile.TemporaryDirectory() as td:
+        sup = _supervised(td, n)
+        d = sup.session._driver
+        calls = {"seed": 0, "x": 0}
+        orig_seed, orig_x = d.seed, d.x
+        d.seed = lambda *a, **k: (calls.__setitem__(
+            "seed", calls["seed"] + 1), orig_seed(*a, **k))[1]
+        d.x = lambda *a, **k: (calls.__setitem__(
+            "x", calls["x"] + 1), orig_x(*a, **k))[1]
+        b = np.asarray(sup.session.problem.b)
+        for i in range(3):
+            b = np.abs(b * (1 + 0.01 * rng.standard_normal(n)))
+            out = sup.serve_rank(b, request_id=i, want_x=False)
+            assert out.ok and out.x is None
+        assert calls["seed"] == 0, "host re-seed on the warm path"
+        assert calls["x"] == 0, "solution gathered despite want_x=False"
+
+
+def test_supervised_op_budget_serves_degraded():
+    n = 192
+    with tempfile.TemporaryDirectory() as td:
+        sup = _supervised(td, n, op_budget=1)
+        out = sup.serve_rank(np.asarray(sup.session.problem.b),
+                             request_id=0)
+        assert out.ok  # served, not dropped
+        assert out.budget_exhausted and out.degraded
+
+
+# --------------------------------------------------------------------------- #
+# adversarial checkpoint directories (satellite: restore provenance)
+# --------------------------------------------------------------------------- #
+def _session_with_steps(td, n=128, steps=3):
+    ses = repro.SolverSession(_problem(n), method="engine:chunk",
+                              options=repro.SolverOptions(k=1))
+    ses.solve()
+    for _ in range(steps):
+        ses.checkpoint(td)
+    return ses
+
+
+def test_restore_empty_dir_raises_cleanly():
+    with tempfile.TemporaryDirectory() as td:
+        with pytest.raises(FileNotFoundError):
+            repro.SolverSession.restore(td, _problem(128))
+
+
+def test_restore_skips_torn_and_missing_leaf_steps():
+    n = 128
+    with tempfile.TemporaryDirectory() as td:
+        ses = _session_with_steps(td, n)
+        steps = sorted(os.listdir(td))
+        assert len(steps) == 3
+        # newest: torn manifest (crash mid-write)
+        with open(os.path.join(td, steps[-1], "manifest.json"), "w") as f:
+            f.write('{"step": 3, "leav')
+        # middle: manifest intact but a leaf file is gone
+        victim = os.path.join(td, steps[-2])
+        os.remove(os.path.join(victim, "arr_00001.npy"))
+        restored = repro.SolverSession.restore(td, _problem(n))
+        info = restored.restored_from
+        assert info["step"] == 1  # oldest survives
+        reasons = dict(info["rejected"])
+        assert len(info["rejected"]) == 2
+        assert "incomplete or unreadable manifest" in reasons[3]
+        assert "unreadable" in reasons[2]
+        # the restored state is the real step-1 state: it solves on
+        assert float(np.abs(restored.x - ses.x).sum()) <= 1e-6
+
+
+@pytest.mark.skipif(os.geteuid() == 0,
+                    reason="permission bits are advisory for root")
+def test_restore_permission_denied_step_is_rejected():
+    n = 128
+    with tempfile.TemporaryDirectory() as td:
+        _session_with_steps(td, n)
+        steps = sorted(os.listdir(td))
+        locked = os.path.join(td, steps[-1])
+        os.chmod(locked, 0)
+        try:
+            restored = repro.SolverSession.restore(td, _problem(n))
+            assert restored.restored_from["step"] == 2
+            assert any("unreadable" in r or "incomplete" in r
+                       for _, r in restored.restored_from["rejected"])
+        finally:
+            os.chmod(locked, stat.S_IRWXU)
+
+
+def test_restore_all_steps_invalid_raises_with_provenance():
+    n = 128
+    with tempfile.TemporaryDirectory() as td:
+        _session_with_steps(td, n, steps=2)
+        for name in sorted(os.listdir(td)):
+            os.remove(os.path.join(td, name, "arr_00000.npy"))
+        with pytest.raises(ValueError, match="step 2: unreadable"):
+            repro.SolverSession.restore(td, _problem(n))
+
+
+def test_supervisor_cold_restarts_when_checkpoints_rot():
+    """Every checkpoint rots away mid-stream: recovery degrades to a
+    cold restart (logged), the request still completes and converges."""
+    n = 192
+    with tempfile.TemporaryDirectory() as td:
+        sup = _supervised(td, n)
+        b = np.asarray(sup.session.problem.b)
+        assert sup.serve_rank(b, request_id=0).ok
+        for name in sorted(os.listdir(td)):  # rot: every leaf vanishes
+            step = os.path.join(td, name)
+            for leaf in os.listdir(step):
+                if leaf.endswith(".npy"):
+                    os.remove(os.path.join(step, leaf))
+        chaos = SessionInjector(ChaosPlan().kill(0, round=1))
+        out = sup.serve_rank(np.abs(b * 1.01), request_id=1, chaos=chaos)
+        assert out.ok and out.converged
+        assert sup.log.counts().get("cold_restart", 0) >= 1
+
+
+# --------------------------------------------------------------------------- #
+# serve.py rank loop: failed update rolls back, stream continues
+# --------------------------------------------------------------------------- #
+def test_session_update_graph_failure_rolls_back():
+    """Regression: a rejected delta leaves the session serving the
+    pre-delta graph — the next request must succeed and match a session
+    that never saw the bad delta."""
+    n = 192
+    ses = repro.SolverSession(_problem(n), method="engine:chunk",
+                              options=repro.SolverOptions(k=1))
+    ses.solve()
+    v0 = ses.problem.store_version
+    src, dst, _ = ses.problem.graph.csr().edge_list()
+    keys = set(zip(src.tolist(), dst.tolist()))
+    cand = next((s, t) for s in range(n) for t in range(n)
+                if (s, t) not in keys)
+    with pytest.raises(ValueError):
+        ses.update_graph(_delta(removed=[cand]))
+    assert ses.problem.store_version == v0
+    ref = repro.SolverSession(_problem(n), method="engine:chunk",
+                              options=repro.SolverOptions(k=1))
+    ref.solve()
+    b = np.abs(np.asarray(ses.problem.b) * 1.03)
+    ses.warm_start(b)
+    ses.solve()
+    ref.warm_start(b)
+    ref.solve()
+    assert float(np.abs(ses.x - ref.x).sum()) == 0.0
+
+
+SERVE_SCRIPT_TIMEOUT = 600
+
+
+def test_serve_cli_quarantines_poison_and_continues():
+    """`launch/serve.py` admission: poisoned rank requests quarantine
+    per-request; the stream keeps serving and exits cleanly."""
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "rank",
+         "--n", "400", "--requests", "6", "--batch", "2",
+         "--poison-every", "3", "--churn", "0.002", "--churn-every", "2"],
+        capture_output=True, text=True, timeout=SERVE_SCRIPT_TIMEOUT,
+        env={**os.environ, "PYTHONPATH": os.path.abspath(SRC)},
+        cwd=ROOT,
+    )
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "[quarantine" in r.stdout
+    assert "rank request rejected" in r.stdout
+
+
+# --------------------------------------------------------------------------- #
+# ACCEPTANCE: streaming soak (subprocess, 8 fake host devices)
+# --------------------------------------------------------------------------- #
+SOAK_SCRIPT = textwrap.dedent(
+    """
+    import os, sys, tempfile
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    sys.path.insert(0, {src!r})
+    sys.path.insert(0, {root!r})
+    import numpy as np
+    from benchmarks.stream_bench import (StreamSpec, replay_reference,
+                                         run_stream, stream_row)
+
+    spec = StreamSpec(
+        n=4096, k=8, requests=500, churn_every=10, poison_every=37,
+        stale_update_at=209, kill_at=(48, 260),
+        rescale_at={{150: 6, 330: 8}}, straggler=(380, 430, 6.0),
+        queue_burst=6, sample_every=10, seed=0)
+    with tempfile.TemporaryDirectory() as ckpt:
+        run = run_stream(spec, ckpt)
+    ref = replay_reference(spec, run)
+    row = stream_row("soak", spec, run, ref)
+
+    # zero dropped non-poison requests; every sampled point EXACT
+    assert row["requests"] == 500 and row["dropped"] == 0, row
+    assert row["served"] >= 400, row
+    assert row["checked_points"] >= 40, row
+    assert row["max_dx_l1"] <= 1e-6, row["max_dx_l1"]
+    assert row["converged"], row
+
+    # chaos actually happened: >= 2 kills, >= 2 rescales, churn applied
+    counts = run["sup"].log.counts()
+    assert counts.get("fault", 0) >= 2, counts
+    assert counts.get("restore", 0) >= 2, counts
+    assert counts.get("rescale", 0) >= 2, counts
+    assert counts.get("update_applied", 0) >= 30, counts
+    assert counts.get("straggler", 0) >= 2, counts
+
+    # poison + the stale update quarantined, stream unharmed
+    q = run["sup"].quarantine.by_reason
+    assert q.get("non-finite", 0) >= 10, q
+    assert q.get("stale-store-version", 0) == 1, q
+
+    # the ladder observably engaged AND fully recovered (from the log)
+    assert counts.get("degrade", 0) >= 1, counts
+    assert counts.get("recover", 0) >= counts.get("degrade", 0), counts
+    assert run["sup"].ladder.index == 0
+    assert run["sup"].deferred_updates == 0
+
+    # recovery-time accounting: killed requests carry backoff latency
+    assert row["recovery_p95_s"] > 0, row
+    assert row["wasted_ops"] > 0, row
+    print("SOAK_OK", row["served"], row["max_dx_l1"], row["total_ops"])
+    """
+)
+
+
+def test_stream_soak_acceptance_subprocess():
+    """ISSUE acceptance: 500-request evolving-web stream under seeded
+    chaos (2 kills, 2 rescales, churn, straggler window, poison) — zero
+    dropped non-poison requests, every sampled solution exact vs the
+    undisturbed effective-schedule replay, ladder engages and fully
+    recovers."""
+    r = subprocess.run(
+        [sys.executable, "-c",
+         SOAK_SCRIPT.format(src=os.path.abspath(SRC),
+                            root=os.path.abspath(ROOT))],
+        capture_output=True, text=True, timeout=900,
+    )
+    assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-4000:])
+    assert "SOAK_OK" in r.stdout
+
+
+BREAKER_SCRIPT = textwrap.dedent(
+    """
+    import os, sys, tempfile
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    sys.path.insert(0, {src!r})
+    import numpy as np
+    import repro
+    from repro.chaos import ChaosPlan, SessionInjector
+    from repro.core import webgraph_like
+    from repro.graph import GraphStore
+    from repro.resilience import (CircuitBreaker, RetryPolicy,
+                                  SupervisedSession)
+
+    n = 1024
+    prob = repro.Problem.pagerank(GraphStore.from_csr(
+        webgraph_like(n, seed=1)))
+    with tempfile.TemporaryDirectory() as td:
+        sup = SupervisedSession(
+            prob, method="engine:chunk",
+            options=repro.SolverOptions(k=4), ckpt_dir=td,
+            retry=RetryPolicy(max_attempts=5, base_delay_s=1e-4,
+                              max_delay_s=1e-3),
+            breaker=CircuitBreaker(trip_after=3), sleep=lambda s: None)
+        # three kills in one request: the breaker trips on the third
+        # and escalates -> restore + rescale to the surviving width
+        plan = (ChaosPlan(seed=0).kill(3, round=1).kill(3, round=2)
+                .kill(3, round=3))
+        out = sup.serve_rank(np.asarray(prob.b), request_id=0,
+                             chaos=SessionInjector(plan))
+        assert out.ok and out.converged, out
+        assert out.attempts >= 4, out
+        counts = sup.log.counts()
+        assert counts.get("breaker_trip", 0) >= 1, counts
+        rescales = [e for e in sup.log.of_kind("rescale")
+                    if not e.detail["planned"]]
+        assert rescales and rescales[0].detail["k_new"] == 3, counts
+        assert sup.session._driver.cfg.k == 3
+        assert sup.breaker.trips == 1
+    print("BREAKER_OK")
+    """
+)
+
+
+def test_breaker_trip_escalates_to_rescale_subprocess():
+    r = subprocess.run(
+        [sys.executable, "-c",
+         BREAKER_SCRIPT.format(src=os.path.abspath(SRC))],
+        capture_output=True, text=True, timeout=600,
+    )
+    assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-4000:])
+    assert "BREAKER_OK" in r.stdout
