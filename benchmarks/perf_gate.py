@@ -84,6 +84,27 @@ def extract_metrics(payload: Dict) -> Dict[str, Dict]:
         # compare): an exactness or request-drop regression fails hard
         put(f"stream/max_dx_l1/{rid}", "counter", r["max_dx_l1"])
         put(f"stream/dropped/{rid}", "counter", r["dropped"])
+    for r in rows("serve"):
+        rid = f"{r['scenario']}.n{r['n']}.lanes{r['max_lanes']}"
+        put(f"serve/total_ops/{rid}", "counter", r["total_ops"])
+        # dropped is a zero baseline: enforced as exactly-zero
+        put(f"serve/dropped/{rid}", "counter", r["dropped"])
+        if r["scenario"] == "serving":
+            # gate QPS inverted (us/request) so a throughput regression
+            # fails upward through the wall band
+            if r["qps"] > 0:
+                put(f"serve/us_per_request/{rid}", "wall",
+                    1e6 / r["qps"])
+            # virtual-clock latencies + miss rate are deterministic
+            put(f"serve/p50_latency_s/{rid}", "counter",
+                r["p50_latency_s"])
+            put(f"serve/p99_latency_s/{rid}", "counter",
+                r["p99_latency_s"])
+            put(f"serve/pool_miss_rate/{rid}", "counter",
+                r["pool_miss_rate"])
+        if r["scenario"].startswith("bucket:"):
+            put(f"serve/padding_waste/{rid}", "counter",
+                r["padding_waste"])
     return metrics
 
 

@@ -60,6 +60,16 @@ STREAM_ROW_KEYS = {
     "restores", "rescales", "converged",
 }
 
+SERVE_ROW_KEYS = {
+    "scenario", "n", "requests", "max_lanes", "clusters", "served",
+    "dropped", "rejected", "qps", "seq_qps", "seq_sample",
+    "speedup_vs_sequential", "p50_latency_s", "p99_latency_s",
+    "pool_hit_rate", "pool_miss_rate", "mean_occupancy",
+    "padding_waste", "bucket", "bit_parity", "max_dx_l1_seq",
+    "max_dx_l1_ref", "dx_bound", "total_ops", "degrades",
+    "applied_updates", "degraded_frac", "converged",
+}
+
 # one registry drives per-suite validation AND the BENCH.json merge
 BENCH_SECTIONS = {
     "kernels": ("BENCH_kernels.json", KERNEL_ROW_KEYS),
@@ -68,6 +78,7 @@ BENCH_SECTIONS = {
     "graph": ("BENCH_graph.json", GRAPH_ROW_KEYS),
     "chaos": ("BENCH_chaos.json", CHAOS_ROW_KEYS),
     "stream": ("BENCH_stream.json", STREAM_ROW_KEYS),
+    "serve": ("BENCH_serve.json", SERVE_ROW_KEYS),
 }
 
 
@@ -177,7 +188,27 @@ def smoke() -> int:
     assert s["dropped"] == 0, "supervised stream dropped a request"
     assert s["max_dx_l1"] <= 1e-6, (
         "served solutions diverged from the effective-schedule replay")
+    print("[smoke] continuous-batching serve bench (tiny)")
+    from benchmarks import serve_bench
+
+    vp = serve_bench.main(smoke=True, out_path="BENCH_serve.smoke.json")
+    _validate_bench(vp, SERVE_ROW_KEYS, "serve bench (smoke)")
+    head = [r for r in vp["rows"] if r["scenario"] == "serving"]
+    over = [r for r in vp["rows"] if r["scenario"] == "overload"]
+    assert head and over, "serve smoke missing a scenario"
+    assert all(r["dropped"] == 0 for r in vp["rows"]), (
+        "continuous batching dropped a request")
+    assert head[0]["served"] == head[0]["requests"], head[0]
+    assert head[0]["speedup_vs_sequential"] > 1.0, (
+        "continuous batching did not beat the sequential path")
+    assert head[0]["max_dx_l1_seq"] <= head[0]["dx_bound"], (
+        "batched solutions diverged from the sequential twin")
+    assert all(r["bit_parity"] for r in vp["rows"]), (
+        "pow2 lane padding changed the solution bits")
+    assert over[0]["degrades"] >= 1, (
+        "overload cell never engaged the pressure ladder")
     for tmp in ("BENCH_kernels.smoke.json", "BENCH_engine.smoke.json",
+                "BENCH_serve.smoke.json",
                 "BENCH_api.smoke.json", "BENCH_graph.smoke.json",
                 "BENCH_chaos.smoke.json", "BENCH_stream.smoke.json"):
         if os.path.exists(tmp):

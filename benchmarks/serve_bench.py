@@ -1,0 +1,325 @@
+"""Serving-tier bench: continuous batching vs the sequential path.
+
+Drives the :class:`repro.serving.Scheduler` (queue -> lanes -> pool)
+over a clustered, drifting personalization stream and measures the
+numbers DESIGN.md §11 commits to:
+
+* ``serving`` (headline) — N=4096, 64 concurrent personalization RHS
+  across 8 drift clusters through 16 lanes; wall-clock QPS against a
+  sampled sequential twin (:func:`repro.serving.solo_reference`, the
+  pre-batching ``serve.py rank`` path), per-request |Δx|₁ parity
+  against both the twin and a tighter-tolerance one-shot
+  ``solve_batch`` reference, pool-hit rate, lane occupancy, virtual
+  p50/p99 latency;
+* ``overload`` — open-loop arrivals beyond capacity plus mid-stream
+  churn: the pressure ladder must shed *quality* (loosened targets,
+  round caps, deferred updates) while ``dropped`` stays exactly zero;
+* ``bucket:cC`` — the pow2 lane-padding discipline: padded vs unpadded
+  ``solve_batch`` must agree **bitwise** (zero-fill lanes are inert),
+  with the padding waste it buys reported.
+
+The headline cell runs under ``jax_enable_x64`` (full mode only, set
+before any kernel traces) so the |Δx|₁ ≤ 1e-6 acceptance bound at
+N=4096 is not eaten by f32 accumulation noise; smoke keeps the
+default dtype and scales the bound to the served target instead
+(two converged solves differ by ≤ 2x the target error).
+
+  PYTHONPATH=src python -m benchmarks.serve_bench            # full
+  PYTHONPATH=src python -m benchmarks.serve_bench --smoke    # tiny CI
+
+Emits ``BENCH_serve.json`` (schema-guarded by ``python -m
+benchmarks.run --smoke``, counters folded into the perf gate).
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+def build_problem(n: int, seed: int = 1, target_error=None):
+    import repro
+    from repro.core import webgraph_like
+    from repro.graph import GraphStore
+
+    store = GraphStore.from_csr(webgraph_like(n, seed=seed))
+    return repro.Problem.pagerank(store, target_error=target_error)
+
+
+def make_requests(problem, requests: int, clusters: int,
+                  drift: float = 0.02, seed: int = 0
+                  ) -> List[Tuple[int, int, np.ndarray]]:
+    """A clustered personalization stream: each cluster is a drifting
+    chain around its own anchor RHS (the pool's reuse unit), requests
+    round-robin the clusters.  Returns ``[(request_id, cluster, b)]``."""
+    rng = np.random.default_rng(seed)
+    base = np.asarray(problem.b, dtype=np.float64)
+    anchors = [np.abs(base * (1.0 + 0.3 * rng.standard_normal(problem.n)))
+               for _ in range(clusters)]
+    out = []
+    for i in range(requests):
+        c = i % clusters
+        b = np.abs(anchors[c] * (1.0 + drift
+                                 * rng.standard_normal(problem.n)))
+        anchors[c] = b
+        out.append((i, c, b))
+    return out
+
+
+def _blank_row(scenario: str, n: int) -> Dict:
+    """Every cell shares one schema; fields a cell does not measure
+    stay at their null-ish defaults."""
+    return {
+        "scenario": scenario, "n": n, "requests": 0, "max_lanes": 0,
+        "clusters": 0, "served": 0, "dropped": 0, "rejected": 0,
+        "qps": 0.0, "seq_qps": 0.0, "seq_sample": 0,
+        "speedup_vs_sequential": 0.0, "p50_latency_s": 0.0,
+        "p99_latency_s": 0.0, "pool_hit_rate": 0.0,
+        "pool_miss_rate": 0.0, "mean_occupancy": 0.0,
+        "padding_waste": 0.0, "bucket": 0, "bit_parity": True,
+        "max_dx_l1_seq": 0.0, "max_dx_l1_ref": 0.0, "dx_bound": 0.0,
+        "total_ops": 0, "degrades": 0, "applied_updates": 0,
+        "degraded_frac": 0.0, "converged": True,
+    }
+
+
+def serving_cell(n: int, requests: int, clusters: int, max_lanes: int,
+                 seq_sample: int, target_error=None,
+                 rounds_per_tick: int = 64, drift: float = 0.02,
+                 seed: int = 0) -> Dict:
+    """Headline: dense burst of concurrent RHS through the scheduler,
+    sequential twin sampled for wall-clock QPS + direct parity, a
+    tighter one-shot ``solve_batch`` checking parity for EVERY request."""
+    from repro.api.session import SolverSession
+    from repro.serving import Scheduler, solo_reference
+
+    problem = build_problem(n, target_error=target_error)
+    te = problem.target_error
+    reqs = make_requests(problem, requests, clusters, drift=drift,
+                         seed=seed)
+
+    # headline measures throughput at NOMINAL quality: the deadline is
+    # parked far away so the dense burst cannot trip the ladder (the
+    # overload cell exercises that on purpose)
+    sch = Scheduler(problem, max_lanes=max_lanes,
+                    rounds_per_tick=rounds_per_tick,
+                    pool_capacity=2 * clusters, queue_cap=requests,
+                    deadline_s=1e9)
+    t0 = time.perf_counter()
+    for i, c, b in reqs:
+        sch.submit(b, cluster=c, request_id=i, arrival_t=0.0)
+    sch.run_until_idle()
+    wall = time.perf_counter() - t0
+    by_id = {r.request_id: r for r in sch.results}
+    assert len(by_id) == requests, "a request went unserved"
+
+    # sequential twin (the pre-batching serve.py path), sampled
+    stride = max(1, requests // seq_sample)
+    sample_ids = list(range(0, requests, stride))[:seq_sample]
+    bs_sample = np.stack([reqs[i][2] for i in sample_ids], axis=1)
+    xs_seq, _seq_ops, wall_seq = solo_reference(problem, bs_sample)
+    dx_seq = max(float(np.abs(by_id[i].x - xs_seq[:, j]).sum())
+                 for j, i in enumerate(sample_ids))
+
+    # every request against a tighter-tolerance one-shot batch solve
+    bs_all = np.stack([b for _, _, b in reqs], axis=1)
+    ref = SolverSession(problem).solve_batch(bs_all, until=te / 8)
+    dx_ref = max(float(np.abs(by_id[i].x - ref.x[:, i]).sum())
+                 for i in range(requests))
+
+    qps = requests / wall
+    seq_qps = len(sample_ids) / wall_seq
+    lat = sch.latency_percentiles()
+    row = _blank_row("serving", n)
+    row.update({
+        "requests": requests, "max_lanes": sch.batcher.max_lanes,
+        "clusters": clusters, "served": len(sch.results),
+        "dropped": sch.dropped, "rejected": sch.quarantine.total,
+        "qps": round(qps, 4), "seq_qps": round(seq_qps, 4),
+        "seq_sample": len(sample_ids),
+        "speedup_vs_sequential": round(qps / seq_qps, 3),
+        "p50_latency_s": round(lat["p50"], 6),
+        "p99_latency_s": round(lat["p99"], 6),
+        "pool_hit_rate": round(sch.pool.hit_rate, 4),
+        "pool_miss_rate": round(1.0 - sch.pool.hit_rate, 4),
+        "mean_occupancy": round(sch.batcher.mean_occupancy, 4),
+        "max_dx_l1_seq": dx_seq, "max_dx_l1_ref": dx_ref,
+        # two solves converged to |F|1 <= te*eps differ by <= 2*te
+        "dx_bound": 2.0 * te,
+        "total_ops": int(sch.batcher.ops_total),
+        "degrades": sch.log.counts().get("degrade", 0),
+        "degraded_frac": round(
+            sum(1 for r in sch.results if r.degraded)
+            / max(len(sch.results), 1), 4),
+        "converged": bool(all(r.converged for r in sch.results)),
+    })
+    return row
+
+
+def overload_cell(n: int, requests: int, max_lanes: int,
+                  update_at: Tuple[int, ...] = (8, 16),
+                  arrival_dt: float = 0.002, seed: int = 3) -> Dict:
+    """Open-loop arrivals beyond virtual service capacity plus
+    mid-stream churn: the ladder must degrade (and serve every request
+    anyway) — ``dropped`` is gated at exactly zero."""
+    from repro.graph import rotation_churn
+    from repro.serving import Scheduler
+
+    problem = build_problem(n)
+    reqs = make_requests(problem, requests, clusters=4, seed=seed)
+    sch = Scheduler(problem, max_lanes=max_lanes, rounds_per_tick=16,
+                    deadline_s=0.02, queue_cap=8, defer_cap=4)
+    for i, c, b in reqs:
+        sch.submit(b, cluster=c, request_id=i, arrival_t=i * arrival_dt)
+    steps = 0
+    while (sch._future or sch.queue.depth or sch.batcher.occupied
+           or sch.deferred_updates):
+        if steps in update_at:
+            delta = rotation_churn(sch.problem.graph, 4,
+                                   seed=7000 + steps)
+            sch.submit_update(
+                delta,
+                store_version=(sch.problem.store_version
+                               + len(sch.deferred_updates)))
+        sch.step()
+        steps += 1
+        assert steps < 200_000, "overload cell failed to drain"
+    counts = sch.log.counts()
+    lat = sch.latency_percentiles()
+    row = _blank_row("overload", n)
+    row.update({
+        "requests": requests, "max_lanes": sch.batcher.max_lanes,
+        "clusters": 4, "served": len(sch.results),
+        "dropped": sch.dropped, "rejected": sch.quarantine.total,
+        "qps": 0.0, "p50_latency_s": round(lat["p50"], 6),
+        "p99_latency_s": round(lat["p99"], 6),
+        "pool_hit_rate": round(sch.pool.hit_rate, 4),
+        "pool_miss_rate": round(1.0 - sch.pool.hit_rate, 4),
+        "mean_occupancy": round(sch.batcher.mean_occupancy, 4),
+        "total_ops": int(sch.batcher.ops_total),
+        "degrades": counts.get("degrade", 0),
+        "applied_updates": sch.applied_updates,
+        "degraded_frac": round(
+            sum(1 for r in sch.results if r.degraded)
+            / max(len(sch.results), 1), 4),
+        "converged": bool(all(r.converged for r in sch.results)),
+    })
+    return row
+
+
+def bucket_cell(n: int, c: int, seed: int = 5) -> Dict:
+    """Padded vs unpadded ``solve_batch``: bitwise-identical solutions
+    and op counts (zero-fill lanes are inert), waste reported."""
+    from repro.api.session import SolverSession
+
+    problem = build_problem(n)
+    rng = np.random.default_rng(seed)
+    base = np.asarray(problem.b, dtype=np.float64)[:, None]
+    bs = np.abs(base * (1.0 + 0.1 * rng.standard_normal((problem.n, c))))
+    r_pad = SolverSession(problem).solve_batch(bs, pad=True)
+    r_raw = SolverSession(problem).solve_batch(bs, pad=False)
+    bit = (bool(np.array_equal(r_pad.x, r_raw.x))
+           and r_pad.extras["ops_per_column"]
+           == r_raw.extras["ops_per_column"])
+    row = _blank_row(f"bucket:c{c}", n)
+    row.update({
+        "requests": c, "max_lanes": r_pad.extras["bucket"],
+        "bucket": r_pad.extras["bucket"],
+        "padding_waste": round(r_pad.extras["padding_waste"], 4),
+        "bit_parity": bit, "served": c,
+        "total_ops": int(r_pad.n_ops),
+        "converged": bool(r_pad.converged and r_raw.converged),
+    })
+    return row
+
+
+def main(smoke: bool = False, out_path: str = "BENCH_serve.json") -> dict:
+    if not smoke:
+        # x64 BEFORE any kernel traces: the N=4096 parity bound needs
+        # f64 accumulation.  Never under run.py --smoke, which shares
+        # the process (and its traced f32 kernels) with other benches.
+        import jax
+
+        jax.config.update("jax_enable_x64", True)
+    import jax
+
+    rows = []
+    if smoke:
+        rows.append(serving_cell(n=512, requests=12, clusters=3,
+                                 max_lanes=4, seq_sample=2,
+                                 rounds_per_tick=32))
+        rows.append(overload_cell(n=400, requests=16, max_lanes=4,
+                                  update_at=(4,)))
+        rows.append(bucket_cell(n=400, c=3))
+    else:
+        rows.append(serving_cell(n=4096, requests=64, clusters=8,
+                                 max_lanes=16, seq_sample=4,
+                                 target_error=1e-7))
+        rows.append(overload_cell(n=1024, requests=48, max_lanes=8))
+        rows.append(bucket_cell(n=1024, c=3))
+        rows.append(bucket_cell(n=1024, c=5))
+    for r in rows:
+        if r["scenario"] == "serving":
+            print(f"  {r['scenario']:12s} served={r['served']}"
+                  f"/{r['requests']} qps={r['qps']:.2f} "
+                  f"seq_qps={r['seq_qps']:.3f} "
+                  f"speedup={r['speedup_vs_sequential']:.1f}x "
+                  f"pool_hit={r['pool_hit_rate']:.2f} "
+                  f"occ={r['mean_occupancy']:.2f} "
+                  f"|dx|seq={r['max_dx_l1_seq']:.2e} "
+                  f"|dx|ref={r['max_dx_l1_ref']:.2e} "
+                  f"(bound {r['dx_bound']:.1e})")
+        elif r["scenario"] == "overload":
+            print(f"  {r['scenario']:12s} served={r['served']}"
+                  f"/{r['requests']} dropped={r['dropped']} "
+                  f"degrades={r['degrades']} "
+                  f"degraded={r['degraded_frac']:.0%} "
+                  f"updates={r['applied_updates']} "
+                  f"p99={r['p99_latency_s']*1e3:.1f}ms")
+        else:
+            print(f"  {r['scenario']:12s} bucket={r['bucket']} "
+                  f"waste={r['padding_waste']:.2f} "
+                  f"bit_parity={r['bit_parity']}")
+    from benchmarks._meta import std_meta
+
+    payload = {
+        "meta": std_meta("serve_continuous_batching",
+                         graph="webgraph_like",
+                         x64=bool(jax.config.jax_enable_x64)),
+        "rows": rows,
+    }
+    with open(out_path, "w") as fh:
+        json.dump(payload, fh, indent=1)
+    print(f"[serve bench] wrote {out_path} ({len(rows)} rows)")
+    return payload
+
+
+if __name__ == "__main__":
+    _out = "BENCH_serve.json"
+    if "--out" in sys.argv:
+        _out = sys.argv[sys.argv.index("--out") + 1]
+    _smoke = "--smoke" in sys.argv
+    _payload = main(smoke=_smoke, out_path=_out)
+    _rows = _payload["rows"]
+    _head = [r for r in _rows if r["scenario"] == "serving"]
+    _over = [r for r in _rows if r["scenario"] == "overload"]
+    _ok = (
+        bool(_head) and bool(_over)
+        and all(r["dropped"] == 0 for r in _rows)
+        and all(r["served"] == r["requests"] for r in _head + _over)
+        and all(r["bit_parity"] for r in _rows)
+        and all(r["max_dx_l1_seq"] <= r["dx_bound"]
+                and r["max_dx_l1_ref"] <= r["dx_bound"]
+                and r["degrades"] == 0 and r["converged"]
+                for r in _head)
+        # full mode enforces the §11 acceptance numbers outright
+        and (_smoke or all(r["speedup_vs_sequential"] >= 4.0
+                           and r["max_dx_l1_seq"] <= 1e-6
+                           and r["max_dx_l1_ref"] <= 1e-6
+                           for r in _head))
+        and all(r["degrades"] >= 1 for r in _over)
+    )
+    sys.exit(0 if _ok else 1)

@@ -44,6 +44,156 @@ __all__ = ["SolverSession"]
 
 
 # --------------------------------------------------------------------------- #
+# the batched multi-RHS kernel (shared by solve_batch and repro.serving)
+# --------------------------------------------------------------------------- #
+def _bucket_width(c: int, floor: int = 1) -> int:
+    """Smallest power of two >= max(c, floor) — the XLA trace bucket.
+
+    Batched solves pad their lane axis to this width so a drifting
+    request count replays a compiled trace instead of re-tracing (the
+    PR-6 kernel_bench pow2 trick applied to the lane axis)."""
+    cp = max(int(floor), 1)
+    while cp < c:
+        cp *= 2
+    return cp
+
+
+def _edge_device_arrays(problem: Problem):
+    """``(src, dst, wgt, w, dang)`` device arrays of the *damped* matrix
+    ``problem.p`` — the one edge-list upload every batch path shares."""
+    import jax.numpy as jnp
+
+    p = problem.p
+    src, dst, wgt = p.edge_list()
+    return (jnp.asarray(src, dtype=jnp.int32),
+            jnp.asarray(dst, dtype=jnp.int32),
+            jnp.asarray(wgt),
+            jnp.asarray(problem.node_weights()),
+            jnp.asarray(p.dangling_mask()))
+
+
+_BATCH_FNS: dict = {}
+
+
+def _batch_fns() -> dict:
+    """Process-wide jitted batch kernels, built once.
+
+    The pre-PR-8 ``solve_batch`` closed over the edge arrays and called
+    ``lax.while_loop`` through a *fresh* closure per call, so every
+    invocation — even at an identical batch width — re-traced and
+    re-compiled the loop.  These module-level jitted functions take the
+    edge arrays as arguments instead: the jit cache is keyed on shapes
+    alone, so a given ``[C_pad, N]`` bucket compiles exactly once per
+    process and every later call at that bucket replays the trace.
+
+    All lane-axis state is ``[C, N]`` (lane-major); per-lane reductions
+    run over ``axis=1`` and lanes are fully independent — a zero-fluid
+    lane selects nothing, pushes nothing, and leaves every other lane's
+    arithmetic untouched, which is what makes pow2 zero-padding
+    *bitwise* invisible to the real lanes (tested in
+    tests/test_serving.py).
+
+    ``solve`` runs to convergence; ``tick`` is the continuous-batching
+    micro-step (bounded rounds, resumable); ``warm`` / ``place`` /
+    ``clear`` are the lane-lifecycle helpers ``repro.serving`` uses to
+    swap converged lanes for queued requests without re-tracing.
+    """
+    if _BATCH_FNS:
+        return _BATCH_FNS
+    import jax
+    import jax.numpy as jnp
+
+    def _round(f, h, t, ops, lane_rounds, tol_cols, src, dst, wgt, w,
+               dang, gamma):
+        n = f.shape[1]
+        active = jnp.abs(f).sum(axis=1) > tol_cols  # [C]
+        sel = ((jnp.abs(f) * w[None, :]) > t[:, None]) & active[:, None]
+        sent = jnp.where(sel, f, 0.0)
+        h = h + sent
+        f = f - sent
+        msg = jnp.take(sent, src, axis=1) * wgt[None, :]  # [C, L]
+        seg = jax.vmap(
+            lambda m: jax.ops.segment_sum(m, dst, num_segments=n))
+        f = f + seg(msg)
+        edge_active = jnp.take(sel, src, axis=1)  # [C, L]
+        dops = jnp.sum(edge_active, axis=1).astype(jnp.int32)
+        dops = dops + jnp.sum(
+            sel & dang[None, :], axis=1).astype(jnp.int32)
+        any_sel = jnp.any(sel, axis=1)
+        t = jnp.where(any_sel | ~active, t, t / gamma)
+        return (f, h, t, ops + dops,
+                lane_rounds + active.astype(jnp.int32))
+
+    def solve(f, h, t, ops, tol_cols, max_rounds, src, dst, wgt, w,
+              dang, gamma):
+        def cond(state):
+            f, h, t, ops, lane_rounds, rounds = state
+            return (jnp.any(jnp.abs(f).sum(axis=1) > tol_cols)
+                    & (rounds < max_rounds))
+
+        def body(state):
+            f, h, t, ops, lane_rounds, rounds = state
+            f, h, t, ops, lane_rounds = _round(
+                f, h, t, ops, lane_rounds, tol_cols, src, dst, wgt, w,
+                dang, gamma)
+            return f, h, t, ops, lane_rounds, rounds + 1
+
+        return jax.lax.while_loop(
+            cond, body,
+            (f, h, t, ops, jnp.zeros_like(ops),
+             jnp.zeros((), jnp.int32)))
+
+    def tick(f, h, t, ops, lane_rounds, tol_cols, budget, src, dst, wgt,
+             w, dang, gamma):
+        def cond(state):
+            f, h, t, ops, lane_rounds, done = state
+            return (jnp.any(jnp.abs(f).sum(axis=1) > tol_cols)
+                    & (done < budget))
+
+        def body(state):
+            f, h, t, ops, lane_rounds, done = state
+            f, h, t, ops, lane_rounds = _round(
+                f, h, t, ops, lane_rounds, tol_cols, src, dst, wgt, w,
+                dang, gamma)
+            return f, h, t, ops, lane_rounds, done + 1
+
+        return jax.lax.while_loop(
+            cond, body,
+            (f, h, t, ops, lane_rounds, jnp.zeros((), jnp.int32)))
+
+    def warm(b_col, h_col, src, dst, wgt, w):
+        # F' = B' − H + P·H (§2.2) for one lane, entirely on device
+        ph = jax.ops.segment_sum(
+            jnp.take(h_col, src) * wgt, dst,
+            num_segments=b_col.shape[0])
+        f_col = b_col - h_col + ph
+        t_col = jnp.abs(f_col * w).max() * 2.0
+        return f_col, t_col
+
+    def place(f, h, t, ops, lane_rounds, lane, f_col, h_col, t_col):
+        f = jax.lax.dynamic_update_slice_in_dim(
+            f, f_col[None], lane, axis=0)
+        h = jax.lax.dynamic_update_slice_in_dim(
+            h, h_col[None], lane, axis=0)
+        t = t.at[lane].set(t_col.astype(t.dtype))
+        ops = ops.at[lane].set(0)
+        lane_rounds = lane_rounds.at[lane].set(0)
+        return f, h, t, ops, lane_rounds
+
+    def clear(f, h, lane):
+        zero = jnp.zeros((1, f.shape[1]), dtype=f.dtype)
+        return (jax.lax.dynamic_update_slice_in_dim(f, zero, lane,
+                                                    axis=0),
+                jax.lax.dynamic_update_slice_in_dim(h, zero, lane,
+                                                    axis=0))
+
+    _BATCH_FNS.update(
+        solve=jax.jit(solve), tick=jax.jit(tick), warm=jax.jit(warm),
+        place=jax.jit(place), clear=jax.jit(clear))
+    return _BATCH_FNS
+
+
+# --------------------------------------------------------------------------- #
 # frontier drivers (single-process jnp / Pallas)
 # --------------------------------------------------------------------------- #
 class _SegmentSumDriver:
@@ -52,17 +202,11 @@ class _SegmentSumDriver:
     native_round = "frontier round"
 
     def __init__(self, problem: Problem, options: SolverOptions):
-        import jax.numpy as jnp
-
         g = problem.p
-        src, dst, wgt = g.edge_list()
         self.n = g.n
         self.l = max(g.n_edges, 1)
-        self.src = jnp.asarray(src, dtype=jnp.int32)
-        self.dst = jnp.asarray(dst, dtype=jnp.int32)
-        self.wgt = jnp.asarray(wgt)
-        self.w = jnp.asarray(problem.node_weights())
-        self.dang = jnp.asarray(g.dangling_mask())
+        (self.src, self.dst, self.wgt, self.w,
+         self.dang) = _edge_device_arrays(problem)
         self.gamma = options.gamma
         self._state = None
 
@@ -116,7 +260,9 @@ class _SegmentSumDriver:
             f, h, t, ops, rounds = state
             f, h, t, dops = frontier_step(
                 f, h, t, src, dst, wgt, w, dang, n, gamma)
-            return f, h, t, ops + dops, rounds + 1
+            # dops may promote to int64 under jax_enable_x64; the carry
+            # dtype must stay put or while_loop rejects the body
+            return f, h, t, ops + dops.astype(ops.dtype), rounds + 1
 
         self._state = jax.lax.while_loop(cond, body, self._state)
 
@@ -163,55 +309,39 @@ class _SegmentSumDriver:
 
     # ---- batched multi-RHS loop (vmap over columns) -----------------------
     def solve_batch(self, b_matrix: np.ndarray, tol: float,
-                    max_rounds: int):
+                    max_rounds: int, pad: bool = True):
         """All columns at once: per-column thresholds + convergence masks.
 
         Converged columns stop diffusing (their frontier is masked), so
-        ops accrue per column exactly as in the single-RHS loop.
-        Returns ``(x [N, C], ops [C], rounds)``.
+        ops accrue per column exactly as in the single-RHS loop.  The
+        lane axis is padded to a pow2 bucket (:func:`_bucket_width`)
+        with zero-RHS fill: a zero lane never selects and never pushes,
+        so the real lanes are *bitwise* unaffected while XLA compiles
+        once per bucket instead of once per batch width (``pad=False``
+        keeps the exact width — the parity test's control arm).
+        Returns ``(x [N, C], ops [C], rounds, res_cols, stats)``.
         """
-        import jax
         import jax.numpy as jnp
 
-        src, dst, wgt, w, dang, n, gamma = (
-            self.src, self.dst, self.wgt, self.w, self.dang, self.n,
-            self.gamma)
-        f0 = jnp.asarray(np.ascontiguousarray(b_matrix.T))  # [C, N]
-        c = f0.shape[0]
+        c = b_matrix.shape[1]
+        cp = _bucket_width(c) if pad else c
+        b_t = jnp.asarray(np.ascontiguousarray(b_matrix.T))  # [C, N]
+        if cp != c:
+            f0 = jnp.zeros((cp, self.n), dtype=b_t.dtype).at[:c].set(b_t)
+        else:
+            f0 = b_t
         h0 = jnp.zeros_like(f0)
-        t0 = jnp.abs(f0 * w[None, :]).max(axis=1) * 2.0  # [C]
-        seg = jax.vmap(
-            lambda m: jax.ops.segment_sum(m, dst, num_segments=n))
-
-        def cond(state):
-            f, h, t, ops, rounds = state
-            return (jnp.any(jnp.abs(f).sum(axis=1) > tol)
-                    & (rounds < max_rounds))
-
-        def body(state):
-            f, h, t, ops, rounds = state
-            active = jnp.abs(f).sum(axis=1) > tol  # [C]
-            sel = ((jnp.abs(f) * w[None, :]) > t[:, None]) & active[:, None]
-            sent = jnp.where(sel, f, 0.0)
-            h = h + sent
-            f = f - sent
-            msg = jnp.take(sent, src, axis=1) * wgt[None, :]  # [C, L]
-            f = f + seg(msg)
-            edge_active = jnp.take(sel, src, axis=1)  # [C, L]
-            dops = jnp.sum(edge_active, axis=1).astype(jnp.int32)
-            dops = dops + jnp.sum(
-                sel & dang[None, :], axis=1).astype(jnp.int32)
-            any_sel = jnp.any(sel, axis=1)
-            t = jnp.where(any_sel | ~active, t, t / gamma)
-            return f, h, t, ops + dops, rounds + 1
-
-        f, h, t, ops, rounds = jax.lax.while_loop(
-            cond, body,
-            (f0, h0, t0, jnp.zeros(c, jnp.int32), jnp.zeros((), jnp.int32)),
-        )
-        res_cols = np.asarray(jnp.abs(f).sum(axis=1), dtype=np.float64)
-        return (np.asarray(h.T, dtype=np.float64), np.asarray(ops),
-                int(rounds), res_cols)
+        t0 = jnp.abs(f0 * self.w[None, :]).max(axis=1) * 2.0  # [C_pad]
+        tol_cols = jnp.full((cp,), tol, dtype=f0.dtype)
+        f, h, t, ops, _lane_rounds, rounds = _batch_fns()["solve"](
+            f0, h0, t0, jnp.zeros(cp, jnp.int32), tol_cols, max_rounds,
+            self.src, self.dst, self.wgt, self.w, self.dang, self.gamma)
+        res_cols = np.asarray(
+            jnp.abs(f).sum(axis=1), dtype=np.float64)[:c]
+        stats = {"bucket": cp,
+                 "padding_waste": float((cp - c) / cp)}
+        return (np.asarray(h.T, dtype=np.float64)[:, :c],
+                np.asarray(ops)[:c], int(rounds), res_cols, stats)
 
 
 class _BsrFrontierDriver:
@@ -1169,13 +1299,17 @@ class SolverSession:
 
     # ---- batched multi-RHS ------------------------------------------------
     def solve_batch(self, b_matrix: np.ndarray,
-                    until: Optional[float] = None) -> SolveReport:
+                    until: Optional[float] = None,
+                    pad: bool = True) -> SolveReport:
         """Solve every column of ``b_matrix`` ([N, C]) over the shared P.
 
         Runs the vmapped frontier loop (per-column thresholds and
         convergence masks) regardless of the session's method — the
         batch serving path is frontier-native by design (DESIGN.md §4).
-        The session's own (H, F) state is untouched.
+        The session's own (H, F) state is untouched.  The lane axis is
+        bucket-padded (``pad=False`` opts out — see the driver) so a
+        drifting batch width reuses the compiled trace; the padding
+        bookkeeping lands in ``extras`` (``bucket``, ``padding_waste``).
         """
         self._check_fresh()
         b_matrix = np.asarray(b_matrix, dtype=np.float64)
@@ -1193,8 +1327,8 @@ class SolverSession:
                 self._batch_driver = batch_driver
         t0 = time.perf_counter()
         tol = self._tol(until)
-        x, ops, rounds, res_cols = batch_driver.solve_batch(
-            b_matrix, tol, self.options.max_rounds)
+        x, ops, rounds, res_cols, stats = batch_driver.solve_batch(
+            b_matrix, tol, self.options.max_rounds, pad=pad)
         n_ops = int(ops.astype(np.int64).sum())
         return SolveReport(
             x=x,
@@ -1207,6 +1341,8 @@ class SolverSession:
             trace=[RoundReport(rounds, float(res_cols.max()), n_ops)],
             wall_time_s=time.perf_counter() - t0,
             extras={"batch": b_matrix.shape[1],
+                    "bucket": stats["bucket"],
+                    "padding_waste": stats["padding_waste"],
                     "ops_per_column": ops.tolist(),
                     "residual_per_column": res_cols.tolist()},
         )

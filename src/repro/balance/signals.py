@@ -31,7 +31,7 @@ import numpy as np
 __all__ = ["LoadSignal", "SIGNAL_KINDS"]
 
 SIGNAL_KINDS = ("residual", "edge-ops", "step-time", "expert-tokens",
-                "graph-churn", "latency")
+                "graph-churn", "latency", "queue-depth")
 
 
 @dataclasses.dataclass
@@ -144,6 +144,33 @@ class LoadSignal:
         return cls(values=np.array([pressure]),
                    sizes=np.array([max(int(queue_depth), 0)]),
                    kind="latency", step=step)
+
+    @classmethod
+    def from_queue(cls, oldest_wait_s: float, deadline_s: float,
+                   queue_depth: int = 0, queue_cap: int = 8,
+                   step: int = 0) -> "LoadSignal":
+        """Continuous-batching backlog pressure (the scheduler's signal).
+
+        The per-request variant (:meth:`from_latency`) measures a
+        latency that already *happened*; a batch scheduler needs the
+        leading indicator — how long the queue's HEAD has been waiting
+        plus how deep the backlog is — so it can shed quality before
+        any request actually misses its deadline:
+
+            pressure = oldest_wait/deadline + queue_depth/queue_cap
+
+        Same conventions as ``from_latency``: NOT normalized (overload
+        is absolute), 1.0 ≈ "head request at the deadline with an empty
+        queue", ``sizes[0]`` carries the raw depth for event logs.
+        """
+        if deadline_s <= 0:
+            raise ValueError(f"deadline_s must be positive, got "
+                             f"{deadline_s}")
+        pressure = (max(float(oldest_wait_s), 0.0) / float(deadline_s)
+                    + max(int(queue_depth), 0) / max(int(queue_cap), 1))
+        return cls(values=np.array([pressure]),
+                   sizes=np.array([max(int(queue_depth), 0)]),
+                   kind="queue-depth", step=step)
 
     @classmethod
     def from_expert_counts(cls, token_counts: np.ndarray,

@@ -101,9 +101,6 @@ def lm_main(argv):
 
 
 def rank_main(argv):
-    import repro
-    from repro.core import webgraph_like
-
     ap = argparse.ArgumentParser(prog="serve rank")
     ap.add_argument("--n", type=int, default=20_000)
     ap.add_argument("--method", default="frontier:segment_sum",
@@ -140,6 +137,14 @@ def rank_main(argv):
                     "axis (engine methods)")
     ap.add_argument("--rescale-k", type=int, default=None,
                     help="pid-axis width to rescale to at --rescale-at")
+    ap.add_argument("--no-batching", action="store_true",
+                    help="serve the stream strictly sequentially (the "
+                    "pre-scheduler path; output is bit-identical to it)")
+    ap.add_argument("--max-lanes", type=int, default=16,
+                    help="continuous batching: lane-axis cap (pow2)")
+    ap.add_argument("--rounds-per-tick", type=int, default=32,
+                    help="continuous batching: frontier rounds per "
+                    "scheduler micro-step")
     args = ap.parse_args(argv)
     if args.churn > 0 and args.churn_every < 1:
         ap.error("--churn-every must be >= 1 when --churn is set")
@@ -147,6 +152,106 @@ def rank_main(argv):
         ap.error("--rescale-at and --rescale-k go together")
     if args.resume and not args.ckpt_dir:
         ap.error("--resume needs --ckpt-dir")
+    # the scheduler is frontier-native and stateless across processes:
+    # session-exclusive features (checkpoint/resume, pid-axis rescale,
+    # engine backends) keep the sequential path (DESIGN.md §11
+    # migration note)
+    sequential = (args.no_batching or args.ckpt_dir or args.resume
+                  or args.rescale_at is not None
+                  or args.method != "frontier:segment_sum")
+    if sequential:
+        return _rank_sequential(args)
+    return _rank_batched(args)
+
+
+def _rank_batched(args):
+    """Default rank serving: the request stream flows through the
+    continuous-batching :class:`repro.serving.Scheduler` — same seeded
+    stream (drift chain, poison schedule, churn deltas) as the
+    sequential path, but rank requests between graph updates are
+    served concurrently in kernel lanes.  Graph updates are natural
+    drain barriers: the scheduler flushes each delta against the
+    post-predecessor store, exactly the sequential ordering."""
+    import repro
+    from repro.core import webgraph_like
+    from repro.graph import rotation_churn
+    from repro.resilience import RequestRejected
+    from repro.serving import Scheduler
+
+    rng = np.random.default_rng(0)
+    g = webgraph_like(args.n, seed=1)
+    problem = repro.Problem.pagerank(g, target_error=args.target_error)
+    print(f"N={g.n} L={g.n_edges} method={args.method} "
+          f"target_error={problem.target_error:.2e}")
+    sch = Scheduler(problem, max_lanes=args.max_lanes,
+                    rounds_per_tick=args.rounds_per_tick)
+    print(f"[mode ] continuous batching: max_lanes={sch.batcher.max_lanes}"
+          f" rounds_per_tick={sch.rounds_per_tick} "
+          f"pool_capacity={sch.pool.capacity}")
+
+    printed = 0
+
+    def drain_and_report():
+        nonlocal printed
+        sch.run_until_idle()
+        for r in sch.results[printed:]:
+            print(f"[served {r.request_id}] |res|={r.residual:.2e} "
+                  f"{r.ops} ops, {r.rounds} rounds, "
+                  f"pool_hit={r.pool_hit}, lat={r.latency_s:.3f}s"
+                  + (f" [degraded rung={r.rung}]" if r.degraded else ""))
+        printed = len(sch.results)
+
+    t0 = time.time()
+    b = problem.b
+    for req in range(args.requests):
+        if args.churn > 0 and req % args.churn_every == args.churn_every - 1:
+            drain_and_report()  # the update's drain barrier
+            n_rot = max(1, int(args.churn * sch.problem.n_edges) // 2)
+            delta = rotation_churn(sch.problem.graph, n_rot,
+                                   seed=1000 + req)
+            try:
+                sch.submit_update(
+                    delta, store_version=sch.problem.store_version)
+                sch.run_until_idle()  # flush: apply at the barrier
+                print(f"[update {req}] {delta.n_changes} changed edges "
+                      f"applied, store at version "
+                      f"{sch.problem.store_version}")
+            except RequestRejected as e:
+                print(f"[quarantine {req}] update rejected: {e}")
+            continue
+        b = b * (1.0 + args.drift * rng.standard_normal(g.n))
+        b = np.abs(b)
+        b_req = b
+        if args.poison_every and req % args.poison_every == (
+                args.poison_every - 1):
+            b_req = b.copy()
+            b_req[rng.integers(g.n)] = np.nan  # a client sent garbage
+        try:
+            sch.submit(b_req, cluster=0, request_id=req)
+        except RequestRejected as e:
+            print(f"[quarantine {req}] rank request rejected: {e}")
+    drain_and_report()
+    wall = time.time() - t0
+    if sch.quarantine.total:
+        print(f"[quarantine] {sch.quarantine.total} rejected: "
+              f"{sch.quarantine.to_jsonable()['by_reason']}")
+    served = len(sch.results)
+    lat = sch.latency_percentiles()
+    print(f"[stats] served={served} dropped={sch.dropped} "
+          f"qps={served / max(wall, 1e-9):.2f} "
+          f"pool_hit_rate={sch.pool.hit_rate:.2f} "
+          f"occupancy={sch.batcher.mean_occupancy:.2f} "
+          f"p50={lat['p50']:.3f}s p99={lat['p99']:.3f}s "
+          f"rung={sch.ladder.rung.name}")
+
+
+def _rank_sequential(args):
+    """The pre-scheduler rank loop, preserved verbatim: one
+    warm-started session, strictly one request at a time.  The
+    ``--no-batching`` regression test holds this path's output
+    bit-identical to the pre-PR-8 CLI."""
+    import repro
+    from repro.core import webgraph_like
 
     rng = np.random.default_rng(0)
     g = webgraph_like(args.n, seed=1)

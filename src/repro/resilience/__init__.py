@@ -26,7 +26,7 @@ instead of availability (DESIGN.md §10):
 """
 from .admission import (Quarantine, RequestRejected, validate_graph_update,
                         validate_rhs)
-from .degrade import DEFAULT_RUNGS, DegradationLadder, Rung
+from .degrade import DEFAULT_RUNGS, SERVE_RUNGS, DegradationLadder, Rung
 from .events import Event, EventLog
 from .retry import CircuitBreaker, RetryPolicy
 from .supervisor import RequestOutcome, SupervisedSession
@@ -42,6 +42,7 @@ __all__ = [
     "RequestRejected",
     "RetryPolicy",
     "Rung",
+    "SERVE_RUNGS",
     "SupervisedSession",
     "validate_graph_update",
     "validate_rhs",

@@ -36,7 +36,7 @@ from typing import List, Optional, Tuple
 
 from repro.balance import LoadSignal, PressurePolicy
 
-__all__ = ["Rung", "DEFAULT_RUNGS", "DegradationLadder"]
+__all__ = ["Rung", "DEFAULT_RUNGS", "SERVE_RUNGS", "DegradationLadder"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,6 +69,23 @@ DEFAULT_RUNGS: Tuple[Rung, ...] = (
          target_scale=8.0),
     Rung("survival", defer_updates=True, occupancy_threshold=0.5,
          target_scale=32.0, round_cap=64),
+)
+
+# The continuous-batching scheduler's ladder (repro.serving): the
+# vmapped batch kernel has no per-block occupancy τ to shed — its
+# frontier mask is already per-lane — so the exact defer-updates knob
+# engages first and overload then walks straight into the bounded /
+# best-effort knobs.  round_cap counts *per-lane* rounds (a lane
+# admitted late is capped on its own clock, not the batch's), and a
+# capped lane retires best-effort with its residual reported — shed
+# quality, never requests (DESIGN.md §11).
+SERVE_RUNGS: Tuple[Rung, ...] = (
+    Rung("nominal"),
+    Rung("defer-updates", defer_updates=True),
+    Rung("loosen-target", defer_updates=True, target_scale=4.0),
+    Rung("loosen-more", defer_updates=True, target_scale=16.0),
+    Rung("survival", defer_updates=True, target_scale=64.0,
+         round_cap=256),
 )
 
 

@@ -1,0 +1,71 @@
+"""Continuous-batching serving tier for personalized-rank requests.
+
+The asynchronous-distribution companions (arXiv:1202.6168,
+arXiv:1301.3007) frame the serving regime this package targets: many
+concurrent diffusion computations sharing one matrix, where throughput
+comes from keeping the hardware saturated, not from any per-request
+trick.  Concretely (DESIGN.md §11):
+
+* :class:`Scheduler` — queue → lanes → pool control loop with
+  admission control, drain-barrier graph updates, and
+  pressure-ladder overload shedding;
+* :class:`ContinuousBatcher` — slot-level in-flight batching through
+  the same jitted kernels ``SolverSession.solve_batch`` runs (pow2
+  lane buckets, per-lane convergence, per-lane §2.3 op accounting);
+* :class:`SessionPool` — device-resident warm H-states keyed by
+  ``(store_version, personalization-cluster)`` with LRU eviction;
+* :class:`RequestQueue` / :class:`Request` — FIFO with the backlog
+  accounting the ``queue-depth`` LoadSignal reads.
+
+:func:`solo_reference` is the benchmark's sequential twin: the exact
+pre-batching ``serve.py rank`` semantics (one warm-started
+SolverSession chained across requests), for QPS baselines and
+per-request parity checks.
+"""
+from .batcher import ContinuousBatcher, LaneInfo, MicroReport, RetiredLane
+from .pool import PoolEntry, SessionPool
+from .queue import Request, RequestQueue
+from .scheduler import Scheduler, ServedRequest
+
+__all__ = [
+    "ContinuousBatcher",
+    "LaneInfo",
+    "MicroReport",
+    "PoolEntry",
+    "Request",
+    "RequestQueue",
+    "RetiredLane",
+    "Scheduler",
+    "ServedRequest",
+    "SessionPool",
+    "solo_reference",
+]
+
+
+def solo_reference(problem, bs, method: str = "frontier:segment_sum",
+                   until=None):
+    """Serve ``bs`` ([N, C]) strictly sequentially — the pre-batching
+    ``serve.py rank`` path: one session, warm-started per request.
+
+    Returns ``(x [N, C] float64, ops [C], wall_s)``.  This is the
+    benchmark's QPS baseline and the parity reference for the batched
+    path (both converge to the same tolerance, so per-request solutions
+    agree within ~2× the served target_error in exact arithmetic).
+    """
+    import time
+
+    import numpy as np
+
+    from repro.api.session import SolverSession
+
+    bs = np.asarray(bs, dtype=np.float64)
+    xs = np.zeros_like(bs)
+    ops = np.zeros(bs.shape[1], dtype=np.int64)
+    t0 = time.perf_counter()
+    session = SolverSession(problem, method=method)
+    for c in range(bs.shape[1]):
+        session.warm_start(bs[:, c])
+        rep = session.solve(until=until)
+        xs[:, c] = rep.x
+        ops[c] = rep.n_ops
+    return xs, ops, time.perf_counter() - t0

@@ -1,0 +1,287 @@
+"""In-flight (continuous) batching over the vmapped frontier kernel.
+
+The lane axis of the ``[C, N]`` batch state is a set of *slots*, not a
+batch: each lane carries one request's fluid pair ``(F, H)`` plus its
+own threshold, tolerance, and §2.3 op counter.  ``micro()`` advances
+every occupied lane a bounded number of frontier rounds through ONE
+jitted while-loop dispatch; a lane whose residual certificate clears
+its tolerance retires *individually* — its H-column leaves for the
+session pool, the lane zeroes, and a queued request is placed into it
+on the next tick while the other lanes keep diffusing.  That is the
+sglang-style continuous-batching loop with convergence playing the
+role of end-of-sequence.
+
+Two width disciplines keep XLA quiet (DESIGN.md §11):
+
+* the lane axis only ever *doubles* (pow2 growth up to ``max_lanes``),
+  so a whole serving run touches at most ``log2(max_lanes)`` traces of
+  the shared :func:`repro.api.session._batch_fns` kernels;
+* placement / clearing use jitted dynamic-slice helpers with the lane
+  index as a *traced* argument — admitting into lane 7 and lane 12 is
+  the same compiled program.
+
+The kernels are the very ones ``SolverSession.solve_batch`` runs — the
+serving tier adds lifecycle, not arithmetic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.api.session import (_batch_fns, _bucket_width,
+                               _edge_device_arrays)
+
+from .queue import Request
+
+__all__ = ["ContinuousBatcher", "LaneInfo", "MicroReport", "RetiredLane"]
+
+
+@dataclasses.dataclass
+class LaneInfo:
+    """Host-side view of one occupied lane."""
+
+    request: Request
+    admitted_t: float
+    pool_hit: bool
+    tol: float
+    until_eff: float
+    round_cap: Optional[int] = None
+    rung: str = "nominal"
+
+
+@dataclasses.dataclass
+class RetiredLane:
+    """One request leaving its lane (converged or round-capped)."""
+
+    info: LaneInfo
+    x: np.ndarray          # served solution (host, float64)
+    h_dev: object          # the lane's H column, still device-resident
+    residual: float
+    ops: int
+    rounds: int
+    degraded: bool         # round_cap struck before the certificate
+
+
+@dataclasses.dataclass
+class MicroReport:
+    """What one ``micro()`` dispatch did."""
+
+    rounds_run: int
+    ops_delta: int
+    retired: List[RetiredLane]
+    occupied: int          # lanes busy during this dispatch
+    width: int             # current pow2 lane-axis width
+    active_after: int      # lanes still unconverged
+
+
+class ContinuousBatcher:
+    """Slot-level batch state + lifecycle over one graph snapshot."""
+
+    def __init__(self, problem, gamma: float = 1.2, max_lanes: int = 64,
+                 min_lanes: int = 4):
+        if max_lanes < 1:
+            raise ValueError(f"max_lanes must be >= 1, got {max_lanes}")
+        self.gamma = float(gamma)
+        self.max_lanes = _bucket_width(max_lanes)
+        self.min_lanes = min(_bucket_width(min_lanes), self.max_lanes)
+        self.graph_switches = 0
+        self._bind(problem)
+        # lifetime accounting (the bench's occupancy + padding story)
+        self.ticks = 0
+        self.rounds_total = 0
+        self.ops_total = 0
+        self.lane_rounds_total = 0   # occupied-lane rounds actually used
+        self.width_rounds_total = 0  # lane-axis slots paid for
+        self.retired_total = 0
+
+    # ------------------------------------------------------------------ #
+    # state plumbing
+    # ------------------------------------------------------------------ #
+    def _bind(self, problem) -> None:
+        """(Re)build device edge arrays + empty lane state for
+        ``problem``'s current graph snapshot."""
+        import jax.numpy as jnp
+
+        self.problem = problem
+        self.n = problem.n
+        (self.src, self.dst, self.wgt, self.w,
+         self.dang) = _edge_device_arrays(problem)
+        self.width = self.min_lanes
+        self.lanes: List[Optional[LaneInfo]] = [None] * self.width
+        self.f = jnp.zeros((self.width, self.n))
+        self.h = jnp.zeros_like(self.f)
+        self.t = jnp.zeros((self.width,), dtype=self.f.dtype)
+        self.ops = jnp.zeros((self.width,), dtype=jnp.int32)
+        self.lane_rounds = jnp.zeros((self.width,), dtype=jnp.int32)
+        self._tol_cols = np.zeros(self.width, dtype=np.float64)
+        self._ops_host = np.zeros(self.width, dtype=np.int64)
+
+    def _grow(self) -> None:
+        import jax.numpy as jnp
+
+        new = min(self.width * 2, self.max_lanes)
+        if new == self.width:
+            return
+        pad = new - self.width
+        self.f = jnp.concatenate(
+            [self.f, jnp.zeros((pad, self.n), dtype=self.f.dtype)])
+        self.h = jnp.concatenate(
+            [self.h, jnp.zeros((pad, self.n), dtype=self.h.dtype)])
+        self.t = jnp.concatenate(
+            [self.t, jnp.zeros((pad,), dtype=self.t.dtype)])
+        self.ops = jnp.concatenate(
+            [self.ops, jnp.zeros((pad,), dtype=self.ops.dtype)])
+        self.lane_rounds = jnp.concatenate(
+            [self.lane_rounds,
+             jnp.zeros((pad,), dtype=self.lane_rounds.dtype)])
+        self.lanes.extend([None] * pad)
+        self._tol_cols = np.concatenate(
+            [self._tol_cols, np.zeros(pad)])
+        self._ops_host = np.concatenate(
+            [self._ops_host, np.zeros(pad, dtype=np.int64)])
+        self.width = new
+
+    # ------------------------------------------------------------------ #
+    # lifecycle
+    # ------------------------------------------------------------------ #
+    @property
+    def occupied(self) -> int:
+        return sum(1 for la in self.lanes if la is not None)
+
+    @property
+    def has_capacity(self) -> bool:
+        return (any(la is None for la in self.lanes)
+                or self.width < self.max_lanes)
+
+    def free_lane(self) -> Optional[int]:
+        for i, la in enumerate(self.lanes):
+            if la is None:
+                return i
+        if self.width < self.max_lanes:
+            prev = self.width
+            self._grow()
+            return prev
+        return None
+
+    def admit(self, req: Request, now: float, tol: float,
+              until_eff: float, h_seed=None,
+              round_cap: Optional[int] = None,
+              rung: str = "nominal") -> Optional[int]:
+        """Place ``req`` into a free lane (growing the pow2 width if
+        needed).  ``h_seed`` is a pooled device H-column — the §2.2
+        warm start runs on device either way (``h_seed=None`` seeds
+        H=0, which degenerates to the cold path F=B).  Returns the
+        lane index, or None when saturated at ``max_lanes``."""
+        import jax.numpy as jnp
+
+        lane = self.free_lane()
+        if lane is None:
+            return None
+        b_col = jnp.asarray(req.b, dtype=self.f.dtype)
+        h_col = (jnp.zeros((self.n,), dtype=self.f.dtype)
+                 if h_seed is None else jnp.asarray(h_seed,
+                                                    dtype=self.f.dtype))
+        fns = _batch_fns()
+        f_col, t_col = fns["warm"](b_col, h_col, self.src, self.dst,
+                                   self.wgt, self.w)
+        (self.f, self.h, self.t, self.ops,
+         self.lane_rounds) = fns["place"](
+            self.f, self.h, self.t, self.ops, self.lane_rounds, lane,
+            f_col, h_col, t_col)
+        self._tol_cols[lane] = tol
+        self._ops_host[lane] = 0
+        self.lanes[lane] = LaneInfo(
+            request=req, admitted_t=now, pool_hit=h_seed is not None,
+            tol=float(tol), until_eff=float(until_eff),
+            round_cap=round_cap, rung=rung)
+        return lane
+
+    def micro(self, budget: int) -> MicroReport:
+        """One continuous-batching micro-step: up to ``budget`` frontier
+        rounds for every active lane in a single compiled dispatch,
+        then per-lane retirement checks."""
+        import jax.numpy as jnp
+
+        occupied = self.occupied
+        if occupied == 0:
+            return MicroReport(0, 0, [], 0, self.width, 0)
+        fns = _batch_fns()
+        tol_dev = jnp.asarray(self._tol_cols, dtype=self.f.dtype)
+        ops_before = int(self._ops_host.sum())
+        (self.f, self.h, self.t, self.ops, self.lane_rounds,
+         rounds_run) = fns["tick"](
+            self.f, self.h, self.t, self.ops, self.lane_rounds, tol_dev,
+            budget, self.src, self.dst, self.wgt, self.w, self.dang,
+            self.gamma)
+        resid = np.asarray(jnp.abs(self.f).sum(axis=1),
+                           dtype=np.float64)
+        self._ops_host = np.asarray(self.ops, dtype=np.int64)
+        lane_rounds = np.asarray(self.lane_rounds, dtype=np.int64)
+        rounds_run = int(rounds_run)
+        ops_delta = int(self._ops_host.sum()) - ops_before
+
+        retired: List[RetiredLane] = []
+        active_after = 0
+        for lane, info in enumerate(self.lanes):
+            if info is None:
+                continue
+            converged = resid[lane] <= self._tol_cols[lane]
+            capped = (info.round_cap is not None
+                      and lane_rounds[lane] >= info.round_cap)
+            if not (converged or capped):
+                active_after += 1
+                continue
+            h_dev = self.h[lane]
+            retired.append(RetiredLane(
+                info=info,
+                x=np.asarray(h_dev, dtype=np.float64),
+                h_dev=h_dev,
+                residual=float(resid[lane]),
+                ops=int(self._ops_host[lane]),
+                rounds=int(lane_rounds[lane]),
+                degraded=bool(capped and not converged),
+            ))
+            self.f, self.h = fns["clear"](self.f, self.h, lane)
+            self.lanes[lane] = None
+            self._tol_cols[lane] = 0.0
+
+        self.ticks += 1
+        self.rounds_total += rounds_run
+        self.ops_total += ops_delta
+        self.lane_rounds_total += occupied * rounds_run
+        self.width_rounds_total += self.width * rounds_run
+        self.retired_total += len(retired)
+        return MicroReport(rounds_run, ops_delta, retired, occupied,
+                           self.width, active_after)
+
+    def graph_switched(self, problem) -> None:
+        """Rebind to a patched graph snapshot.  Only legal at a drain
+        barrier — in-flight fluid was diffused through the old P and
+        its §2.3 accounting would silently go stale."""
+        if self.occupied:
+            raise RuntimeError(
+                f"graph_switched with {self.occupied} lanes in flight; "
+                "drain first")
+        self.graph_switches += 1
+        self._bind(problem)
+
+    # ------------------------------------------------------------------ #
+    # reporting
+    # ------------------------------------------------------------------ #
+    @property
+    def mean_occupancy(self) -> float:
+        """Occupied-lane fraction of the lane-axis slots actually paid
+        for across all executed rounds (the padding-waste complement)."""
+        return (self.lane_rounds_total / self.width_rounds_total
+                if self.width_rounds_total else 0.0)
+
+    def to_jsonable(self) -> Dict:
+        return {"width": self.width, "max_lanes": self.max_lanes,
+                "occupied": self.occupied, "ticks": self.ticks,
+                "rounds_total": self.rounds_total,
+                "ops_total": self.ops_total,
+                "retired_total": self.retired_total,
+                "mean_occupancy": round(self.mean_occupancy, 4),
+                "graph_switches": self.graph_switches}

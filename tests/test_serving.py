@@ -1,0 +1,333 @@
+"""Serving-tier tests: session pool LRU, pow2 lane padding, the
+continuous batcher's slot lifecycle, scheduler end-to-end parity, and
+the ``--no-batching`` sequential-path regression contract.
+
+The pool corners ISSUE 9 names explicitly: an evicted H forces the cold
+path (never a wrong answer); a pool hit after ``update_graph`` must
+miss on the stale ``store_version``; capacity-1 and churn-under-
+eviction behave.
+"""
+import os
+import re
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core import webgraph_like
+from repro.graph import GraphStore, rotation_churn
+from repro.serving import (ContinuousBatcher, Request, RequestQueue,
+                           Scheduler, SessionPool, solo_reference)
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+SRC = os.path.join(ROOT, "src")
+SERVE_SCRIPT_TIMEOUT = 600
+
+
+def store_problem(n=300, seed=1, target_error=None):
+    store = GraphStore.from_csr(webgraph_like(n, seed=seed))
+    return repro.Problem.pagerank(store, target_error=target_error)
+
+
+def drifting_bs(problem, count, drift=0.05, seed=0):
+    rng = np.random.default_rng(seed)
+    b = np.asarray(problem.b, dtype=np.float64)
+    out = []
+    for _ in range(count):
+        b = np.abs(b * (1.0 + drift * rng.standard_normal(problem.n)))
+        out.append(b)
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# SessionPool: LRU + versioning corners
+# --------------------------------------------------------------------------- #
+def test_pool_capacity_one_evicts_previous():
+    pool = SessionPool(capacity=1)
+    pool.put(0, 0, h="hA")
+    pool.put(0, 1, h="hB")          # evicts (0, 0)
+    assert pool.get(0, 0) is None   # the evicted entry is gone (miss)
+    assert pool.get(0, 1).h == "hB"
+    assert pool.evictions == 1 and len(pool) == 1
+
+
+def test_pool_lru_order_refreshed_by_get():
+    pool = SessionPool(capacity=2)
+    pool.put(0, 0, h="a")
+    pool.put(0, 1, h="b")
+    assert pool.get(0, 0).h == "a"  # refreshes (0,0): (0,1) is now LRU
+    pool.put(0, 2, h="c")
+    assert pool.get(0, 1) is None   # (0,1) was evicted, not (0,0)
+    assert pool.get(0, 0).h == "a"
+
+
+def test_pool_stale_store_version_misses():
+    pool = SessionPool(capacity=4)
+    pool.put(0, 7, h="old")
+    assert pool.get(1, 7) is None   # same cluster, bumped version: miss
+    assert pool.invalidate(keep_version=1) == 1
+    assert pool.get(0, 7) is None and len(pool) == 0
+
+
+def test_pool_churn_under_eviction_stays_bounded():
+    pool = SessionPool(capacity=3)
+    for i in range(40):
+        pool.put(0, i % 7, h=f"h{i}")
+        assert len(pool) <= 3
+    assert pool.evictions > 0
+    # the 3 most recently put clusters are resident
+    assert pool.get(0, 39 % 7) is not None
+
+
+def test_pool_none_version_keys_as_zero():
+    pool = SessionPool(capacity=2)
+    e = pool.put(None, 4, h="x")
+    assert e.store_version == 0
+    assert pool.get(None, 4) is e and pool.get(0, 4) is e
+
+
+# --------------------------------------------------------------------------- #
+# pow2 bucket padding (satellite: retrace fix + bit parity)
+# --------------------------------------------------------------------------- #
+def test_solve_batch_padding_bit_parity_and_waste():
+    problem = store_problem()
+    bs = np.stack(drifting_bs(problem, 3), axis=1)       # C=3 -> bucket 4
+    r_pad = repro.SolverSession(problem).solve_batch(bs, pad=True)
+    r_raw = repro.SolverSession(problem).solve_batch(bs, pad=False)
+    assert r_pad.converged and r_raw.converged
+    assert np.array_equal(r_pad.x, r_raw.x)              # bitwise
+    assert r_pad.extras["ops_per_column"] == r_raw.extras["ops_per_column"]
+    assert r_pad.extras["bucket"] == 4
+    assert r_pad.extras["padding_waste"] == pytest.approx(0.25)
+    assert r_raw.extras["bucket"] == 3
+    assert r_raw.extras["padding_waste"] == 0.0
+
+
+def test_solve_batch_same_bucket_reuses_trace():
+    from repro.api.session import _batch_fns
+
+    problem = store_problem()
+    session = repro.SolverSession(problem)
+    bs = drifting_bs(problem, 4)
+    session.solve_batch(np.stack(bs[:3], axis=1))        # bucket 4
+    fns = _batch_fns()
+    cached = fns["solve"]._cache_size()
+    session.solve_batch(np.stack(bs, axis=1))            # C=4: same bucket
+    assert fns["solve"]._cache_size() == cached, (
+        "a same-bucket batch width recompiled the solve kernel")
+
+
+# --------------------------------------------------------------------------- #
+# ContinuousBatcher: slot lifecycle
+# --------------------------------------------------------------------------- #
+def test_batcher_staggered_retire_and_refill():
+    problem = store_problem()
+    tol = problem.target_error * problem.eps
+    bs = drifting_bs(problem, 3)
+    bat = ContinuousBatcher(problem, max_lanes=2, min_lanes=2)
+    # lane 0 gets a LOOSE tolerance (retires early), lane 1 a tight one
+    bat.admit(Request(0, bs[0]), now=0.0, tol=tol * 1e3,
+              until_eff=problem.target_error * 1e3)
+    bat.admit(Request(1, bs[1]), now=0.0, tol=tol,
+              until_eff=problem.target_error)
+    assert bat.occupied == 2 and not bat.has_capacity
+    retired = []
+    for _ in range(400):
+        retired += bat.micro(8).retired
+        if retired:
+            break
+    assert [r.info.request.request_id for r in retired] == [0], (
+        "the loose lane should retire first, alone")
+    # the freed slot takes the queued request while lane 1 is in flight
+    lane = bat.admit(Request(2, bs[2]), now=1.0, tol=tol,
+                     until_eff=problem.target_error)
+    assert lane == 0 and bat.occupied == 2
+    for _ in range(2000):
+        retired += bat.micro(32).retired
+        if bat.occupied == 0:
+            break
+    assert sorted(r.info.request.request_id for r in retired) == [0, 1, 2]
+    assert all(not r.degraded for r in retired)
+    assert bat.retired_total == 3 and bat.occupied == 0
+
+
+def test_batcher_graph_switch_requires_drain():
+    problem = store_problem()
+    tol = problem.target_error * problem.eps
+    bat = ContinuousBatcher(problem, max_lanes=2)
+    bat.admit(Request(0, np.asarray(problem.b)), now=0.0, tol=tol,
+              until_eff=problem.target_error)
+    with pytest.raises(RuntimeError, match="drain"):
+        bat.graph_switched(problem)
+
+
+# --------------------------------------------------------------------------- #
+# Scheduler: end-to-end parity, pool reuse, eviction, staleness
+# --------------------------------------------------------------------------- #
+def test_scheduler_parity_and_pool_hits():
+    problem = store_problem()
+    te = problem.target_error
+    bs = drifting_bs(problem, 6)
+    sch = Scheduler(problem, max_lanes=4, rounds_per_tick=16,
+                    deadline_s=1e9)
+    for i, b in enumerate(bs):
+        sch.submit(b, cluster=i % 2, request_id=i)
+        sch.run_until_idle()
+    assert len(sch.results) == 6 and sch.dropped == 0
+    # first request of each cluster is cold, the rest re-enter warm
+    hits = [r.pool_hit for r in sorted(sch.results,
+                                       key=lambda r: r.request_id)]
+    assert hits == [False, False, True, True, True, True]
+    xs, _, _ = solo_reference(problem, np.stack(bs, axis=1))
+    for r in sch.results:
+        dx = float(np.abs(r.x - xs[:, r.request_id]).sum())
+        assert dx <= 2.0 * te, (r.request_id, dx)
+        assert r.converged and not r.degraded
+
+
+def test_scheduler_eviction_forces_cold_path():
+    problem = store_problem()
+    sch = Scheduler(problem, max_lanes=2, pool_capacity=1,
+                    deadline_s=1e9)
+    # c0 cold -> c1 cold (evicts c0's H) -> c0 cold AGAIN -> c0 warm
+    for i, cluster in enumerate([0, 1, 0, 0]):
+        sch.submit(drifting_bs(problem, 1, seed=10 + i)[0],
+                   cluster=cluster, request_id=i)
+        sch.run_until_idle()
+    hits = [r.pool_hit for r in sorted(sch.results,
+                                       key=lambda r: r.request_id)]
+    assert hits == [False, False, False, True]
+    assert sch.pool.evictions >= 2
+    assert all(r.converged for r in sch.results)
+
+
+def test_scheduler_update_invalidates_pool():
+    problem = store_problem()
+    sch = Scheduler(problem, max_lanes=2, deadline_s=1e9)
+    sch.submit(drifting_bs(problem, 1)[0], cluster=0, request_id=0)
+    sch.run_until_idle()
+    # touching .graph materializes the Problem's own store for p
+    v0 = sch.problem.graph.version
+    delta = rotation_churn(sch.problem.graph, 2, seed=42)
+    sch.submit_update(delta, store_version=v0)
+    sch.run_until_idle()
+    assert sch.problem.store_version == v0 + 1
+    assert sch.pool.invalidations >= 1      # pre-delta H was dropped
+    # post-update same-cluster request: stale version can never hit
+    sch.submit(drifting_bs(problem, 1, seed=9)[0], cluster=0,
+               request_id=1)
+    sch.run_until_idle()
+    by_id = {r.request_id: r for r in sch.results}
+    assert by_id[1].pool_hit is False and by_id[1].converged
+    # and the freshly banked post-update H hits
+    sch.submit(drifting_bs(problem, 1, seed=11)[0], cluster=0,
+               request_id=2)
+    sch.run_until_idle()
+    assert {r.request_id: r.pool_hit
+            for r in sch.results}[2] is True
+
+
+def test_scheduler_overload_sheds_quality_not_requests():
+    problem = store_problem()
+    bs = drifting_bs(problem, 12)
+    sch = Scheduler(problem, max_lanes=2, rounds_per_tick=8,
+                    deadline_s=0.005, queue_cap=4)
+    for i, b in enumerate(bs):
+        sch.submit(b, cluster=i % 2, request_id=i,
+                   arrival_t=i * 1e-4)    # far beyond service capacity
+    sch.run_until_idle()
+    assert len(sch.results) == 12 and sch.dropped == 0
+    assert sch.log.counts().get("degrade", 0) >= 1
+    assert any(r.degraded for r in sch.results)
+    # degraded responses still carry the tolerance they WERE served at
+    for r in sch.results:
+        if r.degraded and r.converged:
+            assert r.until_eff >= problem.target_error
+
+
+def test_scheduler_quarantines_poison_and_survives():
+    from repro.resilience import RequestRejected
+
+    problem = store_problem()
+    sch = Scheduler(problem, max_lanes=2, deadline_s=1e9)
+    bad = np.asarray(problem.b, dtype=np.float64).copy()
+    bad[17] = np.nan
+    with pytest.raises(RequestRejected):
+        sch.submit(bad, request_id=0)
+    sch.submit(drifting_bs(problem, 1)[0], request_id=1)
+    sch.run_until_idle()
+    assert [r.request_id for r in sch.results] == [1]
+    assert sch.quarantine.total == 1 and sch.dropped == 0
+
+
+def test_queue_backlog_accounting():
+    q = RequestQueue()
+    q.push(Request(0, b=None, arrival_t=1.0))
+    q.push(Request(1, b=None, arrival_t=2.0))
+    assert q.depth == 2 and q.depth_peak == 2
+    assert q.oldest_wait(5.0) == pytest.approx(4.0)
+    first = q.pop()
+    q.push_front(first)             # saturation requeue keeps order
+    assert q.pop().request_id == 0 and q.pop().request_id == 1
+    assert q.enqueued == 2 and q.dequeued == 2
+
+
+def test_queue_depth_load_signal():
+    from repro.balance import LoadSignal
+
+    sig = LoadSignal.from_queue(oldest_wait_s=0.02, deadline_s=0.01,
+                                queue_depth=4, queue_cap=8, step=3)
+    assert sig.kind == "queue-depth"
+    assert float(sig.values[0]) == pytest.approx(2.0 + 0.5)
+
+
+# --------------------------------------------------------------------------- #
+# serve.py rank: --no-batching stays the pre-scheduler path
+# --------------------------------------------------------------------------- #
+def test_serve_cli_no_batching_matches_sequential_replay():
+    """The escape hatch is bit-identical to the pre-PR-8 loop: the
+    [cold]/[warm] op counts in its stdout equal an in-process replay of
+    the original sequential semantics (same seeds, same session)."""
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "rank",
+         "--n", "300", "--requests", "2", "--batch", "2",
+         "--no-batching"],
+        capture_output=True, text=True, timeout=SERVE_SCRIPT_TIMEOUT,
+        env={**os.environ, "PYTHONPATH": os.path.abspath(SRC)},
+        cwd=ROOT,
+    )
+    assert r.returncode == 0, r.stderr[-4000:]
+    cold = re.search(r"\[cold \] (\d+) edge pushes", r.stdout)
+    warms = re.findall(r"\[warm (\d+)\] \S+ (\d+) ops", r.stdout)
+    assert cold and len(warms) == 2, r.stdout
+    # in-process replay of the pre-scheduler loop, same seeded stream
+    rng = np.random.default_rng(0)
+    g = webgraph_like(300, seed=1)
+    problem = repro.Problem.pagerank(g)
+    session = repro.SolverSession(problem, method="frontier:segment_sum")
+    rep = session.solve()
+    assert int(cold.group(1)) == rep.n_ops
+    b = problem.b
+    for req in range(2):
+        b = np.abs(b * (1.0 + 0.02 * rng.standard_normal(g.n)))
+        session.warm_start(b)
+        rep = session.solve()
+        assert warms[req] == (str(req), str(rep.n_ops))
+
+
+def test_serve_cli_batched_is_default_and_serves():
+    """Without --no-batching the stream routes through the scheduler:
+    [mode]/[served]/[stats] lines appear and nothing is dropped."""
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "rank",
+         "--n", "300", "--requests", "3", "--max-lanes", "4"],
+        capture_output=True, text=True, timeout=SERVE_SCRIPT_TIMEOUT,
+        env={**os.environ, "PYTHONPATH": os.path.abspath(SRC)},
+        cwd=ROOT,
+    )
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "[mode ] continuous batching" in r.stdout
+    assert len(re.findall(r"\[served \d+\]", r.stdout)) == 3
+    assert re.search(r"\[stats\] served=3 dropped=0", r.stdout)
